@@ -1,0 +1,96 @@
+"""Paper §8.3 multi-hop evaluation: Tables 2/3 (AoM + fairness under
+homogeneous / asymmetric update frequencies) and Fig. 10 (per-group AoM vs
+bottleneck asymmetry α = x1/x2) — ns-3 replaced by ``core.netsim``.
+
+Link capacities are scaled so the bottleneck regime matches the paper's
+(FIFO loses ~85-90% of updates, Olaf a few %): the paper does not publish
+its ns-3 link speeds, so we calibrate to the reported loss rates and compare
+the *relative* metrics (AoM ratios, Jain fairness)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.netsim import NetworkSimulator, multihop_cfg
+from repro.core.txctl import TxControlConfig
+
+# calibrated bottleneck: 100 workers x 1 kB / 100 ms ~ 8.2 Mbps offered;
+# a ~1 Mbps SW3 uplink reproduces the paper's FIFO ~88% loss regime
+CAL = dict(x1_gbps=2.4e-3, x2_gbps=2.4e-3, sw3_gbps=1.2e-3, horizon=40.0)
+
+
+def run(queue: str, *, tx: bool = False, interval_s2: float = 0.1, **kw):
+    args = dict(CAL)
+    args.update(kw)
+    cfg = multihop_cfg(queue, interval_s2=interval_s2,
+                       tx_control=TxControlConfig() if tx else None, **args)
+    return NetworkSimulator(cfg).run()
+
+
+def table2() -> list:
+    """Homogeneous workers (100 ms everywhere)."""
+    rows = []
+    for queue in ("fifo", "olaf"):
+        r = run(queue)
+        per = r.per_cluster_aom()
+        g1 = np.mean([per[c] for c in range(5) if c in per]) * 1e3
+        g2 = np.mean([per[c] for c in range(5, 10) if c in per]) * 1e3
+        rows.append(dict(queue=queue.upper(), loss_pct=r.loss_pct,
+                         aom_c1_5_ms=g1, aom_c6_10_ms=g2,
+                         fairness=r.aom_fairness()))
+    return rows
+
+
+def table3() -> list:
+    """Asymmetric update frequencies: S1 at 100 ms, S2 at 300 ms."""
+    rows = []
+    for name, queue, tx in (("FIFO", "fifo", False), ("Olaf", "olaf", False),
+                            ("Olaf_TC", "olaf", True)):
+        r = run(queue, tx=tx, interval_s2=0.3)
+        per = r.per_cluster_aom()
+        g1 = np.mean([per[c] for c in range(5) if c in per]) * 1e3
+        g2 = np.mean([per[c] for c in range(5, 10) if c in per]) * 1e3
+        rows.append(dict(queue=name, loss_pct=r.loss_pct, aom_s1_ms=g1,
+                         aom_s2_ms=g2, fairness=r.aom_fairness()))
+    return rows
+
+
+def fig10(alphas=(0.2, 0.4, 0.6, 0.8, 1.0)) -> list:
+    """Vary α = x1/x2 with x2 fixed; per-group AoM under FIFO vs Olaf_TC."""
+    rows = []
+    x2 = CAL["x2_gbps"]
+    for a in alphas:
+        for name, queue, tx in (("FIFO", "fifo", False),
+                                ("Olaf_TC", "olaf", True)):
+            r = run(queue, tx=tx, x1_gbps=a * x2)
+            per = r.per_cluster_aom()
+            g1 = np.mean([per[c] for c in range(5) if c in per]) * 1e3
+            g2 = np.mean([per[c] for c in range(5, 10) if c in per]) * 1e3
+            rows.append(dict(alpha=a, queue=name, aom_s1_ms=float(g1),
+                             aom_s2_ms=float(g2)))
+    return rows
+
+
+def main(report):
+    t0 = time.time()
+    t2 = table2()
+    report("table2_homog", (time.time() - t0) * 1e6,
+           "; ".join(f"{r['queue']}: loss {r['loss_pct']:.0f}% "
+                     f"aom {r['aom_c1_5_ms']:.0f}/{r['aom_c6_10_ms']:.0f}ms "
+                     f"J={r['fairness']:.2f}" for r in t2))
+    t0 = time.time()
+    t3 = table3()
+    report("table3_asym", (time.time() - t0) * 1e6,
+           "; ".join(f"{r['queue']}: loss {r['loss_pct']:.0f}% "
+                     f"aom {r['aom_s1_ms']:.0f}/{r['aom_s2_ms']:.0f}ms "
+                     f"J={r['fairness']:.2f}" for r in t3))
+    t0 = time.time()
+    f10 = fig10()
+    worst = min(f10, key=lambda r: r["alpha"])
+    report("fig10_alpha_sweep", (time.time() - t0) * 1e6,
+           f"alpha=0.2: FIFO S1 "
+           f"{[r for r in f10 if r['alpha']==0.2 and r['queue']=='FIFO'][0]['aom_s1_ms']:.0f}ms vs "
+           f"Olaf_TC S1 "
+           f"{[r for r in f10 if r['alpha']==0.2 and r['queue']=='Olaf_TC'][0]['aom_s1_ms']:.0f}ms")
+    return dict(table2=t2, table3=t3, fig10=f10)

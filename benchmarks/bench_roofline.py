@@ -1,0 +1,39 @@
+"""Roofline summary bench: reads the dry-run + roofline artifacts produced by
+``repro.launch.dryrun`` / ``repro.launch.roofline`` and reports the
+per-(arch × shape) terms (single-pod mesh). Run those sweeps first;
+otherwise this reports whatever artifacts exist."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+ROOF = Path(__file__).resolve().parents[1] / "experiments" / "roofline"
+DRY = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def main(report):
+    t0 = time.time()
+    recs = []
+    for f in sorted(ROOF.glob("*__*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "ok":
+            recs.append(r)
+    if not recs:
+        report("roofline", 0.0, "no artifacts; run repro.launch.roofline")
+        return {}
+    dominant = {}
+    for r in recs:
+        t = r["terms_s"]
+        report(
+            f"roofline_{r['arch']}_{r['shape']}",
+            max(t.values()) * 1e6,  # the bound = achievable step time
+            f"dom={r['dominant'].replace('_s','')} useful="
+            f"{r['useful_flops_ratio']:.2f} frac={r['roofline_fraction']:.1%}")
+        dominant[r["dominant"]] = dominant.get(r["dominant"], 0) + 1
+    n_ok = len(list(DRY.glob("*pod_16x16.json")))
+    n_mp = len(list(DRY.glob("*multipod*.json")))
+    report("dryrun_coverage", (time.time() - t0) * 1e6,
+           f"{n_ok} single-pod + {n_mp} multi-pod cell artifacts; "
+           f"dominant terms: {dominant}")
+    return {"n_cells": len(recs), "dominant": dominant}

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (one per artifact) and writes
+the full structured results to experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, bench_multihop, bench_queue,
+                            bench_roofline, bench_training, bench_verifier)
+    results = {}
+    print("name,us_per_call,derived")
+
+    def report(name: str, us: float, derived: str) -> None:
+        print(f"{name},{us:.1f},\"{derived}\"")
+        sys.stdout.flush()
+
+    modules = [
+        ("queue", bench_queue), ("multihop", bench_multihop),
+        ("training", bench_training), ("verifier", bench_verifier),
+        ("kernels", bench_kernels), ("roofline", bench_roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, mod in modules:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        try:
+            results[name] = mod.main(report)
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            report(f"{name}_ERROR", 0.0, f"{type(e).__name__}: {e}")
+            results[name] = {"error": str(e)}
+        report(f"{name}_total", (time.time() - t0) * 1e6, "suite wall time")
+    out = Path(__file__).resolve().parents[1] / "experiments" / "bench_results.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(results, indent=1, default=str))
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,45 @@
+"""Train a small LM end-to-end with the full substrate: deterministic data
+pipeline, AdamW, checkpointing, and (optionally) the OLAF-async mode where
+data-parallel workers stream gradients through the device-resident
+OlafQueue.
+
+The default config is a ~7M-param smollm-family model sized for CPU; on a
+TPU mesh the same driver trains the full assigned configs (see
+repro/launch/train.py, which this example wraps).
+
+Run:  PYTHONPATH=src python examples/lm_train.py [--steps 60] [--olaf]
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs import get_config
+from repro.launch import train as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--olaf", action="store_true",
+                    help="OLAF-async data parallelism instead of sync")
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-360m").reduced()
+    # a bit beefier than the smoke config so the loss curve is interesting
+    cfg = dataclasses.replace(cfg, d_model=128, n_layers=4, d_ff=512,
+                              vocab=2048)
+
+    ns = argparse.Namespace(
+        arch="smollm-360m", reduced=True, mode="olaf-async" if args.olaf
+        else "sync", steps=args.steps, batch=8, seq=128, lr=3e-3,
+        workers=4, seed=0, ckpt=None if args.olaf else args.ckpt,
+        ckpt_every=20, log_every=10)
+    if args.olaf:
+        T.run_olaf_async(cfg, ns)
+    else:
+        T.run_sync(cfg, ns)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batched-request serving example: prefill a batch of prompts, then decode
+with KV caches — the same ``prefill``/``serve_step`` functions the multi-pod
+dry-run lowers for the decode_32k / long_500k cells.
+
+Runs three families to show the cache variety: dense (smollm KV cache),
+SSM (mamba2 constant-size state — the long_500k path), and hybrid
+(recurrentgemma ring-buffer local attention + RG-LRU state).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import subprocess
+import sys
+
+
+def main():
+    for arch in ("smollm-360m", "mamba2-130m", "recurrentgemma-9b"):
+        print(f"=== {arch} (reduced) ===")
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--reduced", "--batch", "2", "--prompt-len", "12",
+             "--gen", "12"],
+            check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""Assemble EXPERIMENTS.md from the dry-run / roofline / bench artifacts.
+
+Run after the sweeps:  PYTHONPATH=src python experiments/assemble_experiments.py
+(the §Perf section is maintained by hand — this script preserves it)
+"""
+import json
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "experiments" / "dryrun"
+ROOF = ROOT / "experiments" / "roofline"
+BENCH = ROOT / "experiments" / "bench_results.json"
+OUT = ROOT / "EXPERIMENTS.md"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["smollm-360m", "gemma-2b", "chatglm3-6b", "mistral-large-123b",
+         "mamba2-130m", "grok-1-314b", "arctic-480b", "whisper-small",
+         "recurrentgemma-9b", "internvl2-76b"]
+
+
+def gib(x):
+    return f"{x/2**30:.2f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = ["| arch | shape | status | compile s | args GiB/dev | temp GiB/dev "
+            "| coll GiB/dev/step | AG/AR/RS/A2A/CP GiB |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPE_ORDER:
+            f = DRY / f"{a}__{s}__{mesh}.json"
+            if not f.exists():
+                continue
+            r = json.loads(f.read_text())
+            if r["status"] == "skipped":
+                rows.append(f"| {a} | {s} | SKIP | — | — | — | — | "
+                            f"{r['reason'][:48]} |")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {a} | {s} | **FAIL** | — | — | — | — | "
+                            f"{r['reason'][:48]} |")
+                continue
+            m, c = r["memory"], r["collectives"]
+            pk = c["per_kind"]
+            kinds = "/".join(gib(pk.get(k, 0)) for k in
+                             ("all-gather", "all-reduce", "reduce-scatter",
+                              "all-to-all", "collective-permute"))
+            rows.append(
+                f"| {a} | {s} | ok | {r['compile_s']} | "
+                f"{gib(m['argument_bytes'])} | {gib(m['temp_bytes'])} | "
+                f"{gib(c['total_bytes'])} | {kinds} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant "
+            "| MODEL/HLO flops | roofline frac | what moves the bottleneck |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.launch.roofline import improvement_note
+    for a in ARCHS:
+        for s in SHAPE_ORDER:
+            f = ROOF / f"{a}__{s}.json"
+            if not f.exists():
+                continue
+            r = json.loads(f.read_text())
+            if r["status"] != "ok":
+                rows.append(f"| {a} | {s} | — | — | — | — | — | — | "
+                            f"{r.get('reason','skip')[:40]} |")
+                continue
+            t = r["terms_s"]
+            rows.append(
+                f"| {a} | {s} | {t['compute_s']:.2e} | {t['memory_s']:.2e} | "
+                f"{t['collective_s']:.2e} | "
+                f"{r['dominant'].replace('_s','')} | "
+                f"{r['useful_flops_ratio']:.2f} | "
+                f"{r['roofline_fraction']:.1%} | {improvement_note(r)[:58]} |")
+    return "\n".join(rows)
+
+
+def bench_section() -> str:
+    if not BENCH.exists():
+        return "_run `PYTHONPATH=src:. python -m benchmarks.run` to populate_"
+    b = json.loads(BENCH.read_text())
+    out = []
+    q = b.get("queue", {})
+    if "table1" in q:
+        out.append("**Table 1 (microbench, ours vs paper):**\n")
+        out.append("| config | received@PS | aggregated | loss % (paper) | avg AoM µs |")
+        out.append("|---|---|---|---|---|")
+        paper_loss = {"FIFO 40 Gbps": 55.8, "OLAF 40 Gbps": 11.0,
+                      "FIFO 20 Gbps": 74.3, "OLAF 20 Gbps": 11.5}
+        for r in q["table1"]:
+            out.append(f"| {r['queue']} | {r['received_at_ps']} | "
+                       f"{r['aggregated']} | {r['loss_pct']:.1f} "
+                       f"({paper_loss.get(r['queue'],'—')}) | "
+                       f"{r['avg_aom_us']:.2f} |")
+    if "aom_reduction" in q:
+        out.append("\n**AoM reduction (paper: −69% @40G, −78% @20G):** " +
+                   "; ".join(f"{k}: −{v['reduction_pct']:.0f}%"
+                             for k, v in q["aom_reduction"].items()))
+    t = b.get("training", {})
+    if "fig7" in t:
+        out.append("\n**Fig 7 time-to-reward speedup (Olaf/FIFO):** " +
+                   "; ".join(f"{k}: {v:.2f}×" for k, v in t["fig7"].items()))
+    if "fig3" in t:
+        out.append("\n**Fig 3 (time for 40 applied updates):** " +
+                   "; ".join(f"N={k}: {v:.1f}s" for k, v in t["fig3"].items()))
+    if "fig8" in t:
+        out.append("\n**Fig 8 (congestion):** " + "; ".join(
+            f"{k}: applied {v['applied']}, loss {v['loss_pct']:.0f}%"
+            for k, v in t["fig8"].items()))
+    mh = b.get("multihop", {})
+    if "table2" in mh:
+        out.append("\n**Table 2 (homogeneous multihop):** " + "; ".join(
+            f"{r['queue']}: loss {r['loss_pct']:.0f}% "
+            f"AoM {r['aom_c1_5_ms']:.0f}/{r['aom_c6_10_ms']:.0f} ms "
+            f"J={r['fairness']:.2f}" for r in mh["table2"]))
+    if "table3" in mh:
+        out.append("\n**Table 3 (asymmetric + tx control):** " + "; ".join(
+            f"{r['queue']}: loss {r['loss_pct']:.0f}% "
+            f"AoM {r['aom_s1_ms']:.0f}/{r['aom_s2_ms']:.0f} ms "
+            f"J={r['fairness']:.2f}" for r in mh["table3"]))
+    v = b.get("verifier", {})
+    if v:
+        out.append("\n**§6 SMT verification (paper: ~40 s):** " + "; ".join(
+            f"{k}: {vv['status']} in {vv['solve_s']:.2f}s"
+            for k, vv in v.items() if isinstance(vv, dict)))
+    return "\n".join(out)
+
+
+PERF_PLACEHOLDER = """## §Perf — hillclimb log (hypothesis → change → measure → validate)
+
+_(populated by the perf iteration passes; see below)_
+"""
+
+
+def main():
+    perf_file = ROOT / "EXPERIMENTS_PERF.md"
+    if perf_file.exists():
+        perf = perf_file.read_text()
+    else:
+        existing = OUT.read_text() if OUT.exists() else ""
+        perf = PERF_PLACEHOLDER
+        m = re.search(r"(## §Perf.*)", existing, re.S)
+        if m:
+            perf = m.group(1)
+
+    doc = f"""# EXPERIMENTS
+
+All artifacts under `experiments/` (dry-run JSONs, roofline JSONs, bench
+results). Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI per chip. The container is CPU-only: compiles use 512
+placeholder host devices; kernel validation uses Pallas interpret mode.
+
+## §Dry-run — lower + compile on the production meshes
+
+Every (architecture × shape) cell lowers AND compiles for the single-pod
+16×16 ("data","model") mesh and the 2×16×16 ("pod","data","model")
+multi-pod mesh. `long_500k` is skipped for pure full-attention archs per
+the assignment spec (recorded below); it runs for mamba2 (SSD state) and
+recurrentgemma (RG-LRU + 2048-window local attention).
+
+Bytes are per device (SPMD program). "coll GiB/dev/step" sums all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute operand bytes
+with while-loop trip-count weighting (`repro.launch.hlo_analysis`).
+
+### Single pod (16×16 = 256 chips)
+
+{dryrun_table('pod_16x16')}
+
+### Multi pod (2×16×16 = 512 chips)
+
+{dryrun_table('multipod_2x16x16')}
+
+## §Roofline — three terms per cell (single-pod)
+
+Methodology: XLA counts a `while` body once, so FLOPs/bytes/collectives come
+from *unrolled 1-period vs 2-period cost probes* (exact causal block
+skipping, python-loop attention) differenced and extrapolated; see
+`repro.launch.roofline`. `MODEL/HLO flops` = 6·N(active)·D / HLO-FLOPs
+(decode cells use 2·N·B which excludes attention over the cache — hence the
+small ratios there). `roofline frac` = (useful-FLOPs time at peak) / max
+term = the fraction of the dominant-resource bound doing model math.
+
+Caveat: XLA's `bytes accessed` counts every op's operands (an upper bound on
+HBM traffic — fusion makes real traffic lower), so memory terms are
+conservative.
+
+{roofline_table()}
+
+## §Paper-reproduction benchmarks
+
+{bench_section()}
+
+{perf}
+"""
+    OUT.write_text(doc)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

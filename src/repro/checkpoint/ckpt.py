@@ -1,0 +1,125 @@
+"""Checkpoint save/restore with resharding (fault tolerance / elasticity).
+
+Checkpoints are ``.npz`` files keyed by flattened param paths plus a JSON
+manifest (step, config fingerprint). Restore accepts a *different* mesh /
+sharding than the save used (elastic scaling): arrays are loaded on host and
+``jax.device_put`` with the new sharding. Atomic write (tmp + rename) so a
+killed writer never corrupts the latest checkpoint — restart-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.models.module import tree_paths
+
+
+def _unflatten(flat: Dict[str, Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = leaf
+    return root
+
+
+def save_checkpoint(directory: str, step: int, params: Any,
+                    opt_state: Any = None, extra: Optional[dict] = None) -> str:
+    """Atomic save; returns the checkpoint path."""
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+
+    def to_np(v):
+        # npz can't round-trip ml_dtypes (bfloat16): store widened
+        a = np.asarray(v)
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            a = np.asarray(jax.numpy.asarray(v).astype(jax.numpy.float32))
+        return a
+
+    flat = {f"params/{k}": to_np(v) for k, v in tree_paths(params).items()}
+    if opt_state is not None:
+        leaves, treedef = jax.tree_util.tree_flatten(opt_state)
+        for i, leaf in enumerate(leaves):
+            flat[f"opt/{i}"] = to_np(leaf)
+        manifest_opt = str(treedef)
+    else:
+        manifest_opt = None
+    path = d / f"ckpt_{step:08d}.npz"
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz")
+    os.close(fd)
+    np.savez(tmp, **flat)  # savez keeps the name (already ends with .npz)
+    os.replace(tmp, path)
+    manifest = {"step": step, "n_arrays": len(flat),
+                "opt_treedef": manifest_opt, "extra": extra or {}}
+    mpath = d / f"ckpt_{step:08d}.json"
+    mpath.write_text(json.dumps(manifest))
+    (d / "LATEST").write_text(str(step))
+    return str(path)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    f = Path(directory) / "LATEST"
+    if not f.exists():
+        return None
+    return int(f.read_text().strip())
+
+
+def restore_checkpoint(directory: str, step: Optional[int] = None, *,
+                       params_like: Any, opt_like: Any = None,
+                       shardings: Any = None, opt_shardings: Any = None
+                       ) -> Tuple[int, Any, Any]:
+    """Restore onto (possibly different) shardings — elastic re-mesh.
+
+    ``params_like``/``opt_like`` provide the pytree structure; ``shardings``
+    (same structure, jax.sharding.Sharding leaves) place each array. Arrays
+    whose saved shape differs only by head/vocab padding are zero-padded or
+    sliced to fit (checkpoints travel across tp sizes).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    data = np.load(Path(directory) / f"ckpt_{step:08d}.npz")
+    flat_like = tree_paths(params_like)
+    flat_sh = tree_paths(shardings) if shardings is not None else {}
+    out: Dict[str, Any] = {}
+    for path, like in flat_like.items():
+        arr = _fit(data[f"params/{path}"], like.shape)
+        jarr = jax.numpy.asarray(arr).astype(like.dtype)  # jnp handles bf16
+        sh = flat_sh.get(path)
+        out[path] = jax.device_put(jarr, sh) if sh is not None else jarr
+    params = _unflatten(out)
+    opt_state = None
+    if opt_like is not None:
+        leaves_like, treedef = jax.tree_util.tree_flatten(opt_like)
+        sh_leaves = (jax.tree_util.tree_flatten(opt_shardings)[0]
+                     if opt_shardings is not None else [None] * len(leaves_like))
+        leaves = []
+        for i, like in enumerate(leaves_like):
+            arr = _fit(data[f"opt/{i}"], like.shape)
+            jarr = jax.numpy.asarray(arr).astype(like.dtype)
+            leaves.append(jax.device_put(jarr, sh_leaves[i])
+                          if sh_leaves[i] is not None else jarr)
+        opt_state = jax.tree_util.tree_unflatten(treedef, leaves)
+    return step, params, opt_state
+
+
+def _fit(arr: np.ndarray, shape) -> np.ndarray:
+    """Pad with zeros / slice so ``arr`` matches ``shape`` (head/vocab padding
+    differences across tp sizes)."""
+    if tuple(arr.shape) == tuple(shape):
+        return arr
+    assert arr.ndim == len(shape), (arr.shape, shape)
+    slices = tuple(slice(0, min(a, b)) for a, b in zip(arr.shape, shape))
+    out = np.zeros(shape, arr.dtype)
+    out[slices] = arr[slices]
+    return out

@@ -1,0 +1,14 @@
+"""Assigned architecture configs (public-literature exact settings).
+
+Each module registers one :class:`~repro.configs.base.ArchConfig`; select
+with ``--arch <id>``. ``olaf_ppo`` is the paper's own DRL workload.
+"""
+from repro.configs.base import ArchConfig, ShapeCfg, SHAPES, get_config, list_configs
+
+from repro.configs import (  # noqa: F401  — registration side effects
+    smollm_360m, gemma_2b, chatglm3_6b, mistral_large_123b, mamba2_130m,
+    grok1_314b, arctic_480b, whisper_small, recurrentgemma_9b, internvl2_76b,
+    olaf_ppo,
+)
+
+__all__ = ["ArchConfig", "ShapeCfg", "SHAPES", "get_config", "list_configs"]

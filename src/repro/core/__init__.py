@@ -1,0 +1,27 @@
+"""OLAF core: opportunistic in-network aggregation for async DRL.
+
+The paper's contribution as composable modules:
+  - aggregation: update semantics (aggregate / replace / reward gating)
+  - olaf_queue:  the OlafQueue (python reference + jittable JAX version)
+  - aom:         Age-of-Model staleness metric
+  - txctl:       worker-side transmission control from reverse-path feedback
+  - netsim:      discrete-event network simulator (ns-3 analogue)
+  - verifier:    Z3 formal verification of AoM objectives
+"""
+from repro.core.aggregation import Action, Update, aggregate, gate, replace
+from repro.core.aom import (aom_trajectory, average_aom, jain_fairness,
+                            peak_aom, per_cluster_average_aom)
+from repro.core.olaf_queue import (JaxQueueState, PyFifoQueue, PyOlafQueue,
+                                   jax_dequeue, jax_enqueue,
+                                   jax_enqueue_batch, jax_queue_init)
+from repro.core.txctl import (QueueFeedback, TransmissionController,
+                              TxControlConfig)
+
+__all__ = [
+    "Action", "Update", "aggregate", "gate", "replace",
+    "aom_trajectory", "average_aom", "jain_fairness", "peak_aom",
+    "per_cluster_average_aom",
+    "JaxQueueState", "PyFifoQueue", "PyOlafQueue", "jax_dequeue",
+    "jax_enqueue", "jax_enqueue_batch", "jax_queue_init",
+    "QueueFeedback", "TransmissionController", "TxControlConfig",
+]

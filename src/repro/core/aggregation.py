@@ -1,0 +1,101 @@
+"""Update semantics for OLAF opportunistic aggregation.
+
+An *update* is one asynchronous DRL model update (paper: one UDP packet):
+a flattened gradient payload tagged with ``(cluster_id, worker_id)``, the
+generation timestamp (for Age-of-Model), and the episode mean reward used
+for convergence-preserving gating (paper §3).
+
+Combining rules (paper §3 "Opportunistic Update Aggregation"):
+  * same cluster, rewards within ``reward_threshold``  -> AGGREGATE (average)
+  * incoming reward higher by more than the threshold  -> REPLACE
+  * incoming reward lower by more than the threshold   -> DROP
+  * same worker and the waiting update is un-aggregated -> REPLACE
+    (the newer update subsumes the older one's experience; Alg. 1 lines 9-13)
+
+``reward_threshold=None`` disables gating (pure Algorithm 1 behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+
+class Action(enum.Enum):
+    AGGREGATE = "aggregate"
+    REPLACE = "replace"
+    DROP = "drop"
+    APPEND = "append"
+
+
+@dataclasses.dataclass
+class Update:
+    """One asynchronous model update in flight."""
+
+    cluster_id: int
+    worker_id: int
+    gen_time: float  # when the worker generated it (virtual seconds)
+    reward: float  # episode mean reward r_i carried in the packet
+    payload: Optional[np.ndarray] = None  # flattened gradient (None = metadata-only sim)
+    agg_count: int = 1  # how many raw updates were *aggregated* into this one (Fig. 6 CDF)
+    subsumed: int = 1  # raw updates whose information this one carries
+    #   (aggregated + replaced-away); used for loss accounting (Tab. 1)
+    size_bits: int = 2048  # wire size (paper microbench: 2048-bit packets)
+    seq: int = -1  # departure-order sequence number (queue internal)
+    replaceable: bool = True  # replace_status flag: un-aggregated, same-worker replace OK
+
+    def clone(self) -> "Update":
+        return dataclasses.replace(
+            self, payload=None if self.payload is None else self.payload.copy()
+        )
+
+
+def gate(incoming_reward: float, waiting_reward: float,
+         reward_threshold: Optional[float]) -> Action:
+    """Reward-gating decision for two same-cluster updates (paper §3)."""
+    if reward_threshold is None:
+        return Action.AGGREGATE
+    diff = incoming_reward - waiting_reward
+    if abs(diff) <= reward_threshold:
+        return Action.AGGREGATE
+    if diff > reward_threshold:
+        return Action.REPLACE
+    return Action.DROP
+
+
+def aggregate(waiting: Update, incoming: Update) -> Update:
+    """Merge ``incoming`` into ``waiting`` in place of the waiting update.
+
+    Gradient payloads are averaged (paper: ``g_a = avg(g_a, g_i)``); the
+    merged update inherits the *queue position* (seq) of the waiting update
+    and the *freshness* (gen_time) of the newer one — an aggregated model
+    subsumes the older experience, so its age is the newer update's age
+    (cf. Fig. 5: aggregation lowers the AoM).
+    """
+    if waiting.payload is not None and incoming.payload is not None:
+        # Weighted mean so that k-fold aggregation equals the mean of the
+        # k raw gradients irrespective of arrival order.
+        w_n, i_n = waiting.agg_count, incoming.agg_count
+        payload = (waiting.payload * w_n + incoming.payload * i_n) / (w_n + i_n)
+    else:
+        payload = incoming.payload if incoming.payload is not None else waiting.payload
+    return dataclasses.replace(
+        incoming,
+        payload=payload,
+        agg_count=waiting.agg_count + incoming.agg_count,
+        subsumed=waiting.subsumed + incoming.subsumed,
+        gen_time=max(waiting.gen_time, incoming.gen_time),
+        reward=max(waiting.reward, incoming.reward),
+        seq=waiting.seq,
+        replaceable=False,  # an aggregation disables same-worker replacement
+    )
+
+
+def replace(waiting: Update, incoming: Update) -> Update:
+    """Newer update takes the waiting update's queue position outright."""
+    out = incoming.clone() if incoming.payload is not None else dataclasses.replace(incoming)
+    out.seq = waiting.seq
+    out.subsumed = waiting.subsumed + incoming.subsumed
+    return out

@@ -1,0 +1,376 @@
+"""Deterministic discrete-event network simulator (the paper's ns-3 analogue).
+
+Models the paper's evaluation topologies:
+
+  * microbenchmark (§8.1): many workers -> one accelerator queue (FIFO or
+    Olaf) -> constrained output link -> PS;
+  * multi-hop (§8.3, Fig. 9): cluster groups behind SW1/SW2 feeding the
+    bottleneck SW3 -> PS, with per-switch queues and link capacities;
+
+plus the reverse ACK path that piggybacks queue feedback for the worker-side
+transmission control (§5) and multicasts the PS response to the cluster (§7).
+
+Everything is virtual-time and seeded — runs are exactly reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.aggregation import Update
+from repro.core.aom import average_aom, jain_fairness, per_cluster_average_aom
+from repro.core.olaf_queue import PyFifoQueue, PyOlafQueue
+from repro.core.txctl import QueueFeedback, TransmissionController, TxControlConfig
+
+
+# --------------------------------------------------------------------------
+# Topology description
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Link:
+    """Directed link with serialization capacity and propagation delay."""
+
+    capacity_bps: float
+    prop_delay: float = 1e-6
+
+
+@dataclasses.dataclass
+class SwitchCfg:
+    name: str
+    queue: str = "olaf"  # "olaf" | "fifo"
+    queue_slots: int = 8
+    reward_threshold: Optional[float] = None
+    uplink: Link = dataclasses.field(default_factory=lambda: Link(40e9))
+    next_hop: Optional[str] = None  # switch name, or None => PS
+
+
+@dataclasses.dataclass
+class WorkerCfg:
+    worker_id: int
+    cluster_id: int
+    ingress_switch: str
+    gen_interval: float = 0.1  # mean seconds between fresh updates
+    gen_jitter: float = 0.0  # uniform +/- jitter fraction
+    trace: Optional[Sequence[float]] = None  # explicit generation times
+    n_updates: Optional[int] = None  # stop after this many generations
+    size_bits: int = 2048
+
+
+@dataclasses.dataclass
+class SimCfg:
+    switches: List[SwitchCfg]
+    workers: List[WorkerCfg]
+    horizon: float = 10.0
+    ack_delay: float = 200e-6  # constant reverse-path delay R
+    tx_control: Optional[TxControlConfig] = None  # None => send at will
+    seed: int = 0
+    active_window: float = 1.0  # sliding window for "active clusters" count
+    # hooks: async-trainer integration.
+    # payload_fn(now, worker_id) -> (payload array | None, reward float):
+    #   called when a worker generates a fresh update (real PPO gradient).
+    # on_deliver(now, update) -> ACK payload (e.g. new global weights).
+    # on_ack(now, worker_id, payload): worker receives the PS response.
+    payload_fn: Optional[Callable[[float, int], Tuple[Optional[np.ndarray], float]]] = None
+    on_deliver: Optional[Callable[[float, Update], object]] = None
+    on_ack: Optional[Callable[[float, int, object], None]] = None
+
+
+# --------------------------------------------------------------------------
+# Simulator
+# --------------------------------------------------------------------------
+class _Switch:
+    def __init__(self, cfg: SwitchCfg) -> None:
+        self.cfg = cfg
+        if cfg.queue == "olaf":
+            self.queue: Union[PyOlafQueue, PyFifoQueue] = PyOlafQueue(
+                cfg.queue_slots, cfg.reward_threshold)
+        elif cfg.queue == "fifo":
+            self.queue = PyFifoQueue(cfg.queue_slots)
+        else:
+            raise ValueError(cfg.queue)
+        self.busy = False
+        self.last_seen: Dict[int, float] = {}  # cluster -> last arrival time
+
+    def active_clusters(self, now: float, window: float) -> int:
+        return sum(1 for t in self.last_seen.values() if now - t <= window)
+
+    def feedback(self, now: float, window: float) -> QueueFeedback:
+        return QueueFeedback(
+            n_active_clusters=self.active_clusters(now, window),
+            q_max=self.cfg.queue_slots,
+            q_occupancy=len(self.queue),
+            timestamp=now,
+        )
+
+
+@dataclasses.dataclass
+class SimResult:
+    horizon: float
+    deliveries: Dict[int, List[Tuple[float, float]]]  # cluster -> (D, gen)
+    delivered_updates: List[Update]
+    generated: int
+    sent: int
+    deferred: int
+    received_at_ps: int
+    raw_updates_delivered: int  # sum of agg_count over deliveries
+    queue_stats: Dict[str, Dict[str, int]]
+    agg_counts: List[int]  # per delivered packet, for the Fig. 6 CDF
+
+    # ---- derived metrics -------------------------------------------------
+    @property
+    def loss_pct(self) -> float:
+        if self.sent == 0:
+            return 0.0
+        return 100.0 * (self.sent - self.raw_updates_delivered) / self.sent
+
+    @property
+    def busy_end(self) -> float:
+        """Last delivery time — the AoM observation window end (the idle
+        tail after traffic stops would otherwise dominate the average)."""
+        ends = [dl[-1][0] for dl in self.deliveries.values() if dl]
+        return max(ends) if ends else self.horizon
+
+    def avg_aom(self, clusters: Optional[Sequence[int]] = None) -> float:
+        per = self.per_cluster_aom()
+        keys = list(per) if clusters is None else [c for c in clusters if c in per]
+        if not keys:
+            return float("nan")
+        return float(np.mean([per[c] for c in keys]))
+
+    def per_cluster_aom(self) -> Dict[int, float]:
+        return per_cluster_average_aom(self.deliveries, self.busy_end)
+
+    def aom_fairness(self) -> float:
+        return jain_fairness(self.per_cluster_aom().values())
+
+    def aggregation_cdf(self) -> Tuple[np.ndarray, np.ndarray]:
+        if not self.agg_counts:
+            return np.array([0]), np.array([1.0])
+        xs = np.sort(np.asarray(self.agg_counts))
+        ys = np.arange(1, xs.size + 1) / xs.size
+        return xs, ys
+
+
+class NetworkSimulator:
+    """Event-driven simulator; see module docstring."""
+
+    def __init__(self, cfg: SimCfg) -> None:
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.switches = {s.name: _Switch(s) for s in cfg.switches}
+        self.now = 0.0
+        self._events: List[Tuple[float, int, Callable[[], None]]] = []
+        self._eseq = itertools.count()
+        self._payload_seq = itertools.count()
+        # per-worker transmission controllers
+        self.controllers: Dict[int, TransmissionController] = {}
+        for w in cfg.workers:
+            tc_cfg = cfg.tx_control if cfg.tx_control is not None else None
+            if tc_cfg is not None:
+                self.controllers[w.worker_id] = TransmissionController(
+                    tc_cfg, np.random.default_rng(cfg.seed * 7919 + w.worker_id))
+        self.workers_by_cluster: Dict[int, List[WorkerCfg]] = defaultdict(list)
+        for w in cfg.workers:
+            self.workers_by_cluster[w.cluster_id].append(w)
+        # metrics
+        self.deliveries: Dict[int, List[Tuple[float, float]]] = defaultdict(list)
+        self.delivered_updates: List[Update] = []
+        self.generated = 0
+        self.sent = 0
+        self.deferred = 0
+        self.agg_counts: List[int] = []
+        self._gen_count: Dict[int, int] = defaultdict(int)
+
+    # -- event plumbing ----------------------------------------------------
+    def _at(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._events, (t, next(self._eseq), fn))
+
+    def run(self) -> SimResult:
+        for w in self.cfg.workers:
+            self._schedule_generation(w, first=True)
+        while self._events:
+            t, _, fn = heapq.heappop(self._events)
+            if t > self.cfg.horizon:
+                break
+            self.now = t
+            fn()
+        raw = sum(u.subsumed for u in self.delivered_updates)
+        return SimResult(
+            horizon=self.cfg.horizon,
+            deliveries=dict(self.deliveries),
+            delivered_updates=self.delivered_updates,
+            generated=self.generated,
+            sent=self.sent,
+            deferred=self.deferred,
+            received_at_ps=len(self.delivered_updates),
+            raw_updates_delivered=raw,
+            queue_stats={n: s.queue.stats.as_dict() for n, s in self.switches.items()},
+            agg_counts=self.agg_counts,
+        )
+
+    # -- worker side ---------------------------------------------------------
+    def _next_gen_time(self, w: WorkerCfg) -> Optional[float]:
+        k = self._gen_count[w.worker_id]
+        if w.n_updates is not None and k >= w.n_updates:
+            return None
+        if w.trace is not None:
+            return w.trace[k] if k < len(w.trace) else None
+        base = w.gen_interval
+        if w.gen_jitter > 0:
+            base *= 1.0 + w.gen_jitter * (2 * self.rng.random() - 1)
+        return (self.now if k else 0.0) + base
+
+    def _schedule_generation(self, w: WorkerCfg, first: bool = False) -> None:
+        t = self._next_gen_time(w)
+        if t is None:
+            return
+        self._at(t, lambda: self._on_generate(w))
+
+    def _on_generate(self, w: WorkerCfg) -> None:
+        self.generated += 1
+        self._gen_count[w.worker_id] += 1
+        ctl = self.controllers.get(w.worker_id)
+        send = True
+        if ctl is not None:
+            send = ctl.should_send(self.now)
+        if send:
+            self.sent += 1
+            payload, reward = (None, 0.0)
+            if self.cfg.payload_fn is not None:
+                payload, reward = self.cfg.payload_fn(self.now, w.worker_id)
+            upd = Update(cluster_id=w.cluster_id, worker_id=w.worker_id,
+                         gen_time=self.now, reward=reward, payload=payload,
+                         size_bits=w.size_bits)
+            self._arrive_at_switch(w.ingress_switch, upd)
+        else:
+            self.deferred += 1  # worker keeps training; next update subsumes
+        self._schedule_generation(w)
+
+    # -- switch / queue path -------------------------------------------------
+    def _arrive_at_switch(self, name: str, upd: Update) -> None:
+        sw = self.switches[name]
+        sw.last_seen[upd.cluster_id] = self.now
+        sw.queue.enqueue(upd)
+        if not sw.busy:
+            self._start_transmission(sw)
+
+    def _start_transmission(self, sw: _Switch) -> None:
+        head = sw.queue.peek()
+        if head is None:
+            sw.busy = False
+            return
+        sw.busy = True
+        if isinstance(sw.queue, PyOlafQueue):
+            sw.queue.lock_head()  # §12.1: in-flight update cannot be combined
+        tx_time = head.size_bits / sw.cfg.uplink.capacity_bps
+        self._at(self.now + tx_time, lambda: self._finish_transmission(sw))
+
+    def _finish_transmission(self, sw: _Switch) -> None:
+        upd = sw.queue.dequeue()
+        sw.busy = False
+        if upd is not None:
+            arrive = self.now + sw.cfg.uplink.prop_delay
+            if sw.cfg.next_hop is None:
+                self._at(arrive, lambda u=upd: self._deliver_to_ps(u))
+            else:
+                self._at(arrive, lambda u=upd, n=sw.cfg.next_hop: self._arrive_at_switch(n, u))
+        if len(sw.queue):
+            self._start_transmission(sw)
+
+    # -- PS + reverse path -----------------------------------------------------
+    def _deliver_to_ps(self, upd: Update) -> None:
+        self.deliveries[upd.cluster_id].append((self.now, upd.gen_time))
+        self.delivered_updates.append(upd)
+        self.agg_counts.append(upd.agg_count)
+        payload = None
+        if self.cfg.on_deliver is not None:
+            payload = self.cfg.on_deliver(self.now, upd)
+        # ACK multicast to the cluster after constant reverse delay R; it
+        # carries the *current* bottleneck queue state (max pressure on path).
+        fb = self._path_feedback()
+        t_ack = self.now + self.cfg.ack_delay
+        for w in self.workers_by_cluster[upd.cluster_id]:
+            self._at(t_ack, lambda wid=w.worker_id, f=fb, p=payload: self._on_ack(wid, f, p))
+
+    def _path_feedback(self) -> QueueFeedback:
+        best: Optional[QueueFeedback] = None
+        pressure = -1.0
+        for sw in self.switches.values():
+            fb = sw.feedback(self.now, self.cfg.active_window)
+            pr = fb.n_active_clusters / max(fb.q_max, 1)
+            if pr > pressure:
+                pressure, best = pr, fb
+        assert best is not None
+        return best
+
+    def _on_ack(self, worker_id: int, fb: QueueFeedback, payload: object) -> None:
+        ctl = self.controllers.get(worker_id)
+        if ctl is not None:
+            ctl.on_ack(self.now, fb)
+        if self.cfg.on_ack is not None:
+            self.cfg.on_ack(self.now, worker_id, payload)
+
+
+# --------------------------------------------------------------------------
+# Canned topologies from the paper
+# --------------------------------------------------------------------------
+def microbench_cfg(queue: str, out_gbps: float, *, n_clusters: int = 9,
+                   workers_per_cluster: int = 3, n_updates: Optional[int] = 500,
+                   in_gbps_total: float = 60.0, size_bits: int = 2048,
+                   queue_slots: int = 8, seed: int = 0,
+                   horizon: float = 30.0) -> SimCfg:
+    """§8.1 microbenchmark: 27 workers / 9 clusters at 60 Gbps aggregate into
+    one accelerator queue with a constrained output link."""
+    n_workers = n_clusters * workers_per_cluster
+    # per-worker generation interval so aggregate offered load = in_gbps_total
+    per_worker_bps = in_gbps_total * 1e9 / n_workers
+    interval = size_bits / per_worker_bps
+    workers = [
+        WorkerCfg(worker_id=i, cluster_id=i % n_clusters, ingress_switch="ACC",
+                  gen_interval=interval, gen_jitter=0.15, n_updates=n_updates,
+                  size_bits=size_bits)
+        for i in range(n_workers)
+    ]
+    sw = SwitchCfg(name="ACC", queue=queue, queue_slots=queue_slots,
+                   uplink=Link(out_gbps * 1e9), next_hop=None)
+    return SimCfg(switches=[sw], workers=workers, horizon=horizon, seed=seed)
+
+
+def multihop_cfg(queue: str, *, interval_s1: float = 0.1, interval_s2: float = 0.1,
+                 x1_gbps: float = 10.0, x2_gbps: float = 10.0,
+                 sw3_gbps: float = 10.0, tx_control: Optional[TxControlConfig] = None,
+                 n_clusters_per_group: int = 5, workers_per_cluster: int = 10,
+                 size_bits: int = 8192, horizon: float = 30.0,
+                 sw12_slots: int = 5, sw3_slots: int = 8, seed: int = 0,
+                 reward_threshold: Optional[float] = None) -> SimCfg:
+    """§8.3 multi-hop topology (Fig. 9): C1-C5 -> SW1 -> SW3 -> PS and
+    C6-C10 -> SW2 -> SW3 -> PS, 10 workers per cluster, 1 kB updates."""
+    workers: List[WorkerCfg] = []
+    wid = 0
+    for g, (sw, interval) in enumerate([("SW1", interval_s1), ("SW2", interval_s2)]):
+        for c in range(n_clusters_per_group):
+            cluster = g * n_clusters_per_group + c
+            for _ in range(workers_per_cluster):
+                workers.append(WorkerCfg(
+                    worker_id=wid, cluster_id=cluster, ingress_switch=sw,
+                    gen_interval=interval, gen_jitter=0.3, size_bits=size_bits))
+                wid += 1
+    switches = [
+        SwitchCfg("SW1", queue=queue, queue_slots=sw12_slots,
+                  uplink=Link(x1_gbps * 1e9), next_hop="SW3",
+                  reward_threshold=reward_threshold),
+        SwitchCfg("SW2", queue=queue, queue_slots=sw12_slots,
+                  uplink=Link(x2_gbps * 1e9), next_hop="SW3",
+                  reward_threshold=reward_threshold),
+        SwitchCfg("SW3", queue=queue, queue_slots=sw3_slots,
+                  uplink=Link(sw3_gbps * 1e9), next_hop=None,
+                  reward_threshold=reward_threshold),
+    ]
+    return SimCfg(switches=switches, workers=workers, horizon=horizon,
+                  tx_control=tx_control, seed=seed)

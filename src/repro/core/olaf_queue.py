@@ -1,0 +1,313 @@
+"""OlafQueue — the paper's alternative queue design (§4, Algorithm 1).
+
+Two interchangeable implementations:
+
+  * :class:`PyOlafQueue` / :class:`PyFifoQueue` — event-driven reference
+    used by the discrete-event network simulator (``core/netsim.py``) and
+    as the oracle for property tests.
+  * :func:`jax_enqueue` / :func:`jax_dequeue` over :class:`JaxQueueState`
+    — a fully jittable struct-of-arrays version used on-device inside the
+    async trainer and mirrored by the Pallas ``olaf_combine`` kernel.
+
+Semantics (paper §4 + §12.1):
+  - at most one update per cluster in the queue (plus momentarily a second
+    one when the first is *locked*, i.e. head-of-line and in transmission);
+  - incoming update whose cluster is present: reward-gated aggregate /
+    replace / drop, written back at the waiting update's position;
+  - same-worker replacement only while ``replace_flag`` is set (un-aggregated);
+  - append at tail if the cluster is absent and the queue is not full;
+  - drop only if full and no same-cluster update is waiting.
+Dequeue is strictly sequential (FIFO over slot sequence numbers); an
+aggregated/replaced update inherits the old update's departure position.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.aggregation import Action, Update, aggregate, gate, replace
+
+
+class QueueStats:
+    """Counters shared by both queue flavours (Tab. 1 columns)."""
+
+    def __init__(self) -> None:
+        self.enqueued = 0
+        self.dropped = 0
+        self.aggregations = 0
+        self.replacements = 0
+        self.reward_drops = 0
+        self.departed = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(
+            enqueued=self.enqueued, dropped=self.dropped,
+            aggregations=self.aggregations, replacements=self.replacements,
+            reward_drops=self.reward_drops, departed=self.departed,
+        )
+
+
+class PyFifoQueue:
+    """Classical tail-drop FIFO — the paper's baseline."""
+
+    def __init__(self, capacity: int) -> None:
+        self.capacity = capacity
+        self._q: List[Update] = []
+        self.stats = QueueStats()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def enqueue(self, upd: Update) -> bool:
+        if len(self._q) >= self.capacity:
+            self.stats.dropped += 1
+            return False
+        self._q.append(upd)
+        self.stats.enqueued += 1
+        return True
+
+    def peek(self) -> Optional[Update]:
+        return self._q[0] if self._q else None
+
+    def dequeue(self) -> Optional[Update]:
+        if not self._q:
+            return None
+        self.stats.departed += 1
+        return self._q.pop(0)
+
+
+class PyOlafQueue:
+    """Reference OlafQueue (Algorithm 1 + §12.1 head-lock corner case)."""
+
+    def __init__(self, capacity: int, reward_threshold: Optional[float] = None) -> None:
+        self.capacity = capacity
+        self.reward_threshold = reward_threshold
+        self._q: List[Update] = []  # kept sorted by seq (departure order)
+        self._seq = 0
+        self._locked_seq: Optional[int] = None  # head update in transmission
+        self.stats = QueueStats()
+
+    # -- introspection ----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def clusters(self) -> List[int]:
+        return [u.cluster_id for u in self._q]
+
+    def occupancy(self) -> int:
+        return len(self._q)
+
+    # -- §12.1: the head update may be locked while serializing ----------
+    def lock_head(self) -> None:
+        if self._q:
+            self._locked_seq = self._q[0].seq
+
+    def _find_unlocked(self, cluster_id: int) -> Optional[int]:
+        for i, u in enumerate(self._q):
+            if u.cluster_id == cluster_id and u.seq != self._locked_seq:
+                return i
+        return None
+
+    # -- Algorithm 1 ------------------------------------------------------
+    def enqueue(self, upd: Update) -> bool:
+        """Returns True iff the update's information is retained in the queue."""
+        idx = self._find_unlocked(upd.cluster_id)
+        if idx is not None:
+            waiting = self._q[idx]
+            if waiting.replaceable and waiting.worker_id == upd.worker_id:
+                # Alg.1 lines 9-10: same-worker, un-aggregated -> replace.
+                new = replace(waiting, upd)
+                new.replaceable = True  # still a single un-aggregated update
+                self._q[idx] = new
+                self.stats.replacements += 1
+                return True
+            act = gate(upd.reward, waiting.reward, self.reward_threshold)
+            if act is Action.DROP:
+                self.stats.reward_drops += 1
+                self.stats.dropped += 1
+                return False
+            if act is Action.REPLACE:
+                new = replace(waiting, upd)
+                new.replaceable = False  # reward-replace counts as a combine event
+                self._q[idx] = new
+                self.stats.replacements += 1
+                return True
+            self._q[idx] = aggregate(waiting, upd)  # Alg.1 lines 12/16
+            self.stats.aggregations += 1
+            return True
+        if len(self._q) >= self.capacity:
+            self.stats.dropped += 1  # Alg.1 line 22
+            return False
+        upd.seq = self._seq  # Alg.1 lines 18-20: append at tail
+        self._seq += 1
+        self._q.append(upd)
+        self.stats.enqueued += 1
+        return True
+
+    def peek(self) -> Optional[Update]:
+        return self._q[0] if self._q else None
+
+    def dequeue(self) -> Optional[Update]:
+        if not self._q:
+            return None
+        self.stats.departed += 1
+        if self._locked_seq is not None and self._q[0].seq == self._locked_seq:
+            self._locked_seq = None
+        return self._q.pop(0)
+
+
+# ===========================================================================
+# Jittable struct-of-arrays queue (device-resident PS combining buffer).
+# ===========================================================================
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class JaxQueueState:
+    """Fixed-capacity OlafQueue state as a pytree of arrays.
+
+    ``payload`` is ``(capacity, dim)``; empty slots have ``cluster == -1``.
+    Departure order is the slot with the smallest ``seq``.
+    """
+
+    cluster: jnp.ndarray  # int32[Q]
+    worker: jnp.ndarray  # int32[Q]
+    seq: jnp.ndarray  # int32[Q], INT32_MAX for empty
+    gen_time: jnp.ndarray  # float32[Q]
+    reward: jnp.ndarray  # float32[Q]
+    agg_count: jnp.ndarray  # int32[Q]
+    replaceable: jnp.ndarray  # bool[Q]
+    payload: jnp.ndarray  # float32[Q, D]
+    next_seq: jnp.ndarray  # int32[] monotone counter
+    # counters (Tab. 1)
+    n_dropped: jnp.ndarray
+    n_agg: jnp.ndarray
+    n_repl: jnp.ndarray
+
+
+_EMPTY_SEQ = jnp.iinfo(jnp.int32).max
+
+
+def jax_queue_init(capacity: int, dim: int, dtype=jnp.float32) -> JaxQueueState:
+    return JaxQueueState(
+        cluster=-jnp.ones((capacity,), jnp.int32),
+        worker=-jnp.ones((capacity,), jnp.int32),
+        seq=jnp.full((capacity,), _EMPTY_SEQ, jnp.int32),
+        gen_time=jnp.zeros((capacity,), jnp.float32),
+        reward=jnp.full((capacity,), -jnp.inf, jnp.float32),
+        agg_count=jnp.zeros((capacity,), jnp.int32),
+        replaceable=jnp.zeros((capacity,), bool),
+        payload=jnp.zeros((capacity, dim), dtype),
+        next_seq=jnp.zeros((), jnp.int32),
+        n_dropped=jnp.zeros((), jnp.int32),
+        n_agg=jnp.zeros((), jnp.int32),
+        n_repl=jnp.zeros((), jnp.int32),
+    )
+
+
+def jax_enqueue(state: JaxQueueState, cluster: jnp.ndarray, worker: jnp.ndarray,
+                gen_time: jnp.ndarray, reward: jnp.ndarray, payload: jnp.ndarray,
+                reward_threshold: float = jnp.inf) -> JaxQueueState:
+    """Jittable Algorithm 1 for a single incoming update.
+
+    ``reward_threshold=inf`` disables gating. All branches are computed with
+    masks/`jnp.where` so the function is trace-once / fixed-shape.
+    """
+    occupied = state.cluster >= 0
+    same_cluster = occupied & (state.cluster == cluster)
+    hit = jnp.any(same_cluster)
+    slot_hit = jnp.argmax(same_cluster)  # valid only when hit
+
+    w_reward = state.reward[slot_hit]
+    w_repl = state.replaceable[slot_hit]
+    w_worker = state.worker[slot_hit]
+    w_cnt = state.agg_count[slot_hit]
+
+    same_worker_replace = hit & w_repl & (w_worker == worker)
+    rdiff = reward - w_reward
+    do_reward_replace = hit & ~same_worker_replace & (rdiff > reward_threshold)
+    do_reward_drop = hit & ~same_worker_replace & (rdiff < -reward_threshold)
+    do_aggregate = hit & ~same_worker_replace & ~do_reward_replace & ~do_reward_drop
+
+    full = jnp.all(occupied)
+    do_append = ~hit & ~full
+    do_drop_full = ~hit & full
+
+    # ---- payload combine -------------------------------------------------
+    w_payload = state.payload[slot_hit]
+    agg_payload = (w_payload * w_cnt.astype(payload.dtype)
+                   + payload) / (w_cnt + 1).astype(payload.dtype)
+    new_payload_hit = jnp.where(do_aggregate, agg_payload, payload)
+
+    # ---- slot selection ---------------------------------------------------
+    # append slot: first empty (argmax over ~occupied)
+    slot_append = jnp.argmax(~occupied)
+    slot = jnp.where(hit, slot_hit, slot_append)
+    write = same_worker_replace | do_reward_replace | do_aggregate | do_append
+
+    onehot = (jnp.arange(state.cluster.shape[0]) == slot) & write
+
+    def put(old, new):
+        return jnp.where(onehot, new, old)
+
+    new_seq_val = jnp.where(hit, state.seq[slot_hit], state.next_seq)
+    new_state = JaxQueueState(
+        cluster=put(state.cluster, cluster),
+        worker=put(state.worker, worker),
+        seq=put(state.seq, new_seq_val),
+        gen_time=put(state.gen_time, jnp.maximum(gen_time, jnp.where(do_aggregate, state.gen_time[slot_hit], gen_time))),
+        reward=put(state.reward, jnp.where(do_aggregate, jnp.maximum(reward, w_reward), reward)),
+        agg_count=put(state.agg_count, jnp.where(do_aggregate, w_cnt + 1, 1)),
+        replaceable=put(state.replaceable, same_worker_replace | do_append),
+        payload=jnp.where(onehot[:, None], jnp.where(do_aggregate, agg_payload, payload)[None, :], state.payload),
+        next_seq=state.next_seq + do_append.astype(jnp.int32),
+        n_dropped=state.n_dropped + (do_drop_full | do_reward_drop).astype(jnp.int32),
+        n_agg=state.n_agg + do_aggregate.astype(jnp.int32),
+        n_repl=state.n_repl + (same_worker_replace | do_reward_replace).astype(jnp.int32),
+    )
+    del new_payload_hit
+    return new_state
+
+
+def jax_dequeue(state: JaxQueueState) -> Tuple[JaxQueueState, Dict[str, jnp.ndarray]]:
+    """Pop the slot with the smallest sequence number (FIFO order)."""
+    slot = jnp.argmin(state.seq)
+    valid = state.cluster[slot] >= 0
+    out = dict(
+        valid=valid,
+        cluster=state.cluster[slot],
+        worker=state.worker[slot],
+        gen_time=state.gen_time[slot],
+        reward=state.reward[slot],
+        agg_count=state.agg_count[slot],
+        payload=state.payload[slot],
+    )
+    onehot = (jnp.arange(state.cluster.shape[0]) == slot) & valid
+
+    new_state = dataclasses.replace(
+        state,
+        cluster=jnp.where(onehot, -1, state.cluster),
+        worker=jnp.where(onehot, -1, state.worker),
+        seq=jnp.where(onehot, _EMPTY_SEQ, state.seq),
+        reward=jnp.where(onehot, -jnp.inf, state.reward),
+        agg_count=jnp.where(onehot, 0, state.agg_count),
+        replaceable=jnp.where(onehot, False, state.replaceable),
+        payload=jnp.where(onehot[:, None], 0.0, state.payload),
+    )
+    return new_state, out
+
+
+def jax_enqueue_batch(state: JaxQueueState, clusters, workers, gen_times,
+                      rewards, payloads, reward_threshold: float = jnp.inf) -> JaxQueueState:
+    """Sequential (scan) batch enqueue — an incast burst hitting the queue."""
+
+    def body(st, xs):
+        c, w, t, r, p = xs
+        return jax_enqueue(st, c, w, t, r, p, reward_threshold), None
+
+    state, _ = jax.lax.scan(body, state, (clusters, workers, gen_times, rewards, payloads))
+    return state

@@ -1,0 +1,74 @@
+"""Worker-side transmission control guided by in-network feedback (§5).
+
+ACKs on the reverse path piggyback the queue state ``{N, Q_max, Q_n}``
+(number of active clusters, queue capacity, current occupancy). In the
+congestion regime (``N > Q_max``) a worker holding a fresh update transmits
+with probability
+
+    P_s = min(Q_max / N + f(Δ̂), 1),     f(Δ̂) = v · max(Δ̂ − Δ̄_T, 0)
+
+where ``Δ̂`` is the time since the last ACK the worker received. Workers with
+fresh feedback use the stabilising base rate ``Q_max/N``; workers whose
+feedback has gone stale perturb upward with slope ``v`` (urgency: v = 1/Δ̄_T,
+fairness: v = Δ̄_T). Without congestion (``N ≤ Q_max``) workers send at will.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QueueFeedback:
+    """Reverse-path signal carried in the ACK (paper packet format §7)."""
+
+    n_active_clusters: int  # 16-bit field in the paper
+    q_max: int
+    q_occupancy: int  # 24-bit field (or a binary congestion bit)
+    timestamp: float = 0.0
+
+
+@dataclasses.dataclass
+class TxControlConfig:
+    delta_threshold: float = 0.4  # Δ̄_T, paper uses 400 msec
+    slope_mode: str = "fairness"  # "fairness": v=Δ̄_T, "urgency": v=1/Δ̄_T
+    slope: Optional[float] = None  # explicit v overrides slope_mode
+
+    @property
+    def v(self) -> float:
+        if self.slope is not None:
+            return self.slope
+        if self.slope_mode == "urgency":
+            return 1.0 / self.delta_threshold
+        return self.delta_threshold
+
+
+class TransmissionController:
+    """Per-worker state machine implementing §5."""
+
+    def __init__(self, cfg: TxControlConfig, rng: np.random.Generator) -> None:
+        self.cfg = cfg
+        self.rng = rng
+        self.last_ack_time: Optional[float] = None
+        self.feedback: Optional[QueueFeedback] = None
+
+    def on_ack(self, now: float, feedback: QueueFeedback) -> None:
+        self.last_ack_time = now
+        self.feedback = feedback
+
+    def send_probability(self, now: float) -> float:
+        if self.feedback is None:
+            return 1.0  # no feedback yet: initial transmissions are free
+        n, qmax = self.feedback.n_active_clusters, self.feedback.q_max
+        if n <= qmax:
+            return 1.0  # no-congestion regime: transmit at will
+        delta_hat = now - (self.last_ack_time if self.last_ack_time is not None else now)
+        overdue = delta_hat - self.cfg.delta_threshold
+        f = self.cfg.v * overdue if overdue > 0 else 0.0
+        return float(min(qmax / n + f, 1.0))
+
+    def should_send(self, now: float) -> bool:
+        p = self.send_probability(now)
+        return bool(self.rng.random() < p)

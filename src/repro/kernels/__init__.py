@@ -1,0 +1,13 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling).
+
+  olaf_combine     — the paper's data-plane burst combine (masked segment
+                     running-mean into cluster slots)
+  flash_attention  — online-softmax attention, (BH, q_blocks, kv_blocks)
+                     grid with VMEM scratch accumulators
+  decode_attention — single-token GQA attention streaming a (possibly
+                     sequence-sharded) KV cache
+
+ops.py exposes jit'd wrappers (interpret mode on CPU; compiled on TPU via
+REPRO_PALLAS_COMPILED=1); ref.py holds the pure-jnp oracles the test sweep
+asserts against.
+"""

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: OLAF opportunistic update combining (the paper's
+data-plane aggregation hot-spot, re-thought for the TPU memory hierarchy).
+
+The P4/Verilog pipeline combines one update at a time at line rate. On TPU
+the equivalent operating point is a *batched* combine: a burst of U incoming
+updates (an incast, §3) is merged into the Q cluster-keyed queue slots in a
+single VMEM-resident pass:
+
+    new_slot[q] = (slot[q]·count[q] + Σ_{u: cluster[u]=q ∧ gate[u]} upd[u])
+                  / (count[q] + n[q])
+
+i.e. a masked segment-sum over the update batch followed by a running-mean
+renormalization — the same arithmetic as Algorithm 1 applied to a burst
+(gating decisions are data-dependent scalars and stay in the JAX wrapper).
+
+Tiling: grid over (Q slots × D tiles). Per step the kernel holds one
+(U, Dt) update tile and one (1, Dt) slot tile in VMEM; the masked reduce is
+a VPU select+add chain over U — no MXU needed, the kernel is HBM-bandwidth
+bound by design (it must touch every incoming byte exactly once, like the
+line-rate queue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_D = 512
+
+
+def _combine_kernel(cluster_ref, gate_ref, count_ref, updates_ref, slots_ref,
+                    out_ref, *, n_updates: int):
+    """One (slot q, D-tile) grid step.
+
+    cluster_ref: (U,) int32 in SMEM — cluster id per incoming update
+    gate_ref:    (U,) int32 in SMEM — 1 if the update passed reward gating
+    count_ref:   (Q,) int32 in SMEM — current agg_count per slot
+    updates_ref: (U, Dt) VMEM tile of incoming payloads
+    slots_ref:   (1, Dt) VMEM tile of the current slot payload
+    out_ref:     (1, Dt) VMEM tile of the combined slot payload
+    """
+    q = pl.program_id(0)
+    count = count_ref[q]
+    acc = slots_ref[0, :].astype(jnp.float32) * count.astype(jnp.float32)
+    hits = jnp.int32(0)
+    for u in range(n_updates):  # static unroll: U is small (a burst)
+        take = jnp.logical_and(cluster_ref[u] == q, gate_ref[u] == 1)
+        acc = acc + jnp.where(take, updates_ref[u, :].astype(jnp.float32), 0.0)
+        hits = hits + take.astype(jnp.int32)
+    denom = jnp.maximum(count + hits, 1).astype(jnp.float32)
+    out_ref[0, :] = (acc / denom).astype(out_ref.dtype)
+
+
+def olaf_combine_pallas(slots: jnp.ndarray, counts: jnp.ndarray,
+                        updates: jnp.ndarray, clusters: jnp.ndarray,
+                        gate: jnp.ndarray, *, tile_d: int = DEFAULT_TILE_D,
+                        interpret: bool = True) -> jnp.ndarray:
+    """slots: (Q, D); counts: (Q,); updates: (U, D); clusters/gate: (U,).
+
+    Returns the combined slot payloads (Q, D). ``interpret=True`` runs the
+    kernel body on CPU (this container); on TPU pass ``interpret=False``.
+    """
+    Q, D = slots.shape
+    U = updates.shape[0]
+    tile_d = min(tile_d, D)
+    assert D % tile_d == 0, (D, tile_d)
+
+    grid = (Q, D // tile_d)
+    kernel = functools.partial(_combine_kernel, n_updates=U)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # clusters (scalar-read)
+            pl.BlockSpec(memory_space=pl.ANY),  # gate
+            pl.BlockSpec(memory_space=pl.ANY),  # counts
+            pl.BlockSpec((U, tile_d), lambda q, j: (0, j)),
+            pl.BlockSpec((1, tile_d), lambda q, j: (q, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_d), lambda q, j: (q, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, D), slots.dtype),
+        interpret=interpret,
+    )(clusters, gate, counts, updates, slots)

@@ -1,0 +1,59 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True in this CPU container (the kernel bodies run
+through the Pallas interpreter); on a real TPU pass ``interpret=False`` (or
+set REPRO_PALLAS_COMPILED=1) to compile them to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.olaf_combine import olaf_combine_pallas
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def olaf_combine(slots, counts, updates, clusters, gate, *, tile_d: int = 512,
+                 interpret: bool = _INTERPRET):
+    """Combine a burst of updates into cluster slots (running mean).
+
+    slots (Q,D), counts (Q,) int32, updates (U,D), clusters (U,) int32,
+    gate (U,) int32/bool -> (new_slots (Q,D), new_counts (Q,))
+    """
+    gate = gate.astype(jnp.int32)
+    new_slots = olaf_combine_pallas(slots, counts, updates, clusters, gate,
+                                    tile_d=tile_d, interpret=interpret)
+    onehot = jax.nn.one_hot(clusters, slots.shape[0], dtype=jnp.int32)
+    new_counts = counts + (onehot * gate[:, None]).sum(axis=0)
+    return new_slots, new_counts
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, block_q: int = 512, block_k: int = 512,
+                    interpret: bool = _INTERPRET):
+    """Flash attention in the model's (B, S, H, Dh) layout (kv pre-expanded)."""
+    B, Sq, H, Dh = q.shape
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, Dh)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, k.shape[1], Dh)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, v.shape[1], Dh)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                 q_offset=q_offset, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
+    return jnp.moveaxis(out.reshape(B, H, Sq, Dh), 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, block_s: int = 512,
+                     interpret: bool = _INTERPRET):
+    """GQA decode attention. q: (B,KV,rep,Dh); caches (B,S,KV,Dh); pos (B,)."""
+    return decode_attention_pallas(q, k_cache, v_cache, pos, block_s=block_s,
+                                   interpret=interpret)

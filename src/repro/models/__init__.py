@@ -1,0 +1,1 @@
+"""Model substrate: functional layers and the assigned architectures."""

@@ -1,0 +1,109 @@
+"""Family-dispatching model API + dry-run input specs.
+
+Entry points keyed by the shape kind:
+  * train   -> ``loss_fn(params, batch)`` / ``forward``
+  * prefill -> ``prefill(params, batch)``
+  * decode  -> ``decode_step(params, caches, batch)``
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+multi-pod dry-run lowers against these. Modality frontends are stubs:
+whisper gets precomputed frame embeddings, internvl2 gets patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+from repro.models.module import dtype_of
+
+Params = Dict[str, Any]
+
+
+def init_model(key, cfg: ArchConfig, vocab_pad_multiple: int = 1) -> Params:
+    if cfg.family == "encdec":
+        return ED.init_encdec(key, cfg, vocab_pad_multiple)
+    return TF.init_lm(key, cfg, vocab_pad_multiple)
+
+
+def param_spec(cfg: ArchConfig, vocab_pad_multiple: int = 1) -> Params:
+    """Parameter ShapeDtypeStructs without allocating (jax.eval_shape)."""
+    return jax.eval_shape(
+        lambda k: init_model(k, cfg, vocab_pad_multiple),
+        jax.random.key(0))
+
+
+def loss_fn(params, batch, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.family == "encdec":
+        return ED.encdec_loss(params, batch, cfg)
+    return TF.lm_loss(params, batch, cfg)
+
+
+def forward(params, batch, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.family == "encdec":
+        return ED.encdec_forward(params, batch["frames"], batch["tokens"], cfg)
+    return TF.lm_forward(params, batch["tokens"], cfg,
+                         patches=batch.get("patches"))
+
+
+def prefill(params, batch, cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return ED.encdec_prefill(params, batch["frames"], batch["tokens"], cfg)
+    return TF.lm_prefill(params, batch["tokens"], cfg,
+                         patches=batch.get("patches"))
+
+
+def decode_step(params, caches, batch, cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return ED.encdec_decode_step(params, caches, batch["token"],
+                                     batch["pos"], cfg)
+    return TF.lm_decode_step(params, caches, batch["token"], batch["pos"], cfg)
+
+
+def make_caches(cfg: ArchConfig, batch: int, cache_len: int) -> Params:
+    if cfg.family == "encdec":
+        return ED.init_encdec_caches(cfg, batch, cache_len)
+    return TF.init_caches(cfg, batch, cache_len)
+
+
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int) -> Params:
+    return jax.eval_shape(lambda: make_caches(cfg, batch, cache_len))
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the entry point of ``shape.kind``."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg.dtype)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {"tokens": sds((B, S), i32),
+                                 "labels": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            specs["patches"] = sds((B, cfg.n_patches, cfg.d_model), dt)
+        if cfg.family == "encdec":
+            specs["frames"] = sds((B, cfg.enc_frames, cfg.d_model), dt)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            specs["patches"] = sds((B, cfg.n_patches, cfg.d_model), dt)
+        if cfg.family == "encdec":
+            specs["frames"] = sds((B, cfg.enc_frames, cfg.d_model), dt)
+        return specs
+    if shape.kind == "decode":
+        cache_len = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+        return {
+            "token": sds((B,), i32),
+            "pos": sds((B,), i32),
+            "caches": cache_spec(cfg, B, cache_len),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,209 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, enc_frames, d_model). Positions
+are sinusoidal (parameter-free; whisper's learned decoder table is replaced
+so the same params serve any context length — noted in DESIGN.md).
+
+Decode caches: per decoder layer a growing self-attention KV cache plus the
+cross-attention K/V computed once from the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.module import dtype_of, run_periods
+
+Params = Dict[str, Any]
+
+
+def sinusoidal(positions, d_model: int, dtype):
+    pos = positions.astype(jnp.float32)
+    dim = d_model // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(dim, dtype=np.float32) / dim)
+    ang = pos[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _init_enc_layer(key, cfg: ArchConfig, dt):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "attn": L.init_attention(k1, cfg, dt),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dt),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "self_attn": L.init_attention(k1, cfg, dt),
+        "ln_x": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "cross_attn": L.init_attention(k2, cfg, dt),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.act, dt),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig, vocab_pad_multiple: int = 1) -> Params:
+    dt = dtype_of(cfg.dtype)
+    from repro.models.transformer import padded_vocab
+    ke, kenc, kdec, kn = jax.random.split(key, 4)
+    return {
+        "embedding": L.init_embedding(ke, padded_vocab(cfg, vocab_pad_multiple),
+                                      cfg.d_model, dt, cfg.tie_embeddings),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dt))(
+            jax.random.split(kenc, cfg.n_enc_layers)),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dt))(
+            jax.random.split(kdec, cfg.n_layers)),
+        "enc_final": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "dec_final": L.init_norm(cfg.norm, cfg.d_model, dt),
+    }
+
+
+def _self_attn(p, x, cfg, causal, positions=None, unroll=None):
+    q, k, v = L.qkv(p, x, cfg)
+    ctx = L.attention_any(q, L.expand_kv(k, cfg), L.expand_kv(v, cfg),
+                          causal=causal, impl=cfg.attn_impl,
+                          chunk=cfg.attn_chunk,
+                          unroll=cfg.unroll_loops if unroll is None else unroll)
+    return L.out_proj(p, ctx, cfg), k, v
+
+
+def _cross_attn(p, x, enc_kv, cfg):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    q = L.constrain(q, cfg, ("batch", None, L.head_label(cfg), None))
+    Dh = q.shape[-1]
+    k, v = enc_kv  # unexpanded (B,F,KV,Dh)
+    ke, ve = L.expand_kv(k, cfg), L.expand_kv(v, cfg)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, ke).astype(jnp.float32) / np.sqrt(Dh)
+    pa = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bhqs,bshd->bqhd", pa, ve)
+    return L.out_proj(p, ctx, cfg)
+
+
+def encode(params, frames, cfg: ArchConfig) -> jnp.ndarray:
+    """frames: (B, F, d_model) stub embeddings -> encoder states."""
+    x = frames + sinusoidal(jnp.arange(frames.shape[1])[None, :],
+                            cfg.d_model, frames.dtype)
+
+    def body(carry, p):
+        h = carry
+        a, _, _ = _self_attn(p["attn"], L.apply_norm(cfg.norm, p["ln1"], h),
+                             cfg, causal=False)
+        h = h + a
+        h = h + L.apply_mlp(p["mlp"], L.apply_norm(cfg.norm, p["ln2"], h),
+                            cfg.act, cfg)
+        return h, None
+
+    x, _ = run_periods(body, x, params["enc_layers"], cfg=cfg)
+    return L.apply_norm(cfg.norm, params["enc_final"], x)
+
+
+def _dec_layer_train(p, x, enc_out, cfg):
+    a, _, _ = _self_attn(p["self_attn"], L.apply_norm(cfg.norm, p["ln1"], x),
+                         cfg, causal=True, unroll=True)  # differentiable
+    x = x + a
+    kx = jnp.einsum("bsd,dke->bske", enc_out, p["cross_attn"]["wk"])
+    vx = jnp.einsum("bsd,dke->bske", enc_out, p["cross_attn"]["wv"])
+    x = x + _cross_attn(p["cross_attn"], L.apply_norm(cfg.norm, p["ln_x"], x),
+                        (kx, vx), cfg)
+    x = x + L.apply_mlp(p["mlp"], L.apply_norm(cfg.norm, p["ln2"], x),
+                        cfg.act, cfg)
+    return x
+
+
+def encdec_forward(params, frames, tokens, cfg: ArchConfig) -> jnp.ndarray:
+    """Teacher-forcing training forward -> logits (B, S, vocab)."""
+    enc_out = encode(params, frames, cfg)
+    x = L.embed(params["embedding"], tokens)
+    x = x + sinusoidal(jnp.arange(x.shape[1])[None, :], cfg.d_model, x.dtype)
+
+    def body(carry, p):
+        return _dec_layer_train(p, carry, enc_out, cfg), None
+
+    x, _ = run_periods(body, x, params["dec_layers"], cfg=cfg)
+    x = L.apply_norm(cfg.norm, params["dec_final"], x)
+    return L.unembed(params["embedding"], x, true_vocab=cfg.vocab, cfg=cfg)
+
+
+def encdec_loss(params, batch, cfg: ArchConfig) -> jnp.ndarray:
+    logits = encdec_forward(params, batch["frames"], batch["tokens"], cfg)
+    return L.cross_entropy(logits, batch["labels"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# Inference
+# ---------------------------------------------------------------------------
+def init_encdec_caches(cfg: ArchConfig, batch: int, cache_len: int) -> Params:
+    dt = dtype_of(cfg.dtype)
+    Ldec = cfg.n_layers
+    kv = (Ldec, batch, cache_len, cfg.n_kv_heads, cfg.hd)
+    xkv = (Ldec, batch, cfg.enc_frames, cfg.n_kv_heads, cfg.hd)
+    return {"self_k": jnp.zeros(kv, dt), "self_v": jnp.zeros(kv, dt),
+            "cross_k": jnp.zeros(xkv, dt), "cross_v": jnp.zeros(xkv, dt)}
+
+
+def encdec_prefill(params, frames, tokens, cfg: ArchConfig):
+    """Encode + run the decoder prefix, returning decode caches."""
+    enc_out = encode(params, frames, cfg)
+    x = L.embed(params["embedding"], tokens)
+    x = x + sinusoidal(jnp.arange(x.shape[1])[None, :], cfg.d_model, x.dtype)
+
+    def body(carry, p):
+        h = carry
+        a, k, v = _self_attn(p["self_attn"], L.apply_norm(cfg.norm, p["ln1"], h),
+                             cfg, causal=True)
+        h = h + a
+        kx = jnp.einsum("bsd,dke->bske", enc_out, p["cross_attn"]["wk"])
+        vx = jnp.einsum("bsd,dke->bske", enc_out, p["cross_attn"]["wv"])
+        h = h + _cross_attn(p["cross_attn"], L.apply_norm(cfg.norm, p["ln_x"], h),
+                            (kx, vx), cfg)
+        h = h + L.apply_mlp(p["mlp"], L.apply_norm(cfg.norm, p["ln2"], h),
+                            cfg.act, cfg)
+        return h, {"self_k": k, "self_v": v, "cross_k": kx, "cross_v": vx}
+
+    x, caches = run_periods(body, x, params["dec_layers"], cfg=cfg)
+    x = L.apply_norm(cfg.norm, params["dec_final"], x)
+    logits = L.unembed(params["embedding"], x[:, -1:, :], true_vocab=cfg.vocab,
+                       cfg=cfg)
+    return logits, caches
+
+
+def encdec_decode_step(params, caches, token, pos, cfg: ArchConfig):
+    """One decoder token; caches from init_encdec_caches/encdec_prefill."""
+    x = L.embed(params["embedding"], token[:, None])
+    x = x + sinusoidal(pos[:, None], cfg.d_model, x.dtype)
+    B = token.shape[0]
+
+    def body(carry, inp):
+        h = carry
+        p, c = inp
+        hn = L.apply_norm(cfg.norm, p["ln1"], h)
+        q, k, v = L.qkv(p["self_attn"], hn, cfg)
+        q = L.constrain(q, cfg, ("batch", None, None, None))
+        kc = c["self_k"].at[jnp.arange(B), pos].set(k[:, 0])
+        vc = c["self_v"].at[jnp.arange(B), pos].set(v[:, 0])
+        ctx = L.decode_attention(q, L.expand_kv(kc, cfg, decode=True),
+                                 L.expand_kv(vc, cfg, decode=True), pos)
+        h = h + L.out_proj(p["self_attn"], ctx, cfg)
+        h = h + _cross_attn(p["cross_attn"], L.apply_norm(cfg.norm, p["ln_x"], h),
+                            (c["cross_k"], c["cross_v"]), cfg)
+        h = h + L.apply_mlp(p["mlp"], L.apply_norm(cfg.norm, p["ln2"], h),
+                            cfg.act, cfg)
+        return h, {"self_k": kc, "self_v": vc,
+                   "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    x, new_caches = run_periods(body, x, (params["dec_layers"], caches),
+                               cfg=cfg)
+    x = L.apply_norm(cfg.norm, params["dec_final"], x)
+    logits = L.unembed(params["embedding"], x, true_vocab=cfg.vocab, cfg=cfg)
+    return logits[:, 0, :], new_caches

@@ -1,0 +1,459 @@
+"""Transformer layer library: norms, RoPE, GQA/MQA attention, gated MLPs.
+
+Attention is computed in the *full-head* layout (B, S, H, Dh) with KV heads
+expanded by a static gather (GQA repeat), which keeps head sharding exact
+under tensor parallelism. Three execution strategies:
+  * ``full``     — one einsum + softmax; fine up to ~8k sequence;
+  * ``chunked``  — flash-style online-softmax over KV blocks with causal
+                   block skipping; O(chunk²) memory; used for 32k+ and as the
+                   jnp reference of the Pallas flash kernel;
+  * ``decode``   — single-query attention against a KV cache (optionally
+                   sequence-sharded across the model axis for long contexts).
+
+Sharding: when ``cfg.shard_acts`` is set, activations carry explicit
+``with_sharding_constraint`` annotations (batch -> data axes, heads/ff ->
+model axis) so XLA's SPMD propagation can't pick a pathological layout
+(e.g. replicating batch and all-reducing attention scores).
+
+All softmax/normalization accumulation is fp32 regardless of activation
+dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.module import dense_init, normal
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints
+# --------------------------------------------------------------------------
+def constrain(x: jnp.ndarray, cfg, dims: Sequence[Optional[str]]) -> jnp.ndarray:
+    """Annotate ``x`` with a PartitionSpec derived from logical dim labels.
+
+    Labels: "batch" (pod+data, with divisibility fallback to data or None),
+    "tp" (model axis if divisible), "fsdp" (data axis if divisible), None.
+    No-op unless ``cfg.shard_acts``.
+    """
+    if not getattr(cfg, "shard_acts", False) or not cfg.mesh_axes:
+        return x
+    sizes = dict(cfg.mesh_axes)
+    spec = []
+    used = set()  # each mesh axis at most once per tensor
+    for label, size in zip(dims, x.shape):
+        if label == "batch" and "data" not in used:
+            ba = tuple(a for a in ("pod", "data") if a in sizes)
+            n = int(np.prod([sizes[a] for a in ba])) if ba else 1
+            if ba and size % n == 0 and size >= n:
+                spec.append(ba if len(ba) > 1 else ba[0])
+                used.update(ba)
+            elif "data" in sizes and size % sizes["data"] == 0 and size >= sizes["data"]:
+                spec.append("data")
+                used.add("data")
+            else:
+                spec.append(None)
+        elif label == "tp" and "model" not in used:
+            m = sizes.get("model", 1)
+            ok = size % m == 0 and size >= m
+            spec.append("model" if ok else None)
+            if ok:
+                used.add("model")
+        elif label == "fsdp" and "data" not in used:
+            d = sizes.get("data", 1)
+            ok = size % d == 0 and size >= d
+            spec.append("data" if ok else None)
+            if ok:
+                used.add("data")
+        elif label == "sp" and "model" not in used:
+            # sequence-parallel residual stream (Megatron-SP via GSPMD):
+            # the seq dim of the residual/saved activations shards over the
+            # model axis; XLA inserts the all-gather before qkv/mlp and the
+            # reduce-scatter after. Cuts remat-saved bytes by tp_size.
+            m = sizes.get("model", 1)
+            ok = getattr(cfg, "seq_shard_acts", False) and size % m == 0 and size >= m
+            spec.append("model" if ok else None)
+            if ok:
+                used.add("model")
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def head_label(cfg) -> Optional[str]:
+    """Sharding label for the attention-head dim under the current mode."""
+    return "tp" if cfg.attn_mode in ("head", "padded") else None
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    # reduction in fp32, elementwise multiply in input dtype: keeps XLA from
+    # hoisting a full fp32 copy of the remat-saved residual stack out of the
+    # backward loop (observed on the 512-device dry-run: 2x activation memory)
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return x * inv.astype(x.dtype) * p["scale"]
+
+
+def init_layernorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    out = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    return out * p["scale"] + p["bias"]
+
+
+def apply_norm(kind: str, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def init_norm(kind: str, d: int, dtype):
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (llama half-split; ``rotary_dim`` < head_dim
+# gives the partial/2d-rotary used by ChatGLM).
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, rotary_dim: int, theta: float):
+    dim = rotary_dim // 2
+    return 1.0 / (theta ** (np.arange(0, dim, dtype=np.float32) * 2.0 / rotary_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               rotary_dim: Optional[int] = None) -> jnp.ndarray:
+    """x: (B, S, ..., Dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    rd = rotary_dim or dh
+    freqs = jnp.asarray(rope_freqs(dh, rd, theta))  # (rd/2,)
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    angles = pos[..., None] * freqs  # (B, S, rd/2)
+    extra = x.ndim - 3
+    for _ in range(extra):
+        angles = angles[:, :, None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    x1, x2 = x_rot[..., : rd // 2], x_rot[..., rd // 2:]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype), x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+def init_attention(key, cfg, dtype):
+    """Q/O padded to cfg.padded_heads (zero rows keep the math exact)."""
+    d, H, Hp, KV, Dh = (cfg.d_model, cfg.n_heads, cfg.padded_heads,
+                        cfg.n_kv_heads, cfg.hd)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    wq = dense_init(k1, d, (H, Dh), dtype)
+    wo = normal(k4, (H, Dh, d), 1.0 / np.sqrt(H * Dh), dtype)
+    if Hp != H:
+        wq = jnp.concatenate([wq, jnp.zeros((d, Hp - H, Dh), dtype)], axis=1)
+        wo = jnp.concatenate([wo, jnp.zeros((Hp - H, Dh, d), dtype)], axis=0)
+    return {
+        "wq": wq,
+        "wk": dense_init(k2, d, (KV, Dh), dtype),
+        "wv": dense_init(k3, d, (KV, Dh), dtype),
+        "wo": wo,
+    }
+
+
+def qkv(p, x, cfg):
+    """Project to q:(B,S,Hp,Dh) and unexpanded k/v:(B,S,KV,Dh)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    hl = head_label(cfg)
+    q = constrain(q, cfg, ("batch", None, hl, None))
+    k = constrain(k, cfg, ("batch", None, None, None))
+    v = constrain(v, cfg, ("batch", None, None, None))
+    return q, k, v
+
+
+def expand_kv(k: jnp.ndarray, cfg, decode: bool = False) -> jnp.ndarray:
+    """(B,S,KV,Dh) -> (B,S,Hp,Dh) static GQA gather (padded heads map to
+    their group's kv head; their q rows are zero so they contribute nothing
+    after wo).
+
+    ``decode=True``: keep the *sequence* dim sharded over the model axis
+    (long-context decode streams the cache; heads are replicated) instead of
+    re-sharding heads — re-sharding would all-gather the whole cache every
+    step."""
+    idx = jnp.asarray(cfg.kv_head_map())
+    out = jnp.take(k, idx, axis=2)
+    if decode:
+        return constrain(out, cfg, ("batch", "tp", None, None))
+    return constrain(out, cfg, ("batch", None, head_label(cfg), None))
+
+
+def residual_dims(cfg, seq_len: int):
+    """Residual-stream constraint labels. Decode (seq==1): shard d_model
+    over the data axis so weight-stationary contractions all-reduce tiny
+    activations instead of all-gathering FSDP-sharded weights every step
+    (measured: 55 MB/step/device of gathers on mamba2 long_500k)."""
+    if seq_len == 1:
+        return ("batch", None, "fsdp")
+    return ("batch", "sp", None)
+
+
+def out_proj(p, ctx, cfg):
+    """ctx: (B,S,Hp,Dh) -> (B,S,d)."""
+    y = jnp.einsum("bshe,hed->bsd", ctx, p["wo"])
+    return constrain(y, cfg, residual_dims(cfg, y.shape[1]))
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0,
+                   q_offset: int = 0) -> jnp.ndarray:
+    """Dense-scores attention; q,k,v: (B,S,H,Dh) (kv pre-expanded)."""
+    Dh = q.shape[-1]
+    scale = 1.0 / np.sqrt(Dh)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    Sq, Sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p_attn = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p_attn, v)
+
+
+def _flash_block(q_blk, k_blk, v_blk, carry, q_lo, k_lo, causal, window, scale,
+                 k_valid=None):
+    """One online-softmax block update; shared by fori-loop and unrolled
+    (cost-probe) variants and mirrored by the Pallas kernel."""
+    m, l, acc = carry
+    s = jnp.einsum("bqhd,bshd->bhqs", q_blk, k_blk).astype(jnp.float32) * scale
+    Qc, Kc = q_blk.shape[1], k_blk.shape[1]
+    qpos = q_lo + jnp.arange(Qc)[:, None]
+    kpos = k_lo + jnp.arange(Kc)[None, :]
+    mask = jnp.ones((Qc, Kc), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    if k_valid is not None:
+        mask &= kpos < k_valid  # padded keys
+    s = jnp.where(mask, s, -jnp.inf)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+    l_new = l * corr + p.sum(axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bhqs,bshd->bhqd", p.astype(v_blk.dtype), v_blk).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_chunk: int = 1024, k_chunk: int = 1024,
+                      q_offset: int = 0, unroll: bool = False) -> jnp.ndarray:
+    """Flash-style attention over KV chunks with causal block skipping.
+
+    ``unroll=True`` (cost-probe mode) replaces lax loops with python loops
+    and *static* block skipping so compiled FLOPs are exact.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    # pad to chunk multiples (vlm: 4096 text + 256 patches = 4352). Padded
+    # keys sit at positions >= Sk so the `kpos < Sk` term masks them; padded
+    # query rows are sliced off at the end.
+    Sq_pad = -(-Sq // q_chunk) * q_chunk
+    Sk_pad = -(-Sk // k_chunk) * k_chunk
+    if Sq_pad != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_pad - Sq), (0, 0), (0, 0)))
+    if Sk_pad != Sk:
+        k = jnp.pad(k, ((0, 0), (0, Sk_pad - Sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sk_pad - Sk), (0, 0), (0, 0)))
+    Sq_orig, Sk_orig = Sq, Sk
+    Sq, Sk = Sq_pad, Sk_pad
+    nq = Sq // q_chunk
+    nk = Sk // k_chunk
+    scale = 1.0 / np.sqrt(Dh)
+
+    def init_carry():
+        return (jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((B, H, q_chunk), jnp.float32),
+                jnp.zeros((B, H, q_chunk, Dh), jnp.float32))
+
+    def finish(carry):
+        m, l, acc = carry
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)  # (B,H,Qc,Dh)
+
+    if unroll:
+        outs = []
+        for qi in range(nq):
+            q_blk = q[:, qi * q_chunk:(qi + 1) * q_chunk]
+            q_lo = qi * q_chunk + q_offset
+            hi = min((q_lo + q_chunk + k_chunk - 1) // k_chunk, nk) if causal else nk
+            lo = max((q_lo - window + 1) // k_chunk, 0) if window else 0
+            carry = init_carry()
+            for j in range(lo, hi):
+                carry = _flash_block(
+                    q_blk, k[:, j * k_chunk:(j + 1) * k_chunk],
+                    v[:, j * k_chunk:(j + 1) * k_chunk],
+                    carry, q_lo, j * k_chunk, causal, window, scale,
+                    k_valid=None if Sk_orig == Sk else Sk_orig)
+            outs.append(finish(carry))
+        out = jnp.stack(outs, axis=2)  # (B,H,nq,Qc,Dh)
+    else:
+        def one_q_chunk(qi):
+            q_blk = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+            q_lo = qi * q_chunk + q_offset
+
+            def body(j, carry):
+                k_blk = jax.lax.dynamic_slice_in_dim(k, j * k_chunk, k_chunk, 1)
+                v_blk = jax.lax.dynamic_slice_in_dim(v, j * k_chunk, k_chunk, 1)
+                return _flash_block(q_blk, k_blk, v_blk, carry, q_lo,
+                                    j * k_chunk, causal, window, scale,
+                                    k_valid=None if Sk_orig == Sk else Sk_orig)
+
+            hi = jnp.minimum((q_lo + q_chunk + k_chunk - 1) // k_chunk,
+                             nk) if causal else nk
+            lo = jnp.maximum((q_lo - window + 1) // k_chunk, 0) if window else 0
+            return finish(jax.lax.fori_loop(lo, hi, body, init_carry()))
+
+        outs = jax.lax.map(one_q_chunk, jnp.arange(nq))  # (nq,B,H,Qc,Dh)
+        out = jnp.moveaxis(outs, 0, 2)  # (B,H,nq,Qc,Dh)
+    out = out.reshape(B, H, Sq, Dh)[:, :, :Sq_orig]
+    return jnp.einsum("bhqd->bqhd", out)
+
+
+def decode_attention(q, k_cache, v_cache, pos) -> jnp.ndarray:
+    """Single-token attention. q: (B,1,H,Dh); caches (B,S,H,Dh) expanded;
+    pos: (B,). Entries at positions > pos are masked."""
+    Dh = q.shape[-1]
+    scale = 1.0 / np.sqrt(Dh)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k_cache).astype(jnp.float32) * scale
+    S = k_cache.shape[1]
+    mask = jnp.arange(S)[None, :] <= pos[:, None]  # (B,S)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p_attn = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p_attn, v_cache)
+
+
+def attention_any(q, k, v, *, causal: bool, window: int = 0, impl: str = "auto",
+                  q_offset: int = 0, chunk: int = 1024,
+                  unroll: bool = False) -> jnp.ndarray:
+    if impl == "auto":
+        # dense scores at 4k+ cost O(S²) fp32 temp (6 GiB/layer for mistral
+        # train_4k); flash-chunking keeps the working set at chunk²
+        impl = "chunked" if max(q.shape[1], k.shape[1]) > 2048 else "full"
+    if impl == "pallas":
+        from repro.kernels import ops as KOPS
+        return KOPS.flash_attention(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset)
+    if impl == "full":
+        return full_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_chunk=chunk, k_chunk=chunk, q_offset=q_offset,
+                             unroll=unroll)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):
+    if act in ("silu", "geglu"):  # gated: gate + up + down
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"wg": dense_init(k1, d_model, (d_ff,), dtype),
+                "wu": dense_init(k2, d_model, (d_ff,), dtype),
+                "wd": dense_init(k3, d_ff, (d_model,), dtype)}
+    k1, k2 = jax.random.split(key, 2)
+    return {"w1": dense_init(k1, d_model, (d_ff,), dtype),
+            "w2": dense_init(k2, d_ff, (d_model,), dtype)}
+
+
+def apply_mlp(p, x, act: str, cfg=None):
+    if act in ("silu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+        if cfg is not None:
+            g = constrain(g, cfg, ("batch", None, "tp"))
+            u = constrain(u, cfg, ("batch", None, "tp"))
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        y = jnp.einsum("bsf,fd->bsd", g * u, p["wd"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+        if cfg is not None:
+            h = constrain(h, cfg, ("batch", None, "tp"))
+        y = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    if cfg is not None:
+        y = constrain(y, cfg, residual_dims(cfg, y.shape[1]))
+    return y
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int, dtype, tie: bool):
+    k1, k2 = jax.random.split(key)
+    # GPT-style 0.02 std keeps tied-unembed logits O(1) at init
+    p = {"embed": normal(k1, (vocab, d_model), 0.02, dtype)}
+    if not tie:
+        p["unembed"] = dense_init(k2, d_model, (vocab,), dtype)
+    return p
+
+
+def embed(p, tokens, scale_by_dim: bool = False):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if scale_by_dim:
+        x = x * np.sqrt(x.shape[-1]).astype(x.dtype)
+    return x
+
+
+def unembed(p, x, true_vocab: Optional[int] = None, cfg=None):
+    if "unembed" in p:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"])
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embed"])
+    if cfg is not None:
+        logits = constrain(logits, cfg, ("batch", None, "tp"))
+    if true_vocab is not None and logits.shape[-1] != true_vocab:
+        pad = logits.shape[-1] - true_vocab
+        neg = jnp.full((pad,), -1e9, logits.dtype)
+        logits = logits.at[..., true_vocab:].set(neg)
+    return logits
+
+
+def cross_entropy(logits, labels, cfg=None):
+    """Vocab-sharded-safe cross entropy: logsumexp − one-hot contraction.
+
+    ``take_along_axis`` over a model-sharded vocab dim would all-gather the
+    full fp32 logits (12.9 GiB/device for smollm train_4k); the select+reduce
+    form keeps everything on the local vocab shard with one small psum.
+    """
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)  # (B,S)
+    V = logits.shape[-1]
+    hit = jnp.arange(V)[None, None, :] == labels[..., None]
+    if cfg is not None:
+        hit = constrain(hit, cfg, ("batch", None, "tp"))  # match logits shard
+    label_logit = jnp.sum(jnp.where(hit, logits.astype(jnp.float32), 0.0), axis=-1)
+    return (lse - label_logit).mean()

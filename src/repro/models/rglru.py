@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+The recurrent block: two branches from the input — a GeLU gate branch and a
+(causal conv1d -> RG-LRU) branch — merged multiplicatively and projected out.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t)            # recurrence gate
+    i_t = sigmoid(W_x x_t)            # input gate
+    a_t = exp(-c · softplus(Λ) · r_t) # c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses `lax.associative_scan` (log-depth — maps well to TPU);
+decode is a single O(1) step, so recurrentgemma runs ``long_500k``.
+Gate projections are plain dense (the paper uses block-diagonal; noted in
+DESIGN.md as an adaptation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.module import dense_init, normal
+
+_C = 8.0
+
+
+def lru_width_of(cfg) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rglru_block(key, cfg, dtype):
+    d, w = cfg.d_model, lru_width_of(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_gate_branch": dense_init(ks[0], d, (w,), dtype),
+        "w_rec_branch": dense_init(ks[1], d, (w,), dtype),
+        "conv_w": normal(ks[2], (cfg.conv_kernel, w), 0.2, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[3], w, (w,), dtype),
+        "w_x": dense_init(ks[4], w, (w,), dtype),
+        # Λ init so a ∈ (0.9, 0.999) at r=1 (griffin init)
+        "lam": jnp.asarray(np.log(np.expm1(
+            -np.log(np.random.default_rng(0).uniform(0.9, 0.999, size=w)) / _C)),
+            jnp.float32),
+        "wo": dense_init(ks[5], w, (d,), dtype),
+    }
+
+
+def _gates(p, xw):
+    r = jax.nn.sigmoid(jnp.einsum("...i,ij->...j", xw, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...i,ij->...j", xw, p["w_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # (.., w) negative
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * xw.astype(jnp.float32)
+    return a, gated_x
+
+
+def _conv_train(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+
+
+def apply_rglru_train(p, x, cfg) -> jnp.ndarray:
+    """x: (B,S,d) -> (B,S,d)."""
+    from repro.models.layers import constrain
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"]))
+    gate = constrain(gate, cfg, ("batch", None, "tp"))
+    xw = jnp.einsum("bsd,dw->bsw", x, p["w_rec_branch"])
+    xw = constrain(_conv_train(xw, p["conv_w"], p["conv_b"]), cfg,
+                   ("batch", None, "tp"))
+    a, gx = _gates(p, xw)  # (B,S,w) fp32
+
+    # h_t = a_t h_{t-1} + gx_t  via associative scan on (a, b) pairs
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    y = (h.astype(x.dtype) * gate)
+    y_out = jnp.einsum("bsw,wd->bsd", y, p["wo"])
+    from repro.models.layers import residual_dims
+    return constrain(y_out, cfg, residual_dims(cfg, y_out.shape[1]))
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    w = lru_width_of(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype),
+    }
+
+
+def apply_rglru_decode(p, x, cache, cfg) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B,1,d) single-token step."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"]))
+    xw = jnp.einsum("bsd,dw->bsw", x, p["w_rec_branch"])  # (B,1,w)
+    window = jnp.concatenate([cache["conv"], xw], axis=1)  # (B,K,w)
+    xw = (jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + p["conv_b"])[:, None, :]
+    a, gx = _gates(p, xw)  # (B,1,w)
+    h = a[:, 0] * cache["h"] + gx[:, 0]
+    y = (h[:, None, :].astype(x.dtype) * gate)
+    from repro.models.layers import constrain, residual_dims
+    out = jnp.einsum("bsw,wd->bsd", y, p["wo"])
+    out = constrain(out, cfg, residual_dims(cfg, out.shape[1]))
+    return out, {"h": h, "conv": window[:, 1:, :]}
+
+
+def rglru_sequential_reference(p, x, cfg) -> jnp.ndarray:
+    """Step-by-step oracle for the associative-scan train path."""
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"]))
+    xw = jnp.einsum("bsd,dw->bsw", x, p["w_rec_branch"])
+    xw = _conv_train(xw, p["conv_w"], p["conv_b"])
+    a, gx = _gates(p, xw)
+    h = jnp.zeros((B, a.shape[-1]), jnp.float32)
+    hs = []
+    for t in range(S):
+        h = a[:, t] * h + gx[:, t]
+        hs.append(h)
+    hseq = jnp.stack(hs, axis=1)
+    y = hseq.astype(x.dtype) * gate
+    return jnp.einsum("bsw,wd->bsd", y, p["wo"])

@@ -1,0 +1,66 @@
+"""PPO actor-critic networks with policy/value parameter sharing (§2.1, §8.2).
+
+The paper shares parameters between the policy and value networks to keep
+one model update inside a single network frame (§10, [12, 26, 47]): a shared
+MLP trunk with two small heads. Small by design — the whole update fits a
+jumbo frame.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.module import dense_init
+
+Params = Dict[str, Any]
+
+
+def init_actor_critic(key, cfg) -> Params:
+    ks = jax.random.split(key, cfg.n_hidden_layers + 3)
+    trunk = []
+    d_in = cfg.obs_dim
+    for i in range(cfg.n_hidden_layers):
+        trunk.append({"w": dense_init(ks[i], d_in, (cfg.hidden,), jnp.float32,
+                                      std=np.sqrt(2.0 / d_in)),
+                      "b": jnp.zeros((cfg.hidden,), jnp.float32)})
+        d_in = cfg.hidden
+    return {
+        "trunk": trunk,
+        "policy": {"w": dense_init(ks[-2], d_in, (cfg.n_actions,), jnp.float32,
+                                   std=0.01),
+                   "b": jnp.zeros((cfg.n_actions,), jnp.float32)},
+        "value": {"w": dense_init(ks[-1], d_in, (1,), jnp.float32, std=1.0),
+                  "b": jnp.zeros((1,), jnp.float32)},
+    }
+
+
+def apply_actor_critic(params: Params, obs: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """obs: (..., obs_dim) -> (logits (..., A), value (...,))."""
+    h = obs
+    for lyr in params["trunk"]:
+        h = jnp.tanh(h @ lyr["w"] + lyr["b"])
+    logits = h @ params["policy"]["w"] + params["policy"]["b"]
+    value = (h @ params["value"]["w"] + params["value"]["b"])[..., 0]
+    return logits, value
+
+
+def flatten_params(params: Params) -> Tuple[jnp.ndarray, Any]:
+    """Params -> flat vector (one 'model update' / packet payload)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    flat = jnp.concatenate([x.reshape(-1) for x in leaves])
+    shapes = [x.shape for x in leaves]
+    return flat, (treedef, shapes)
+
+
+def unflatten_params(flat: jnp.ndarray, spec) -> Params:
+    treedef, shapes = spec
+    leaves, off = [], 0
+    for s in shapes:
+        n = int(np.prod(s)) if s else 1
+        leaves.append(flat[off:off + n].reshape(s))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)

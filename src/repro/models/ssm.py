@@ -1,0 +1,224 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training uses the chunked dual form: quadratic attention-like computation
+inside chunks of ``ssm_chunk`` tokens plus a linear inter-chunk state
+recurrence (lax.scan). Decode carries the (B, H, P, N) state and the causal
+conv buffer — O(1) per token, which is why mamba2 runs the ``long_500k``
+shape.
+
+Projections are kept as separate matrices (wz/wx/wB/wC/wdt) instead of one
+fused in_proj so each output can carry its own sharding (channels on the
+``model`` axis, dt/B/C replicated).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.module import dense_init, normal
+
+
+def ssm_dims(cfg) -> Dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return dict(
+        d_inner=d_inner,
+        nheads=d_inner // cfg.ssm_headdim,
+        headdim=cfg.ssm_headdim,
+        dstate=cfg.ssm_state,
+        ngroups=cfg.ssm_groups,
+        conv_dim=d_inner + 2 * cfg.ssm_groups * cfg.ssm_state,
+        kernel=cfg.conv_kernel,
+    )
+
+
+def init_ssm_block(key, cfg, dtype):
+    dm = ssm_dims(cfg)
+    d, di, H, N, G = cfg.d_model, dm["d_inner"], dm["nheads"], dm["dstate"], dm["ngroups"]
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], d, (di,), dtype),
+        "wx": dense_init(ks[1], d, (di,), dtype),
+        "wB": dense_init(ks[2], d, (G * N,), dtype),
+        "wC": dense_init(ks[3], d, (G * N,), dtype),
+        "wdt": dense_init(ks[4], d, (H,), dtype),
+        "conv_w": normal(ks[5], (dm["kernel"], dm["conv_dim"]), 0.2, dtype),
+        "conv_b": jnp.zeros((dm["conv_dim"],), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "wo": dense_init(ks[6], di, (d,), dtype),
+    }
+
+
+def _causal_conv_train(xBC, w, b):
+    """Depthwise causal conv over time. xBC: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    h = (y * jax.nn.silu(z)).astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + eps)
+    return (h * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _project(p, x, cfg):
+    from repro.models.layers import constrain
+    dm = ssm_dims(cfg)
+    z = constrain(jnp.einsum("bsd,di->bsi", x, p["wz"]), cfg,
+                  ("batch", None, "tp"))
+    xi = constrain(jnp.einsum("bsd,di->bsi", x, p["wx"]), cfg,
+                   ("batch", None, "tp"))
+    Bp = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cp = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    return z, xi, Bp, Cp, dt, dm
+
+
+def apply_ssm_train(p, x, cfg) -> jnp.ndarray:
+    """x: (B,S,d) -> (B,S,d). Chunked SSD with inter-chunk scan."""
+    B, S, _ = x.shape
+    z, xi, Bp, Cp, dt, dm = _project(p, x, cfg)
+    H, P, N, G = dm["nheads"], dm["headdim"], dm["dstate"], dm["ngroups"]
+    # conv over concat(x, B, C) channels (mamba2 layout), then split
+    xBC = jnp.concatenate([xi, Bp, Cp], axis=-1)
+    xBC = _causal_conv_train(xBC, p["conv_w"], p["conv_b"])
+    xi, Bp, Cp = jnp.split(xBC, [dm["d_inner"], dm["d_inner"] + G * N], axis=-1)
+
+    Q = min(cfg.ssm_chunk, S)
+    S_pad = int(np.ceil(S / Q)) * Q
+    if S_pad != S:
+        # pad with identity steps: dt=0 => decay exp(0)=1, contribution 0
+        pad = ((0, 0), (0, S_pad - S), (0, 0))
+        xi = jnp.pad(xi, pad)
+        Bp = jnp.pad(Bp, pad)
+        Cp = jnp.pad(Cp, pad)
+        dt = jnp.pad(dt, ((0, 0), (0, S_pad - S), (0, 0)))
+        dt = dt * (jnp.arange(S_pad) < S)[None, :, None]
+    NC = S_pad // Q
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    from repro.models.layers import constrain
+    xh = constrain(xi.reshape(B, NC, Q, H, P), cfg,
+                   ("batch", None, None, None, "tp")).astype(jnp.float32)
+    Bh = Bp.reshape(B, NC, Q, N).astype(jnp.float32)  # G=1
+    Ch = Cp.reshape(B, NC, Q, N).astype(jnp.float32)
+    dth = dt.reshape(B, NC, Q, H)
+    dA = dth * A  # (B,NC,Q,H) log-decay per step
+    cum = jnp.cumsum(dA, axis=2)  # inclusive
+
+    # ---- intra-chunk (quadratic in Q) ----
+    # L[i,j] = exp(cum_i - cum_j) for j <= i. Mask BEFORE the exp: the j > i
+    # entries are positive and would overflow, poisoning gradients via 0·inf.
+    Lmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    Ldec = jnp.exp(jnp.where(causal, Lmat, -1e30))
+    Smat = jnp.einsum("bcin,bcjn->bcij", Ch, Bh)  # (B,NC,Q,Q)
+    xdt = xh * dth[..., None]  # (B,NC,Q,H,P)
+    Y = jnp.einsum("bcij,bcijh,bcjhp->bcihp", Smat, Ldec, xdt)
+
+    # ---- chunk states + inter-chunk recurrence ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,NC,Q,H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end * dth, Bh, xh)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,NC,H)
+
+    def scan_body(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h  # emit state *before* this chunk
+
+    states = constrain(states, cfg, ("batch", None, None, "tp", None))
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, h_prev = jax.lax.scan(scan_body, h0,
+                             (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,NC,H,P,N) state entering chunk
+
+    Y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", Ch, h_prev, jnp.exp(cum))
+    Y = Y + Y_off + p["D"][None, None, None, :, None] * xh
+    y = Y.reshape(B, S_pad, dm["d_inner"])[:, :S].astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    from repro.models.layers import constrain, residual_dims
+    y_out = jnp.einsum("bsi,id->bsd", y, p["wo"])
+    return constrain(y_out, cfg, residual_dims(cfg, y_out.shape[1]))
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) state update per token
+# ---------------------------------------------------------------------------
+def init_ssm_cache(cfg, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    dm = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, dm["kernel"] - 1, dm["conv_dim"]), dtype),
+        "state": jnp.zeros((batch, dm["nheads"], dm["headdim"], dm["dstate"]),
+                           jnp.float32),
+    }
+
+
+def apply_ssm_decode(p, x, cache, cfg) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B,1,d); cache: conv (B,K-1,C), state (B,H,P,N)."""
+    B = x.shape[0]
+    z, xi, Bp, Cp, dt, dm = _project(p, x, cfg)
+    H, P, N, G = dm["nheads"], dm["headdim"], dm["dstate"], dm["ngroups"]
+    xBC = jnp.concatenate([xi, Bp, Cp], axis=-1)  # (B,1,C)
+    window = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    xi, Bp, Cp = jnp.split(conv_out, [dm["d_inner"], dm["d_inner"] + G * N], axis=-1)
+
+    A = -jnp.exp(p["A_log"])
+    dt1 = dt[:, 0]  # (B,H)
+    from repro.models.layers import constrain
+    # pin the headdim (P) shard through the reshape: H=24 doesn't divide the
+    # model axis so XLA would replicate xh and ALL-GATHER the fp32 SSD state
+    # (1.57 MB/layer/step measured on long_500k) before re-sharding it at
+    # the cache boundary
+    xh = constrain(xi.reshape(B, H, P), cfg, ("batch", None, "tp")).astype(jnp.float32)
+    Bv = Bp[:, 0].astype(jnp.float32)  # (B,N)
+    Cv = Cp[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt1 * A)  # (B,H)
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, xh, Bv)
+    state = constrain(state, cfg, ("batch", None, "tp", None))
+    y = jnp.einsum("bn,bhpn->bhp", Cv, state) + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, dm["d_inner"]).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    from repro.models.layers import constrain, residual_dims
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"])
+    out = constrain(out, cfg, residual_dims(cfg, out.shape[1]))
+    new_cache = {"conv": window[:, 1:, :], "state": state}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle (for tests): straight recurrence over time
+# ---------------------------------------------------------------------------
+def ssm_sequential_reference(p, x, cfg) -> jnp.ndarray:
+    B, S, _ = x.shape
+    cache = init_ssm_cache(cfg, B, x.dtype)
+    # replicate the train path's conv (full-sequence) then step the SSD
+    z, xi, Bp, Cp, dt, dm = _project(p, x, cfg)
+    xBC = jnp.concatenate([xi, Bp, Cp], axis=-1)
+    xBC = _causal_conv_train(xBC, p["conv_w"], p["conv_b"])
+    H, P, N, G = dm["nheads"], dm["headdim"], dm["dstate"], dm["ngroups"]
+    xi, Bp, Cp = jnp.split(xBC, [dm["d_inner"], dm["d_inner"] + G * N], axis=-1)
+    A = -jnp.exp(p["A_log"])
+    ys = []
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    for t in range(S):
+        xh = xi[:, t].reshape(B, H, P).astype(jnp.float32)
+        dt_t = dt[:, t]
+        decay = jnp.exp(dt_t * A)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt_t, xh, Bp[:, t].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cp[:, t].astype(jnp.float32), state)
+        y = y + p["D"][None, :, None] * xh
+        ys.append(y.reshape(B, dm["d_inner"]))
+    y = jnp.stack(ys, axis=1).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    return jnp.einsum("bsi,id->bsd", y, p["wo"])

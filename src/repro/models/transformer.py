@@ -1,0 +1,441 @@
+"""Unified decoder-only LM covering the dense / moe / ssm / hybrid / vlm
+families with one code path.
+
+Layers are grouped into repeating *periods* (dense: period=1 ["attn"];
+recurrentgemma: period=3 ["rec","rec","attn"]) and the stack is a
+`lax.scan` over stacked period params — the HLO stays one-period-sized
+regardless of depth (88-layer mistral compiles like a 1-layer model), and
+per-period remat gives the activation-checkpoint policy. Leftover layers
+(38 = 12·3 + 2) are unrolled after the scan.
+
+Three entry points per architecture:
+  * ``lm_forward``    — full-sequence logits (training / eval);
+  * ``lm_prefill``    — forward + cache construction (inference prefill);
+  * ``lm_decode_step``— one token against the cache (inference decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+from repro.models.module import dense_init, dtype_of, run_periods
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Layer plan / periods
+# --------------------------------------------------------------------------
+def layer_plan(cfg: ArchConfig) -> List[str]:
+    if cfg.family in ("dense", "vlm"):
+        return ["attn"] * cfg.n_layers
+    if cfg.family == "moe":
+        return ["moe"] * cfg.n_layers
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec",)
+        return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+    raise ValueError(cfg.family)
+
+
+def period_len(cfg: ArchConfig) -> int:
+    return len(cfg.block_pattern) if cfg.block_pattern else 1
+
+
+def split_plan(cfg: ArchConfig) -> Tuple[List[str], int, List[str]]:
+    """(period_plan, n_scanned_periods, tail_plan)."""
+    plan = layer_plan(cfg)
+    per = period_len(cfg)
+    n_full = cfg.n_layers // per
+    tail = plan[n_full * per:]
+    return plan[:per], n_full, tail
+
+
+# --------------------------------------------------------------------------
+# Per-layer init
+# --------------------------------------------------------------------------
+def _attn_window(cfg: ArchConfig, kind: str) -> int:
+    # hybrid archs use *local* attention in their attention layers
+    return cfg.window if (cfg.family == "hybrid" and kind == "attn") else 0
+
+
+def init_layer(key, cfg: ArchConfig, kind: str) -> Params:
+    dt = dtype_of(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "moe"):
+        p = {
+            "ln1": L.init_norm(cfg.norm, d, dt),
+            "attn": L.init_attention(ks[0], cfg, dt),
+            "ln2": L.init_norm(cfg.norm, d, dt),
+        }
+        if kind == "moe":
+            p["moe"] = MOE.init_moe(ks[1], d, cfg.d_ff, cfg.n_experts,
+                                    cfg.act, dt, cfg.dense_residual)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, cfg.act, dt)
+        return p
+    if kind == "rec":
+        return {
+            "ln1": L.init_norm(cfg.norm, d, dt),
+            "rec": RG.init_rglru_block(ks[0], cfg, dt),
+            "ln2": L.init_norm(cfg.norm, d, dt),
+            "mlp": L.init_mlp(ks[1], d, cfg.d_ff, cfg.act, dt),
+        }
+    if kind == "ssm":
+        return {
+            "ln1": L.init_norm(cfg.norm, d, dt),
+            "ssm": SSM.init_ssm_block(ks[0], cfg, dt),
+        }
+    raise ValueError(kind)
+
+
+def padded_vocab(cfg: ArchConfig, multiple: int) -> int:
+    v = cfg.vocab
+    return int(np.ceil(v / multiple)) * multiple
+
+
+def init_lm(key, cfg: ArchConfig, vocab_pad_multiple: int = 1) -> Params:
+    dt = dtype_of(cfg.dtype)
+    period_plan, n_full, tail = split_plan(cfg)
+    k_embed, k_layers, k_tail, k_extra = jax.random.split(key, 4)
+    vocab = padded_vocab(cfg, vocab_pad_multiple)
+    params: Params = {
+        "embedding": L.init_embedding(k_embed, vocab, cfg.d_model, dt,
+                                      cfg.tie_embeddings),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, dt),
+    }
+
+    def init_period(k):
+        kk = jax.random.split(k, len(period_plan))
+        return {f"sub_{i}": init_layer(kk[i], cfg, kind)
+                for i, kind in enumerate(period_plan)}
+
+    params["layers"] = jax.vmap(init_period)(jax.random.split(k_layers, n_full))
+    if tail:
+        kk = jax.random.split(k_tail, len(tail))
+        params["tail"] = {f"layer_{i}": init_layer(kk[i], cfg, kind)
+                          for i, kind in enumerate(tail)}
+    if cfg.family == "vlm":
+        params["patch_proj"] = dense_init(k_extra, cfg.d_model, (cfg.d_model,), dt)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Per-layer apply (train / prefill / decode)
+# --------------------------------------------------------------------------
+def _rope(cfg: ArchConfig, x, positions):
+    if cfg.rope_style == "none":
+        return x
+    rd = cfg.hd // 2 if cfg.rope_style == "partial" else cfg.hd
+    return L.apply_rope(x, positions, cfg.rope_theta, rotary_dim=rd)
+
+
+def apply_layer_train(p, x, cfg: ArchConfig, kind: str, positions) -> jnp.ndarray:
+    if kind in ("attn", "moe"):
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        q, k, v = L.qkv(p["attn"], h, cfg)
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+        ke, ve = L.expand_kv(k, cfg), L.expand_kv(v, cfg)
+        # unroll=True: the fori-loop causal skip is not reverse-mode
+        # differentiable; the static python-loop variant is, with the same
+        # exact causal block skipping (train is always <= 4k here)
+        ctx = L.attention_any(q, ke, ve, causal=True,
+                              window=_attn_window(cfg, kind),
+                              impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                              unroll=True)
+        x = x + L.out_proj(p["attn"], ctx, cfg)
+        h = L.apply_norm(cfg.norm, p["ln2"], x)
+        if kind == "moe":
+            x = x + MOE.apply_moe(p["moe"], h, cfg)
+        else:
+            x = x + L.apply_mlp(p["mlp"], h, cfg.act, cfg)
+        return x
+    if kind == "rec":
+        x = x + RG.apply_rglru_train(p["rec"], L.apply_norm(cfg.norm, p["ln1"], x), cfg)
+        x = x + L.apply_mlp(p["mlp"], L.apply_norm(cfg.norm, p["ln2"], x), cfg.act, cfg)
+        return x
+    if kind == "ssm":
+        return x + SSM.apply_ssm_train(p["ssm"], L.apply_norm(cfg.norm, p["ln1"], x), cfg)
+    raise ValueError(kind)
+
+
+# ---- caches ---------------------------------------------------------------
+def init_layer_cache(cfg: ArchConfig, kind: str, batch: int, cache_len: int):
+    dt = dtype_of(cfg.dtype)
+    if kind in ("attn", "moe"):
+        S = cfg.window if _attn_window(cfg, kind) else cache_len
+        shape = (batch, S, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if kind == "rec":
+        return RG.init_rglru_cache(cfg, batch, dt)
+    if kind == "ssm":
+        return SSM.init_ssm_cache(cfg, batch, dt)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ArchConfig, batch: int, cache_len: int) -> Params:
+    period_plan, n_full, tail = split_plan(cfg)
+
+    def one_period(_):
+        return {f"sub_{i}": init_layer_cache(cfg, kind, batch, cache_len)
+                for i, kind in enumerate(period_plan)}
+
+    caches: Params = {"layers": jax.vmap(one_period)(jnp.arange(n_full))}
+    if tail:
+        caches["tail"] = {f"layer_{i}": init_layer_cache(cfg, kind, batch, cache_len)
+                          for i, kind in enumerate(tail)}
+    return caches
+
+
+def apply_layer_prefill(p, x, cfg: ArchConfig, kind: str, positions):
+    """Full-sequence forward that also returns the decode cache."""
+    if kind in ("attn", "moe"):
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        q, k, v = L.qkv(p["attn"], h, cfg)
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+        window = _attn_window(cfg, kind)
+        ctx = L.attention_any(q, L.expand_kv(k, cfg), L.expand_kv(v, cfg),
+                              causal=True, window=window,
+                              impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                              unroll=cfg.unroll_loops)
+        x = x + L.out_proj(p["attn"], ctx, cfg)
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+        if kind == "moe":
+            x = x + MOE.apply_moe(p["moe"], h2, cfg)
+        else:
+            x = x + L.apply_mlp(p["mlp"], h2, cfg.act, cfg)
+        S = k.shape[1]
+        if window:
+            # ring buffer of exactly `window` slots (slot = pos % W) holding
+            # the last min(S, W) positions; decode masks unwritten slots
+            keep = min(S, window)
+            pos_keep = S - keep + jnp.arange(keep)
+            slots = pos_keep % window
+            kc = jnp.zeros((k.shape[0], window) + k.shape[2:], k.dtype)
+            vc = jnp.zeros_like(kc)
+            kc = kc.at[:, slots].set(jnp.take(k, pos_keep, axis=1))
+            vc = vc.at[:, slots].set(jnp.take(v, pos_keep, axis=1))
+            cache = {"k": kc, "v": vc}
+        else:
+            cache = {"k": k, "v": v}
+        return x, cache
+    if kind == "rec":
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        y, cache = _rglru_prefill(p["rec"], h, cfg)
+        x = x + y
+        x = x + L.apply_mlp(p["mlp"], L.apply_norm(cfg.norm, p["ln2"], x), cfg.act, cfg)
+        return x, cache
+    if kind == "ssm":
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        y, cache = _ssm_prefill(p["ssm"], h, cfg)
+        return x + y, cache
+    raise ValueError(kind)
+
+
+def _rglru_prefill(p, h, cfg):
+    """Train forward + final recurrent state (sequential tail recomputed)."""
+    y = RG.apply_rglru_train(p, h, cfg)
+    # final state: run the gates once more to extract h_T via scan tail
+    gate_in = jnp.einsum("bsd,dw->bsw", h, p["w_rec_branch"])
+    xw = RG._conv_train(gate_in, p["conv_w"], p["conv_b"])
+    a, gx = RG._gates(p, xw)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    K = cfg.conv_kernel
+    cache = {"h": hseq[:, -1], "conv": gate_in[:, -(K - 1):, :]}
+    return y, cache
+
+
+def _ssm_prefill(p, h, cfg):
+    y = SSM.apply_ssm_train(p, h, cfg)
+    # final SSD state: rerun projections and accumulate (cheap relative to train)
+    z, xi, Bp, Cp, dt, dm = SSM._project(p, h, cfg)
+    xBC = jnp.concatenate([xi, Bp, Cp], axis=-1)
+    conv_tail = xBC[:, -(cfg.conv_kernel - 1):, :]
+    xBC = SSM._causal_conv_train(xBC, p["conv_w"], p["conv_b"])
+    G, N = dm["ngroups"], dm["dstate"]
+    xi, Bp, Cp = jnp.split(xBC, [dm["d_inner"], dm["d_inner"] + G * N], axis=-1)
+    B_, S, _ = h.shape
+    H, P = dm["nheads"], dm["headdim"]
+    A = -jnp.exp(p["A_log"])
+    dA = dt * A  # (B,S,H)
+    cum = jnp.cumsum(dA, axis=1)
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # (B,S,H)
+    xh = xi.reshape(B_, S, H, P).astype(jnp.float32)
+    state = jnp.einsum("bsh,bsn,bshp->bhpn", decay_to_end * dt,
+                       Bp.astype(jnp.float32), xh)
+    return y, {"conv": conv_tail, "state": state}
+
+
+def apply_layer_decode(p, x, cache, pos, cfg: ArchConfig, kind: str):
+    """x: (B,1,d); pos: (B,) absolute position of the incoming token."""
+    if kind in ("attn", "moe"):
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        q, k, v = L.qkv(p["attn"], h, cfg)
+        q = _rope(cfg, q, pos[:, None])
+        k = _rope(cfg, k, pos[:, None])
+        window = _attn_window(cfg, kind)
+        B = x.shape[0]
+        # decode attention streams the (seq-sharded) cache with replicated
+        # heads; re-shard q accordingly (heads->model would force a cache
+        # all-gather every step)
+        q = L.constrain(q, cfg, ("batch", None, None, None))
+        if window:
+            slot = pos % window
+            kc = cache["k"].at[jnp.arange(B), slot].set(k[:, 0])
+            vc = cache["v"].at[jnp.arange(B), slot].set(v[:, 0])
+            W = kc.shape[1]
+            j = jnp.arange(W)[None, :]
+            stored_pos = pos[:, None] - jnp.mod(pos[:, None] - j, W)
+            ctx = _masked_decode_attn(q, L.expand_kv(kc, cfg, decode=True),
+                                      L.expand_kv(vc, cfg, decode=True),
+                                      stored_pos >= 0)
+        else:
+            kc = cache["k"].at[jnp.arange(B), pos].set(k[:, 0])
+            vc = cache["v"].at[jnp.arange(B), pos].set(v[:, 0])
+            ctx = L.decode_attention(q, L.expand_kv(kc, cfg, decode=True),
+                                     L.expand_kv(vc, cfg, decode=True), pos)
+        x = x + L.out_proj(p["attn"], ctx, cfg)
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+        if kind == "moe":
+            x = x + MOE.apply_moe(p["moe"], h2, cfg)
+        else:
+            x = x + L.apply_mlp(p["mlp"], h2, cfg.act, cfg)
+        return x, {"k": kc, "v": vc}
+    if kind == "rec":
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        y, cache = RG.apply_rglru_decode(p["rec"], h, cache, cfg)
+        x = x + y
+        x = x + L.apply_mlp(p["mlp"], L.apply_norm(cfg.norm, p["ln2"], x), cfg.act, cfg)
+        return x, cache
+    if kind == "ssm":
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        y, cache = SSM.apply_ssm_decode(p["ssm"], h, cache, cfg)
+        return x + y, cache
+    raise ValueError(kind)
+
+
+def _masked_decode_attn(q, k_cache, v_cache, valid):
+    Dh = q.shape[-1]
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k_cache).astype(jnp.float32)
+    s = s / np.sqrt(Dh)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p_attn = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p_attn, v_cache)
+
+
+# --------------------------------------------------------------------------
+# Model-level entry points
+# --------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ArchConfig, tokens, patches=None):
+    x = L.embed(params["embedding"], tokens, scale_by_dim=cfg.embed_scale)
+    if cfg.family == "vlm":
+        assert patches is not None, "vlm needs stub patch embeddings"
+        img = jnp.einsum("bpd,de->bpe", patches.astype(x.dtype),
+                         params["patch_proj"])
+        x = jnp.concatenate([img, x], axis=1)
+    return L.constrain(x, cfg, L.residual_dims(cfg, x.shape[1]))
+
+
+def lm_forward(params, tokens, cfg: ArchConfig, patches=None) -> jnp.ndarray:
+    """Training/eval forward -> logits over the *text* positions."""
+    period_plan, n_full, tail_plan = split_plan(cfg)
+    x = _embed_inputs(params, cfg, tokens, patches)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def period_body(carry, pp):
+        h = carry
+        for i, kind in enumerate(period_plan):
+            h = apply_layer_train(pp[f"sub_{i}"], h, cfg, kind, positions)
+        return h, None
+
+    x, _ = run_periods(period_body, x, params["layers"], cfg=cfg)
+    for i, kind in enumerate(tail_plan):
+        x = apply_layer_train(params["tail"][f"layer_{i}"], x, cfg, kind, positions)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.family == "vlm":
+        x = x[:, -tokens.shape[1]:, :]
+    return L.unembed(params["embedding"], x, true_vocab=cfg.vocab, cfg=cfg)
+
+
+def lm_prefill(params, tokens, cfg: ArchConfig, patches=None):
+    period_plan, n_full, tail_plan = split_plan(cfg)
+    x = _embed_inputs(params, cfg, tokens, patches)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def period_body(carry, pp):
+        h = carry
+        caches = {}
+        for i, kind in enumerate(period_plan):
+            h, c = apply_layer_prefill(pp[f"sub_{i}"], h, cfg, kind, positions)
+            caches[f"sub_{i}"] = c
+        return h, caches
+
+    x, stacked_caches = run_periods(period_body, x, params["layers"],
+                                    cfg=cfg)
+    caches: Params = {"layers": stacked_caches}
+    if tail_plan:
+        caches["tail"] = {}
+        for i, kind in enumerate(tail_plan):
+            x, c = apply_layer_prefill(params["tail"][f"layer_{i}"], x, cfg,
+                                       kind, positions)
+            caches["tail"][f"layer_{i}"] = c
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.family == "vlm":
+        x = x[:, -tokens.shape[1]:, :]
+    logits = L.unembed(params["embedding"], x[:, -1:, :], true_vocab=cfg.vocab,
+                       cfg=cfg)
+    return logits, caches
+
+
+def lm_decode_step(params, caches, token, pos, cfg: ArchConfig):
+    """token: (B,) int32; pos: (B,) absolute position. Returns (logits, caches)."""
+    period_plan, n_full, tail_plan = split_plan(cfg)
+    x = L.embed(params["embedding"], token[:, None], scale_by_dim=cfg.embed_scale)
+
+    def period_body(carry, inp):
+        h = carry
+        pp, pc = inp
+        new_pc = {}
+        for i, kind in enumerate(period_plan):
+            h, c = apply_layer_decode(pp[f"sub_{i}"], h, pc[f"sub_{i}"], pos,
+                                      cfg, kind)
+            new_pc[f"sub_{i}"] = c
+        return h, new_pc
+
+    x, new_stacked = run_periods(period_body, x,
+                                 (params["layers"], caches["layers"]), cfg=cfg)
+    new_caches: Params = {"layers": new_stacked}
+    if tail_plan:
+        new_caches["tail"] = {}
+        for i, kind in enumerate(tail_plan):
+            x, c = apply_layer_decode(params["tail"][f"layer_{i}"], x,
+                                      caches["tail"][f"layer_{i}"], pos, cfg, kind)
+            new_caches["tail"][f"layer_{i}"] = c
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.unembed(params["embedding"], x, true_vocab=cfg.vocab, cfg=cfg)
+    return logits[:, 0, :], new_caches
+
+
+def lm_loss(params, batch, cfg: ArchConfig) -> jnp.ndarray:
+    logits = lm_forward(params, batch["tokens"], cfg,
+                        patches=batch.get("patches"))
+    return L.cross_entropy(logits, batch["labels"], cfg)

@@ -1,0 +1,64 @@
+"""Gradient compression for the update path (paper §10 future work, here a
+first-class feature): top-k sparsification with error feedback, and int8
+linear quantization. Keeps a model update inside one network frame — the
+constraint Olaf's no-fragmentation design imposes (§10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification (+ error feedback residual)
+# ---------------------------------------------------------------------------
+def topk_compress(g: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Flat gradient -> (indices (k,), values (k,)) of the largest-|.| entries."""
+    mag = jnp.abs(g)
+    vals, idx = jax.lax.top_k(mag, k)
+    return idx.astype(jnp.int32), g[idx]
+
+
+def topk_decompress(idx: jnp.ndarray, vals: jnp.ndarray, dim: int) -> jnp.ndarray:
+    return jnp.zeros((dim,), vals.dtype).at[idx].set(vals)
+
+
+class ErrorFeedback:
+    """Residual accumulator: what top-k drops is carried to the next round."""
+
+    def __init__(self, dim: int) -> None:
+        self.residual = np.zeros((dim,), np.float32)
+
+    def compress(self, g: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        corrected = g + self.residual
+        idx = np.argpartition(np.abs(corrected), -k)[-k:]
+        vals = corrected[idx]
+        self.residual = corrected.copy()
+        self.residual[idx] = 0.0
+        return idx.astype(np.int32), vals.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# int8 linear quantization
+# ---------------------------------------------------------------------------
+def int8_quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def wire_bits(dim: int, *, topk: Optional[int] = None,
+              int8: bool = False) -> int:
+    """Bits on the wire for one update (drives Olaf packet sizing)."""
+    if topk is not None:
+        per = 32 + (8 if int8 else 32)  # index + value
+        return topk * per + 32
+    return dim * (8 if int8 else 32) + 32

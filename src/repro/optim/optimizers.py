@@ -1,0 +1,91 @@
+"""Optimizers with shard-friendly state (no optax dependency).
+
+Adam/AdamW state (m, v) is fp32 and lives on the same shards as its
+parameter (FSDP dims in the param PartitionSpec => ZeRO-style optimizer
+state sharding for free). ``scale_by_trust`` and gradient clipping are
+composable flags rather than a transform chain — deliberately small.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0  # global-norm clip; 0 disables
+    momentum: float = 0.9  # sgd
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init_opt_state(params, cfg: OptConfig) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if cfg.kind == "adamw":
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(zeros, params),
+                        v=jax.tree.map(zeros, params))
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params), v=None)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(params, grads, state: OptState, cfg: OptConfig
+                  ) -> Tuple[Any, OptState]:
+    if cfg.grad_clip > 0:
+        gn = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    step = state.step + 1
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+            if cfg.weight_decay:
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, OptState(step=step, m=m, v=v)
+    # sgd + momentum
+    m = jax.tree.map(lambda m_, g: cfg.momentum * m_ + g.astype(jnp.float32),
+                     state.m, grads)
+    new_params = jax.tree.map(
+        lambda p, m_: (p.astype(jnp.float32) - cfg.lr * m_).astype(p.dtype),
+        params, m)
+    return new_params, OptState(step=step, m=m, v=None)
+
+
+def opt_state_pspecs(param_specs, cfg: OptConfig) -> OptState:
+    """Optimizer-state PartitionSpecs mirror the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+    is_spec = lambda x: isinstance(x, P)
+    if cfg.kind == "adamw":
+        return OptState(step=P(),
+                        m=jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec),
+                        v=jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec))
+    return OptState(step=P(), m=param_specs, v=None)

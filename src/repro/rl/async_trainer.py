@@ -1,0 +1,160 @@
+"""End-to-end asynchronous distributed DRL over the OLAF network (§2.1+§8.2).
+
+Virtual-time discrete-event simulation of the full system: real JAX PPO
+gradients are computed when a worker's (heterogeneous) compute interval
+elapses; the update packet traverses the simulated network (FIFO or
+OlafQueue accelerator, optional worker-side transmission control); the PS
+applies the paper's reward-gated averaging rule and multicasts the new
+global weights + queue feedback back to the cluster.
+
+This is the reproduction vehicle for Figs. 2/3/7/8: the same trainer runs
+with ``queue='olaf' | 'fifo'`` and different link capacities.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.olaf_ppo import PPOConfig
+from repro.core.netsim import Link, NetworkSimulator, SimCfg, SwitchCfg, WorkerCfg
+from repro.core.txctl import TxControlConfig
+from repro.models.rlnets import (apply_actor_critic, flatten_params,
+                                 init_actor_critic, unflatten_params)
+from repro.optim.async_rules import ParameterServer, PSConfig
+from repro.rl import ppo
+from repro.rl.env import make_env
+
+
+@dataclasses.dataclass
+class AsyncTrainConfig:
+    env: str = "cartpole"
+    n_clusters: int = 2
+    workers_per_cluster: int = 2
+    n_updates_per_worker: int = 30
+    queue: str = "olaf"  # olaf | fifo
+    queue_slots: int = 8
+    out_gbps: float = 1e-5  # constrained accelerator uplink
+    base_interval: float = 0.05  # mean compute time per worker iteration
+    heterogeneity: float = 0.5  # worker speed spread (paper: heterogeneous)
+    reward_threshold: Optional[float] = None  # queue-side gating
+    tx_control: Optional[TxControlConfig] = None
+    ps: PSConfig = dataclasses.field(default_factory=PSConfig)
+    ppo: PPOConfig = dataclasses.field(default_factory=PPOConfig)
+    n_envs: int = 4
+    local_lr: float = 5e-3  # worker-side local step while awaiting ACK
+    seed: int = 0
+    horizon: float = 1e9
+
+
+@dataclasses.dataclass
+class AsyncTrainResult:
+    sim_result: object
+    ps: ParameterServer
+    final_params: dict
+    reward_curve: List[Tuple[float, float]]  # (virtual time, r_i applied)
+    eval_rewards: List[float]
+    time_to_n_updates: Dict[int, float]
+
+    @property
+    def final_reward(self) -> float:
+        tail = [r for _, r in self.reward_curve[-10:]]
+        return float(np.mean(tail)) if tail else float("-inf")
+
+
+class AsyncDRLTrainer:
+    def __init__(self, cfg: AsyncTrainConfig) -> None:
+        self.cfg = cfg
+        env = make_env(cfg.env)
+        self.env = env
+        ppo_cfg = dataclasses.replace(
+            cfg.ppo, obs_dim=env.obs_dim, n_actions=env.n_actions)
+        self.ppo_cfg = ppo_cfg
+        key = jax.random.key(cfg.seed)
+        params0 = init_actor_critic(key, ppo_cfg)
+        flat0, self.spec = flatten_params(params0)
+        self.ps = ParameterServer(np.asarray(flat0), cfg.ps)
+        n_workers = cfg.n_clusters * cfg.workers_per_cluster
+        self.worker_params = {i: params0 for i in range(n_workers)}
+        self.worker_keys = {i: jax.random.key(cfg.seed * 7919 + i)
+                            for i in range(n_workers)}
+        self.deliveries_per_worker: Dict[int, int] = {i: 0 for i in range(n_workers)}
+        self.reward_curve: List[Tuple[float, float]] = []
+        self.time_to_n: Dict[int, float] = {}
+        rng = np.random.default_rng(cfg.seed)
+
+        workers = []
+        for i in range(n_workers):
+            speed = 1.0 + cfg.heterogeneity * rng.uniform(-1, 1)
+            workers.append(WorkerCfg(
+                worker_id=i, cluster_id=i % cfg.n_clusters,
+                ingress_switch="ACC",
+                gen_interval=cfg.base_interval * speed, gen_jitter=0.3,
+                n_updates=cfg.n_updates_per_worker,
+                size_bits=int(32 * flat0.size + 32)))
+        sw = SwitchCfg("ACC", queue=cfg.queue, queue_slots=cfg.queue_slots,
+                       uplink=Link(cfg.out_gbps * 1e9), next_hop=None,
+                       reward_threshold=cfg.reward_threshold)
+        self.sim_cfg = SimCfg(
+            switches=[sw], workers=workers, horizon=cfg.horizon,
+            tx_control=cfg.tx_control, seed=cfg.seed,
+            payload_fn=self._make_payload,
+            on_deliver=self._on_deliver, on_ack=self._on_ack)
+
+    # -- worker side --------------------------------------------------------
+    def _make_payload(self, now: float, worker_id: int):
+        self.worker_keys[worker_id], sub = jax.random.split(
+            self.worker_keys[worker_id])
+        params = self.worker_params[worker_id]
+        grads, mean_reward, _ = ppo.worker_iteration(
+            params, sub, env=self.env, cfg=self.ppo_cfg, n_envs=self.cfg.n_envs)
+        # worker keeps training locally until the new global model arrives
+        self.worker_params[worker_id] = ppo.local_update(
+            params, grads, self.cfg.local_lr)
+        flat, _ = flatten_params(grads)
+        return np.asarray(flat, np.float32), float(mean_reward)
+
+    # -- PS side --------------------------------------------------------------
+    def _on_deliver(self, now: float, upd):
+        w = self.ps.on_update(now, upd.payload, upd.reward, upd.gen_time)
+        if self.ps.reward_log and self.ps.reward_log[-1][2]:
+            self.reward_curve.append((now, upd.reward))
+        self.deliveries_per_worker[upd.worker_id] += 1
+        n_done = min(self.deliveries_per_worker.values())
+        if n_done not in self.time_to_n:
+            self.time_to_n[n_done] = now
+        return np.asarray(w, np.float32)
+
+    def _on_ack(self, now: float, worker_id: int, payload):
+        if payload is not None:
+            self.worker_params[worker_id] = unflatten_params(
+                jax.numpy.asarray(payload), self.spec)
+
+    # -- run ------------------------------------------------------------------
+    def run(self, eval_every: int = 0) -> AsyncTrainResult:
+        sim = NetworkSimulator(self.sim_cfg)
+        res = sim.run()
+        final = unflatten_params(jax.numpy.asarray(self.ps.w, np.float32),
+                                 self.spec)
+        evals: List[float] = []
+        if eval_every:
+            evals.append(ppo.evaluate(final, self.env, jax.random.key(123)))
+        return AsyncTrainResult(
+            sim_result=res, ps=self.ps, final_params=final,
+            reward_curve=self.reward_curve, eval_rewards=evals,
+            time_to_n_updates=self.time_to_n)
+
+
+def time_to_reward_speedup(cfg_base: AsyncTrainConfig, n_target: int
+                           ) -> Tuple[float, float, float]:
+    """Fig. 7 metric: FIFO time / Olaf time to deliver n_target updates from
+    every worker."""
+    t = {}
+    for q in ("fifo", "olaf"):
+        cfg = dataclasses.replace(cfg_base, queue=q)
+        res = AsyncDRLTrainer(cfg).run()
+        t[q] = res.time_to_n_updates.get(
+            n_target, max(res.time_to_n_updates.values(), default=np.inf))
+    return t["fifo"], t["olaf"], t["fifo"] / t["olaf"]

@@ -1,0 +1,119 @@
+"""Pure-JAX RL environments (vmap-able, lax.scan-friendly).
+
+Two environments:
+  * ``CartPole`` — fast-converging control task used by tests/benchmarks;
+  * ``LanderLite`` — a simplified LunarLander (8-dim obs, 4 actions: noop /
+    left / main / right thruster), matching the paper's workload shape
+    (LunarLander-v3, §2.1) without the Box2D dependency.
+
+API: ``env.reset(key) -> state``; ``env.step(state, action) ->
+(state, obs, reward, done)``; ``env.obs(state)``. States are flat arrays so
+everything vmaps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CartPole:
+    obs_dim: int = 4
+    n_actions: int = 2
+    gravity: float = 9.8
+    masscart: float = 1.0
+    masspole: float = 0.1
+    length: float = 0.5
+    force_mag: float = 10.0
+    dt: float = 0.02
+    x_limit: float = 2.4
+    theta_limit: float = 12 * 3.14159 / 180
+
+    def reset(self, key) -> jnp.ndarray:
+        return jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
+
+    def obs(self, state) -> jnp.ndarray:
+        return state
+
+    def step(self, state, action):
+        x, x_dot, th, th_dot = state
+        force = jnp.where(action == 1, self.force_mag, -self.force_mag)
+        total_m = self.masscart + self.masspole
+        pm_l = self.masspole * self.length
+        costh, sinth = jnp.cos(th), jnp.sin(th)
+        temp = (force + pm_l * th_dot ** 2 * sinth) / total_m
+        th_acc = (self.gravity * sinth - costh * temp) / (
+            self.length * (4.0 / 3.0 - self.masspole * costh ** 2 / total_m))
+        x_acc = temp - pm_l * th_acc * costh / total_m
+        x = x + self.dt * x_dot
+        x_dot = x_dot + self.dt * x_acc
+        th = th + self.dt * th_dot
+        th_dot = th_dot + self.dt * th_acc
+        state = jnp.stack([x, x_dot, th, th_dot])
+        done = (jnp.abs(x) > self.x_limit) | (jnp.abs(th) > self.theta_limit)
+        reward = jnp.where(done, 0.0, 1.0)
+        return state, state, reward, done
+
+
+@dataclasses.dataclass(frozen=True)
+class LanderLite:
+    """Simplified 2-D lander: land near the origin with low speed, upright."""
+
+    obs_dim: int = 8
+    n_actions: int = 4  # noop, left thruster, main engine, right thruster
+    gravity: float = -1.0
+    main_power: float = 2.0
+    side_power: float = 0.6
+    dt: float = 0.05
+
+    def reset(self, key) -> jnp.ndarray:
+        k1, k2 = jax.random.split(key)
+        x = jax.random.uniform(k1, (), minval=-0.5, maxval=0.5)
+        vx = jax.random.uniform(k2, (), minval=-0.2, maxval=0.2)
+        # state: x, y, vx, vy, theta, omega, left_contact, right_contact
+        return jnp.array([x, 1.4, vx, 0.0, 0.0, 0.0, 0.0, 0.0])
+
+    def obs(self, state) -> jnp.ndarray:
+        return state
+
+    def step(self, state, action):
+        x, y, vx, vy, th, om = state[0], state[1], state[2], state[3], state[4], state[5]
+        main = (action == 2).astype(jnp.float32)
+        left = (action == 1).astype(jnp.float32)
+        right = (action == 3).astype(jnp.float32)
+        # thrust along the body axis; side thrusters rotate
+        ax = -jnp.sin(th) * self.main_power * main
+        ay = jnp.cos(th) * self.main_power * main + self.gravity
+        om = om + self.dt * (left - right) * self.side_power * 4.0
+        th = th + self.dt * om
+        vx = vx + self.dt * ax
+        vy = vy + self.dt * ay
+        x = x + self.dt * vx
+        y = y + self.dt * vy
+
+        landed = (y <= 0.0) & (jnp.abs(vy) < 0.5) & (jnp.abs(th) < 0.35)
+        crashed = (y <= 0.0) & ~landed
+        out = jnp.abs(x) > 1.5
+        done = landed | crashed | out
+
+        # shaped reward (gym-style potential shaping)
+        shaping = (-1.2 * jnp.sqrt(x * x + y * y)
+                   - 1.0 * jnp.sqrt(vx * vx + vy * vy)
+                   - 0.8 * jnp.abs(th))
+        prev_shaping = (-1.2 * jnp.sqrt(state[0] ** 2 + state[1] ** 2)
+                        - 1.0 * jnp.sqrt(state[2] ** 2 + state[3] ** 2)
+                        - 0.8 * jnp.abs(state[4]))
+        reward = (shaping - prev_shaping) - 0.03 * main - 0.003 * (left + right)
+        reward = reward + jnp.where(landed, 10.0, 0.0) + jnp.where(crashed, -10.0, 0.0)
+
+        contact = jnp.where(y <= 0.0, 1.0, 0.0)
+        new_state = jnp.array([x, jnp.maximum(y, 0.0), vx, vy, th, om,
+                               contact, contact])
+        return new_state, new_state, reward, done
+
+
+def make_env(name: str):
+    return {"cartpole": CartPole(), "lander": LanderLite()}[name]

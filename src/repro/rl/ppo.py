@@ -1,0 +1,129 @@
+"""PPO (clipped surrogate) in pure JAX — the paper's training algorithm.
+
+One worker iteration = vectorized rollout (lax.scan over time, vmap over
+envs) -> GAE advantages -> clipped PPO loss -> gradient. The async system
+transmits the *gradient* plus the episode mean reward (paper §2.1: the
+update packet carries ``g_i`` and ``r_i``), so ``worker_iteration`` returns
+exactly that pair; applying updates is the PS's job.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rlnets import apply_actor_critic, flatten_params
+
+
+class Rollout(NamedTuple):
+    obs: jnp.ndarray  # (T, N, obs_dim)
+    actions: jnp.ndarray  # (T, N)
+    logp: jnp.ndarray  # (T, N)
+    values: jnp.ndarray  # (T, N)
+    rewards: jnp.ndarray  # (T, N)
+    dones: jnp.ndarray  # (T, N)
+    last_value: jnp.ndarray  # (N,)
+
+
+def collect_rollout(params, env, key, n_envs: int, rollout_len: int) -> Rollout:
+    k_reset, k_scan = jax.random.split(key)
+    states = jax.vmap(env.reset)(jax.random.split(k_reset, n_envs))
+
+    def step_fn(carry, key_t):
+        states = carry
+        obs = jax.vmap(env.obs)(states)
+        logits, values = apply_actor_critic(params, obs)
+        actions = jax.random.categorical(key_t, logits, axis=-1)
+        logp = jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                   actions[:, None], axis=-1)[:, 0]
+        new_states, _, rewards, dones = jax.vmap(env.step)(states, actions)
+        # auto-reset finished envs
+        reset_keys = jax.random.split(key_t, states.shape[0])
+        fresh = jax.vmap(env.reset)(reset_keys)
+        new_states = jnp.where(dones[:, None], fresh, new_states)
+        out = (obs, actions, logp, values, rewards, dones)
+        return new_states, out
+
+    keys = jax.random.split(k_scan, rollout_len)
+    states, (obs, actions, logp, values, rewards, dones) = jax.lax.scan(
+        step_fn, states, keys)
+    _, last_value = apply_actor_critic(params, jax.vmap(env.obs)(states))
+    return Rollout(obs, actions, logp, values, rewards, dones, last_value)
+
+
+def gae(rollout: Rollout, gamma: float, lam: float):
+    def body(carry, inp):
+        adv_next, v_next = carry
+        r, v, d = inp
+        nonterm = 1.0 - d
+        delta = r + gamma * v_next * nonterm - v
+        adv = delta + gamma * lam * nonterm * adv_next
+        return (adv, v), adv
+
+    (_, _), advs = jax.lax.scan(
+        body, (jnp.zeros_like(rollout.last_value), rollout.last_value),
+        (rollout.rewards, rollout.values, rollout.dones.astype(jnp.float32)),
+        reverse=True)
+    returns = advs + rollout.values
+    return advs, returns
+
+
+def ppo_loss(params, batch, cfg):
+    obs, actions, logp_old, advs, returns = batch
+    logits, values = apply_actor_critic(params, obs)
+    logp = jnp.take_along_axis(jax.nn.log_softmax(logits),
+                               actions[..., None], axis=-1)[..., 0]
+    ratio = jnp.exp(logp - logp_old)
+    advs_n = (advs - advs.mean()) / (advs.std() + 1e-8)
+    pg1 = ratio * advs_n
+    pg2 = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * advs_n
+    policy_loss = -jnp.minimum(pg1, pg2).mean()
+    value_loss = jnp.square(values - returns).mean()
+    ent = -(jax.nn.softmax(logits) * jax.nn.log_softmax(logits)).sum(-1).mean()
+    return policy_loss + cfg.value_coef * value_loss - cfg.entropy_coef * ent
+
+
+@functools.partial(jax.jit, static_argnames=("env", "cfg", "n_envs"))
+def worker_iteration(params, key, *, env, cfg, n_envs: int = 8
+                     ) -> Tuple[Any, jnp.ndarray, jnp.ndarray]:
+    """One async-worker step: rollout -> (gradient pytree, mean_reward, loss).
+
+    The gradient is what goes on the wire (paper: the update packet carries
+    g_i and the episode mean reward r_i).
+    """
+    rollout = collect_rollout(params, env, key, n_envs, cfg.rollout_len)
+    advs, returns = gae(rollout, cfg.gamma, cfg.gae_lambda)
+    batch = (rollout.obs, rollout.actions, rollout.logp, advs, returns)
+    loss, grads = jax.value_and_grad(ppo_loss)(params, batch, cfg)
+    # mean episodic reward proxy: sum of rewards / number of episodes
+    n_eps = jnp.maximum(rollout.dones.sum(), 1.0)
+    mean_reward = rollout.rewards.sum() / n_eps
+    return grads, mean_reward, loss
+
+
+def local_update(params, grads, lr: float):
+    """Worker-side local step (keeps training until the ACK returns)."""
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+
+def evaluate(params, env, key, n_envs: int = 16, horizon: int = 500) -> float:
+    """Deterministic-policy average return."""
+    states = jax.vmap(env.reset)(jax.random.split(key, n_envs))
+
+    def step_fn(carry, _):
+        states, total, alive = carry
+        obs = jax.vmap(env.obs)(states)
+        logits, _ = apply_actor_critic(params, obs)
+        actions = jnp.argmax(logits, axis=-1)
+        new_states, _, rewards, dones = jax.vmap(env.step)(states, actions)
+        total = total + rewards * alive
+        alive = alive * (1.0 - dones.astype(jnp.float32))
+        return (new_states, total, alive), None
+
+    (_, total, _), _ = jax.lax.scan(
+        step_fn, (states, jnp.zeros(n_envs), jnp.ones(n_envs)),
+        length=horizon)
+    return float(total.mean())

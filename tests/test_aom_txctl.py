@@ -1,0 +1,80 @@
+"""Tests for the Age-of-Model metric and the transmission controller."""
+import numpy as np
+import pytest
+
+from repro.core.aom import aom_trajectory, average_aom, jain_fairness, peak_aom
+from repro.core.txctl import QueueFeedback, TransmissionController, TxControlConfig
+
+
+class TestAoM:
+    def test_sawtooth_example(self):
+        # update generated at t=0 delivered at t=2; at t=3 gen, t=4 delivered
+        deliveries = [(2.0, 0.0), (4.0, 3.0)]
+        ts, age = aom_trajectory(deliveries, horizon=5.0)
+        # at t=2 the age jumps to 2-0=2; just before t=4 it is 4-0=4; after, 1
+        assert age[1] == pytest.approx(2.0)
+        assert age[2] == pytest.approx(2.0)
+        assert age[3] == pytest.approx(4.0)
+        assert age[4] == pytest.approx(1.0)
+        assert age[-1] == pytest.approx(2.0)  # 5 - 3
+
+    def test_average_decreases_with_fresher_updates(self):
+        stale = [(2.0, 0.0), (4.0, 0.5)]
+        fresh = [(2.0, 1.9), (4.0, 3.9)]
+        assert average_aom(fresh, 5.0) < average_aom(stale, 5.0)
+
+    def test_out_of_order_generation_does_not_rejuvenate(self):
+        # delivering an OLDER update must not decrease the PS freshness
+        base = [(2.0, 1.5)]
+        with_old = [(2.0, 1.5), (3.0, 0.2)]
+        assert average_aom(with_old, 5.0) >= average_aom(base, 5.0) - 1e-9
+
+    def test_peak_aom_formula(self):
+        # §6: Δp(k) = (D(k) − A(l))·1{D(k) < A(k+1)}
+        A = [1.0, 2.0, 6.0]
+        D = [1.5, 2.5, 6.5]  # all valid (D(k) < A(k+1))
+        peaks = peak_aom(A, D)
+        assert peaks[0] == pytest.approx(1.5)  # first: since t=0
+        assert peaks[1] == pytest.approx(2.5 - 1.0)
+        assert peaks[2] == pytest.approx(6.5 - 2.0)
+
+    def test_peak_aom_merged_update_skipped(self):
+        A = [1.0, 2.0, 3.0]
+        D = [2.5, 2.6, 3.5]  # D(0)=2.5 > A(1)=2.0 -> update 0 was merged
+        peaks = peak_aom(A, D)
+        assert peaks[0] == 0.0
+        assert peaks[1] == pytest.approx(2.6)  # first valid, since t=0
+
+
+class TestTxControl:
+    def mk(self, mode="fairness", thresh=0.4):
+        return TransmissionController(
+            TxControlConfig(delta_threshold=thresh, slope_mode=mode),
+            np.random.default_rng(0))
+
+    def test_no_feedback_sends(self):
+        assert self.mk().send_probability(0.0) == 1.0
+
+    def test_uncongested_sends_at_will(self):
+        c = self.mk()
+        c.on_ack(0.0, QueueFeedback(n_active_clusters=4, q_max=8, q_occupancy=2))
+        assert c.send_probability(0.1) == 1.0
+
+    def test_congested_base_rate(self):
+        c = self.mk()
+        c.on_ack(0.0, QueueFeedback(n_active_clusters=16, q_max=8, q_occupancy=8))
+        assert c.send_probability(0.1) == pytest.approx(0.5)
+
+    def test_stale_feedback_ramps_up(self):
+        c = self.mk(mode="urgency", thresh=0.4)
+        c.on_ack(0.0, QueueFeedback(n_active_clusters=16, q_max=8, q_occupancy=8))
+        p_fresh = c.send_probability(0.3)
+        p_stale = c.send_probability(1.0)  # Δ̂=1.0 > Δ̄_T=0.4
+        assert p_fresh == pytest.approx(0.5)
+        # f = (1/0.4)·(1.0−0.4) = 1.5 -> clamped to 1
+        assert p_stale == pytest.approx(1.0)
+
+    def test_probability_clamped(self):
+        c = self.mk(mode="fairness", thresh=0.1)
+        c.on_ack(0.0, QueueFeedback(n_active_clusters=100, q_max=1, q_occupancy=1))
+        assert 0.0 < c.send_probability(0.11) <= 1.0

@@ -1,0 +1,69 @@
+"""Integration tests for the discrete-event network simulator."""
+import numpy as np
+import pytest
+
+from repro.core.netsim import NetworkSimulator, microbench_cfg, multihop_cfg
+from repro.core.txctl import TxControlConfig
+
+
+def run(cfg):
+    return NetworkSimulator(cfg).run()
+
+
+class TestMicrobench:
+    def test_runs_and_counts_consistent(self):
+        res = run(microbench_cfg("olaf", out_gbps=20.0, n_updates=100))
+        assert res.generated == 27 * 100
+        assert res.sent == res.generated  # no tx control in microbench
+        # conservation: delivered raw + queue drops + still-in-flight == sent
+        assert res.raw_updates_delivered <= res.sent
+        assert res.received_at_ps <= res.raw_updates_delivered
+
+    def test_olaf_beats_fifo_on_loss(self):
+        fifo = run(microbench_cfg("fifo", out_gbps=20.0, n_updates=200))
+        olaf = run(microbench_cfg("olaf", out_gbps=20.0, n_updates=200))
+        assert olaf.loss_pct < fifo.loss_pct
+
+    def test_olaf_beats_fifo_on_aom(self):
+        fifo = run(microbench_cfg("fifo", out_gbps=20.0, n_updates=200))
+        olaf = run(microbench_cfg("olaf", out_gbps=20.0, n_updates=200))
+        assert olaf.avg_aom() < fifo.avg_aom()
+
+    def test_congestion_increases_aggregation(self):
+        hi = run(microbench_cfg("olaf", out_gbps=40.0, n_updates=200))
+        lo = run(microbench_cfg("olaf", out_gbps=5.0, n_updates=200))
+        # lower output capacity -> more combining per delivered packet
+        assert np.mean(lo.agg_counts) > np.mean(hi.agg_counts)
+
+    def test_olaf_queue_never_drops_when_clusters_fit(self):
+        # 4 clusters, 8 slots: the Olaf invariant guarantees zero drops
+        cfg = microbench_cfg("olaf", out_gbps=5.0, n_clusters=4,
+                             workers_per_cluster=4, n_updates=100)
+        res = run(cfg)
+        assert res.queue_stats["ACC"]["dropped"] == 0
+        assert res.loss_pct == pytest.approx(0.0, abs=1e-9)
+
+
+class TestMultihop:
+    def test_fifo_vs_olaf_loss_and_fairness(self):
+        # capacities scaled so the bottleneck is heavily congested
+        kw = dict(x1_gbps=2e-3, x2_gbps=2e-3, sw3_gbps=2e-3, horizon=20.0)
+        fifo = run(multihop_cfg("fifo", **kw))
+        olaf = run(multihop_cfg("olaf", **kw))
+        assert olaf.loss_pct < fifo.loss_pct
+        assert olaf.avg_aom() < fifo.avg_aom()
+        assert olaf.aom_fairness() >= fifo.aom_fairness() - 0.05
+
+    def test_txctl_improves_fairness_under_asymmetry(self):
+        kw = dict(interval_s1=0.1, interval_s2=0.3,
+                  x1_gbps=2e-3, x2_gbps=2e-3, sw3_gbps=2e-3, horizon=20.0)
+        olaf = run(multihop_cfg("olaf", **kw))
+        olaf_tc = run(multihop_cfg("olaf", tx_control=TxControlConfig(), **kw))
+        assert olaf_tc.aom_fairness() >= olaf.aom_fairness() - 0.02
+
+    def test_deterministic_given_seed(self):
+        kw = dict(x1_gbps=2e-3, x2_gbps=2e-3, sw3_gbps=2e-3, horizon=5.0, seed=3)
+        a = run(multihop_cfg("olaf", **kw))
+        b = run(multihop_cfg("olaf", **kw))
+        assert a.received_at_ps == b.received_at_ps
+        assert a.avg_aom() == pytest.approx(b.avg_aom())

@@ -1,0 +1,121 @@
+"""Unit tests for the OlafQueue (Algorithm 1 + §12.1 corner cases)."""
+import numpy as np
+import pytest
+
+from repro.core.aggregation import Update
+from repro.core.olaf_queue import PyFifoQueue, PyOlafQueue
+
+
+def mk(cluster, worker, t=0.0, reward=0.0, payload=None):
+    return Update(cluster_id=cluster, worker_id=worker, gen_time=t,
+                  reward=reward, payload=payload)
+
+
+class TestPyOlafQueue:
+    def test_append_then_fifo_order(self):
+        q = PyOlafQueue(capacity=4)
+        for c in range(3):
+            assert q.enqueue(mk(c, c, t=c))
+        assert [q.dequeue().cluster_id for _ in range(3)] == [0, 1, 2]
+        assert q.dequeue() is None
+
+    def test_at_most_one_update_per_cluster(self):
+        q = PyOlafQueue(capacity=8)
+        for i in range(5):
+            q.enqueue(mk(cluster=1, worker=i, t=i))
+        assert len(q) == 1  # all combined into one slot
+
+    def test_same_worker_replacement(self):
+        q = PyOlafQueue(capacity=4)
+        q.enqueue(mk(1, 7, t=0.0, payload=np.array([1.0])))
+        q.enqueue(mk(1, 7, t=1.0, payload=np.array([5.0])))  # same worker
+        out = q.dequeue()
+        assert out.gen_time == 1.0 and out.agg_count == 1
+        np.testing.assert_allclose(out.payload, [5.0])  # replaced, not merged
+        assert q.stats.replacements == 1
+
+    def test_cross_worker_aggregation_averages(self):
+        q = PyOlafQueue(capacity=4)
+        q.enqueue(mk(1, 1, t=0.0, payload=np.array([2.0])))
+        q.enqueue(mk(1, 2, t=1.0, payload=np.array([4.0])))
+        out = q.dequeue()
+        np.testing.assert_allclose(out.payload, [3.0])
+        assert out.agg_count == 2 and out.gen_time == 1.0
+
+    def test_aggregation_resets_replace_flag(self):
+        # paper: "replacement occurs iff two unaggregated models of the
+        # same worker meet in the queue"
+        q = PyOlafQueue(capacity=4)
+        q.enqueue(mk(1, 1, payload=np.array([1.0])))
+        q.enqueue(mk(1, 2, payload=np.array([3.0])))  # aggregate -> flag off
+        q.enqueue(mk(1, 1, payload=np.array([5.0])))  # same worker, but must AGGREGATE
+        out = q.dequeue()
+        assert out.agg_count == 3
+        np.testing.assert_allclose(out.payload, [3.0])  # mean(1,3,5)
+        assert q.stats.replacements == 0 and q.stats.aggregations == 2
+
+    def test_aggregation_inherits_queue_position(self):
+        q = PyOlafQueue(capacity=4)
+        q.enqueue(mk(0, 0, t=0))
+        q.enqueue(mk(1, 1, t=1))
+        q.enqueue(mk(0, 5, t=2))  # merges into the waiting cluster-0 slot
+        first = q.dequeue()
+        assert first.cluster_id == 0 and first.agg_count == 2
+
+    def test_drop_only_when_full_and_no_match(self):
+        q = PyOlafQueue(capacity=2)
+        assert q.enqueue(mk(0, 0))
+        assert q.enqueue(mk(1, 1))
+        assert not q.enqueue(mk(2, 2))  # full, new cluster -> drop
+        assert q.enqueue(mk(0, 9))  # full but cluster present -> combine
+        assert q.stats.dropped == 1
+
+    def test_reward_gating(self):
+        q = PyOlafQueue(capacity=4, reward_threshold=1.0)
+        q.enqueue(mk(1, 1, reward=0.0, payload=np.array([1.0])))
+        # comparable reward -> aggregate
+        q.enqueue(mk(1, 2, reward=0.5, payload=np.array([3.0])))
+        # much higher -> replace
+        q.enqueue(mk(1, 3, reward=5.0, payload=np.array([9.0])))
+        # much lower -> drop
+        assert not q.enqueue(mk(1, 4, reward=-5.0, payload=np.array([0.0])))
+        out = q.dequeue()
+        np.testing.assert_allclose(out.payload, [9.0])
+        assert q.stats.reward_drops == 1
+
+    def test_locked_head_gets_second_slot(self):
+        # §12.1: head in transmission cannot be combined; a second update of
+        # the same cluster coexists momentarily.
+        q = PyOlafQueue(capacity=4)
+        q.enqueue(mk(1, 1, t=0.0))
+        q.lock_head()
+        q.enqueue(mk(1, 1, t=1.0))
+        assert len(q) == 2
+        a = q.dequeue()
+        b = q.dequeue()
+        assert a.gen_time == 0.0 and b.gen_time == 1.0
+
+    def test_locked_head_combine_goes_to_second(self):
+        q = PyOlafQueue(capacity=4)
+        q.enqueue(mk(1, 1, t=0.0))
+        q.lock_head()
+        q.enqueue(mk(1, 2, t=1.0))
+        q.enqueue(mk(1, 3, t=2.0))  # combines with the *unlocked* second slot
+        assert len(q) == 2
+        q.dequeue()
+        out = q.dequeue()
+        assert out.agg_count == 2
+
+
+class TestPyFifoQueue:
+    def test_tail_drop(self):
+        q = PyFifoQueue(capacity=2)
+        assert q.enqueue(mk(0, 0)) and q.enqueue(mk(0, 1))
+        assert not q.enqueue(mk(0, 2))
+        assert q.stats.dropped == 1
+
+    def test_fifo_never_combines(self):
+        q = PyFifoQueue(capacity=8)
+        for i in range(5):
+            q.enqueue(mk(1, 1, t=i))
+        assert len(q) == 5

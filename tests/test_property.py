@@ -1,0 +1,130 @@
+"""Hypothesis property tests: system invariants of the OLAF core.
+
+Key invariants (paper §3/§4):
+  P1  at most one *unlocked* update per cluster in an OlafQueue;
+  P2  no information loss while the queue is not full: every sent update is
+      either delivered or subsumed into a delivered aggregate;
+  P3  the JAX jittable queue agrees with the python reference event-for-event;
+  P4  departure order: an aggregation never moves an update backwards;
+  P5  AoM sawtooth is non-negative whenever updates are generated after t0
+      and peaks bound the average.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import Update
+from repro.core.aom import aom_trajectory, average_aom, jain_fairness
+from repro.core.olaf_queue import (PyOlafQueue, jax_dequeue, jax_enqueue,
+                                   jax_queue_init)
+
+updates_strategy = st.lists(
+    st.tuples(
+        st.integers(min_value=0, max_value=4),   # cluster
+        st.integers(min_value=0, max_value=9),   # worker
+        st.floats(min_value=-2, max_value=2, allow_nan=False),  # reward
+    ),
+    min_size=1, max_size=40,
+)
+
+
+@given(updates_strategy, st.integers(min_value=1, max_value=8))
+@settings(max_examples=60, deadline=None)
+def test_p1_at_most_one_per_cluster(seq, capacity):
+    q = PyOlafQueue(capacity=capacity)
+    for i, (c, w, r) in enumerate(seq):
+        q.enqueue(Update(cluster_id=c, worker_id=w, gen_time=float(i), reward=r))
+    clusters = q.clusters()
+    assert len(clusters) == len(set(clusters))
+    assert len(q) <= capacity
+
+
+@given(updates_strategy)
+@settings(max_examples=60, deadline=None)
+def test_p2_no_loss_until_full(seq):
+    # capacity >= number of distinct clusters => zero drops, all updates
+    # retained (delivered or subsumed).
+    capacity = len({c for c, _, _ in seq})
+    q = PyOlafQueue(capacity=capacity)
+    for i, (c, w, r) in enumerate(seq):
+        assert q.enqueue(Update(cluster_id=c, worker_id=w, gen_time=float(i), reward=r))
+    assert q.stats.dropped == 0
+    # conservation: enqueued-as-new + combined events == total sent, and the
+    # sum of agg_counts of queue residents plus replaced-away updates == sent
+    total_agg = sum(u.agg_count for u in q._q)
+    assert total_agg + q.stats.replacements == len(seq)
+
+
+@given(updates_strategy, st.integers(min_value=1, max_value=8))
+@settings(max_examples=40, deadline=None)
+def test_p3_jax_queue_matches_python(seq, capacity):
+    import jax.numpy as jnp
+    py = PyOlafQueue(capacity=capacity)
+    jx = jax_queue_init(capacity, dim=2)
+    for i, (c, w, r) in enumerate(seq):
+        py.enqueue(Update(cluster_id=c, worker_id=w, gen_time=float(i),
+                          reward=r, payload=np.array([r, i], np.float32)))
+        jx = jax_enqueue(jx, jnp.int32(c), jnp.int32(w), jnp.float32(i),
+                         jnp.float32(r), jnp.array([r, i], jnp.float32))
+    # same multiset of resident clusters and same per-slot agg counts
+    py_state = sorted((u.cluster_id, u.agg_count) for u in py._q)
+    occ = np.asarray(jx.cluster) >= 0
+    jx_state = sorted(zip(np.asarray(jx.cluster)[occ].tolist(),
+                          np.asarray(jx.agg_count)[occ].tolist()))
+    assert py_state == jx_state
+    assert int(jx.n_agg) == py.stats.aggregations
+    assert int(jx.n_repl) == py.stats.replacements
+    assert int(jx.n_dropped) == py.stats.dropped
+    # drain both: identical departure order and payloads
+    while len(py):
+        want = py.dequeue()
+        jx, got = jax_dequeue(jx)
+        assert bool(got["valid"])
+        assert int(got["cluster"]) == want.cluster_id
+        np.testing.assert_allclose(np.asarray(got["payload"]), want.payload,
+                                   rtol=1e-5, atol=1e-6)
+    jx, got = jax_dequeue(jx)
+    assert not bool(got["valid"])
+
+
+@given(updates_strategy)
+@settings(max_examples=40, deadline=None)
+def test_p4_departure_order_monotone(seq):
+    q = PyOlafQueue(capacity=16)
+    for i, (c, w, r) in enumerate(seq):
+        q.enqueue(Update(cluster_id=c, worker_id=w, gen_time=float(i), reward=r))
+    seqs = [u.seq for u in q._q]
+    assert seqs == sorted(seqs)  # queue list is in departure order
+
+
+@given(st.lists(st.tuples(st.floats(0.01, 50.0), st.floats(0.0, 49.0)),
+                min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_p5_aom_sawtooth_properties(pairs):
+    # build a delivery log with D sorted, gen <= D
+    pairs = sorted((d, min(g, d)) for d, g in pairs)
+    horizon = pairs[-1][0] + 1.0
+    ts, age = aom_trajectory(pairs, horizon)
+    assert np.all(age >= -1e-9)
+    assert np.all(np.diff(ts) >= -1e-12)
+    avg = average_aom(pairs, horizon)
+    assert 0.0 <= avg <= max(age) + 1e-9
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=20))
+@settings(max_examples=60, deadline=None)
+def test_jain_bounds(xs):
+    f = jain_fairness(xs)
+    assert 1.0 / len(xs) - 1e-9 <= f <= 1.0 + 1e-9
+
+
+@given(st.integers(min_value=1, max_value=6), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_olaf_never_worse_occupancy_than_fifo(n_clusters, seed):
+    """Olaf's queue occupancy is bounded by #clusters; FIFO's is not."""
+    rng = np.random.default_rng(seed)
+    q = PyOlafQueue(capacity=64)
+    for i in range(100):
+        c = int(rng.integers(n_clusters))
+        q.enqueue(Update(cluster_id=c, worker_id=c * 10, gen_time=float(i), reward=0.0))
+    assert len(q) <= n_clusters

@@ -1,0 +1,137 @@
+"""RL stack tests: env dynamics, PPO learning, and the full async system."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.olaf_ppo import PPOConfig
+from repro.models.rlnets import (apply_actor_critic, flatten_params,
+                                 init_actor_critic, unflatten_params)
+from repro.rl import ppo
+from repro.rl.async_trainer import AsyncDRLTrainer, AsyncTrainConfig
+from repro.rl.env import CartPole, LanderLite
+
+
+class TestEnvs:
+    def test_cartpole_step_shapes(self):
+        env = CartPole()
+        s = env.reset(jax.random.key(0))
+        s2, obs, r, d = env.step(s, jnp.int32(1))
+        assert obs.shape == (4,) and r.shape == () and d.shape == ()
+
+    def test_cartpole_falls_without_control(self):
+        env = CartPole()
+        s = env.reset(jax.random.key(1)).at[2].set(0.1)
+        done = False
+        for _ in range(200):
+            s, _, _, d = env.step(s, jnp.int32(0))
+            done = done or bool(d)
+        assert done  # constant force topples the pole
+
+    def test_lander_descends(self):
+        env = LanderLite()
+        s = env.reset(jax.random.key(0))
+        y0 = float(s[1])
+        for _ in range(10):
+            s, _, _, _ = env.step(s, jnp.int32(0))
+        assert float(s[1]) < y0  # gravity pulls down without thrust
+
+    def test_lander_main_engine_thrusts_up(self):
+        env = LanderLite()
+        s = env.reset(jax.random.key(0))
+        for _ in range(5):
+            s, _, _, _ = env.step(s, jnp.int32(2))
+        s_free = env.reset(jax.random.key(0))
+        for _ in range(5):
+            s_free, _, _, _ = env.step(s_free, jnp.int32(0))
+        assert float(s[3]) > float(s_free[3])  # more upward velocity
+
+
+class TestPPO:
+    def test_worker_iteration_shapes_and_finiteness(self):
+        cfg = PPOConfig(obs_dim=4, n_actions=2, rollout_len=32)
+        params = init_actor_critic(jax.random.key(0), cfg)
+        grads, r, loss = ppo.worker_iteration(
+            params, jax.random.key(1), env=CartPole(), cfg=cfg, n_envs=4)
+        flat, _ = flatten_params(grads)
+        assert bool(jnp.all(jnp.isfinite(flat)))
+        assert bool(jnp.isfinite(loss))
+
+    def test_flatten_roundtrip(self):
+        cfg = PPOConfig()
+        params = init_actor_critic(jax.random.key(0), cfg)
+        flat, spec = flatten_params(params)
+        back = unflatten_params(flat, spec)
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.slow
+    def test_ppo_improves_cartpole(self):
+        """Sync sanity: repeated local PPO steps improve eval return."""
+        env = CartPole()
+        cfg = PPOConfig(obs_dim=4, n_actions=2, rollout_len=128, hidden=32)
+        params = init_actor_critic(jax.random.key(0), cfg)
+        base = ppo.evaluate(params, env, jax.random.key(9), n_envs=8,
+                            horizon=200)
+        key = jax.random.key(1)
+        for i in range(40):
+            key, sub = jax.random.split(key)
+            grads, r, _ = ppo.worker_iteration(params, sub, env=env, cfg=cfg,
+                                               n_envs=8)
+            params = ppo.local_update(params, grads, 3e-3)
+        trained = ppo.evaluate(params, env, jax.random.key(9), n_envs=8,
+                               horizon=200)
+        assert trained > base + 10, (base, trained)
+
+
+class TestAsyncSystem:
+    def _cfg(self, **kw):
+        base = AsyncTrainConfig(
+            env="cartpole", n_clusters=2, workers_per_cluster=2,
+            n_updates_per_worker=10, out_gbps=1e-5, base_interval=0.05,
+            ppo=PPOConfig(obs_dim=4, n_actions=2, rollout_len=32), n_envs=2)
+        return dataclasses.replace(base, **kw)
+
+    def test_end_to_end_runs_and_applies_updates(self):
+        res = AsyncDRLTrainer(self._cfg()).run()
+        assert res.ps.applied > 0
+        assert res.sim_result.received_at_ps > 0
+        assert np.all(np.isfinite(res.ps.w))
+
+    def test_olaf_delivers_more_info_than_fifo_under_congestion(self):
+        # heavy congestion: tiny output link, tiny queue
+        kw = dict(out_gbps=5e-4, queue_slots=2, n_updates_per_worker=15)
+        fifo = AsyncDRLTrainer(self._cfg(queue="fifo", **kw)).run()
+        olaf = AsyncDRLTrainer(self._cfg(queue="olaf", **kw)).run()
+        assert olaf.sim_result.loss_pct < fifo.sim_result.loss_pct
+
+    def test_worker_failure_tolerated(self):
+        """A dead worker (zero updates) must not stall the system — the PS
+        keeps making progress on the others (asynchrony = straggler/failure
+        tolerance, paper §2.1)."""
+        cfg = self._cfg()
+        trainer = AsyncDRLTrainer(cfg)
+        # kill worker 3: its generator produces nothing
+        trainer.sim_cfg.workers[3].n_updates = 0
+        res = trainer.run()
+        assert res.ps.applied > 0
+
+    def test_reward_gating_rejects_regressions(self):
+        from repro.optim.async_rules import ParameterServer, PSConfig
+        ps = ParameterServer(np.zeros(4), PSConfig(lr=0.1))
+        ps.on_update(0.0, np.ones(4), reward=1.0, gen_time=0.0)
+        w_after_first = ps.w.copy()
+        ps.on_update(1.0, np.full(4, 100.0), reward=0.2, gen_time=0.9)
+        np.testing.assert_array_equal(ps.w, w_after_first)  # rejected
+        assert ps.rejected == 1
+
+    def test_staleness_aware_step_shrinks_with_age(self):
+        from repro.optim.async_rules import ParameterServer, PSConfig
+        fresh = ParameterServer(np.zeros(4), PSConfig(lr=0.1, staleness_tau=1.0))
+        stale = ParameterServer(np.zeros(4), PSConfig(lr=0.1, staleness_tau=1.0))
+        fresh.on_update(1.0, np.ones(4), reward=1.0, gen_time=1.0)
+        stale.on_update(1.0, np.ones(4), reward=1.0, gen_time=0.0)  # age 1
+        assert np.abs(stale.w).max() < np.abs(fresh.w).max()
