@@ -36,6 +36,31 @@ def main(report):
            f"{bytes_touched/2**20:.0f} MiB touched; HBM-bound target "
            f"{bytes_touched/819e9*1e6:.1f} us on v5e")
 
+    # large-burst combine: U=256 with no per-update unroll (MXU segment-sum)
+    U2 = 256
+    updates2 = jnp.asarray(rng.normal(size=(U2, D)), jnp.float32)
+    clusters2 = jnp.asarray(rng.integers(0, Q, (U2,)), jnp.int32)
+    gate2 = jnp.ones((U2,), jnp.int32)
+    us = _time(ops.olaf_combine, slots, counts, updates2, clusters2, gate2)
+    bytes_touched = (U2 * D + 2 * Q * D) * 4
+    report("olaf_combine_8x256x64k", us,
+           f"{bytes_touched/2**20:.0f} MiB touched; HBM-bound target "
+           f"{bytes_touched/819e9*1e6:.1f} us on v5e")
+
+    # multi-queue combine: 3 switches (SW1/SW2/SW3) in one kernel launch
+    S = 3
+    mslots = jnp.asarray(rng.normal(size=(S, Q, D)), jnp.float32)
+    mcounts = jnp.ones((S, Q), jnp.int32)
+    mupdates = jnp.asarray(rng.normal(size=(S, U, D)), jnp.float32)
+    mclusters = jnp.asarray(rng.integers(0, Q, (S, U)), jnp.int32)
+    mgate = jnp.ones((S, U), jnp.int32)
+    us = _time(ops.olaf_combine_multi, mslots, mcounts, mupdates, mclusters,
+               mgate)
+    bytes_touched = S * (U * D + 2 * Q * D) * 4
+    report("olaf_combine_multi_3x8x16x64k", us,
+           f"{bytes_touched/2**20:.0f} MiB touched; HBM-bound target "
+           f"{bytes_touched/819e9*1e6:.1f} us on v5e")
+
     # flash attention 1k x 64
     q = jnp.asarray(rng.normal(size=(4, 1024, 64)), jnp.bfloat16)
     from repro.kernels.flash_attention import flash_attention_pallas

@@ -1,7 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines (one per artifact) and writes
-the full structured results to experiments/bench_results.json.
+Prints ``name,us_per_call,derived`` CSV lines (one per artifact), writes the
+full structured results to experiments/bench_results.json, and persists the
+per-benchmark microseconds of each module to experiments/BENCH_<module>.json
+(e.g. BENCH_queue.json, BENCH_kernels.json) so the perf trajectory is
+tracked across PRs — see benchmarks/README.md for how to read them.
 """
 from __future__ import annotations
 
@@ -10,6 +13,8 @@ import sys
 import time
 from pathlib import Path
 
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments"
+
 
 def main() -> None:
     from benchmarks import (bench_kernels, bench_multihop, bench_queue,
@@ -17,7 +22,10 @@ def main() -> None:
     results = {}
     print("name,us_per_call,derived")
 
+    timings: dict = {}
+
     def report(name: str, us: float, derived: str) -> None:
+        timings[name] = {"us": round(us, 1), "derived": derived}
         print(f"{name},{us:.1f},\"{derived}\"")
         sys.stdout.flush()
 
@@ -27,9 +35,14 @@ def main() -> None:
         ("kernels", bench_kernels), ("roofline", bench_roofline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    if only and only not in {n for n, _ in modules}:
+        sys.exit(f"unknown suite {only!r}; pick one of "
+                 f"{', '.join(n for n, _ in modules)}")
+    OUT_DIR.mkdir(exist_ok=True)
     for name, mod in modules:
         if only and only != name:
             continue
+        timings = {}
         t0 = time.time()
         try:
             results[name] = mod.main(report)
@@ -37,8 +50,9 @@ def main() -> None:
             report(f"{name}_ERROR", 0.0, f"{type(e).__name__}: {e}")
             results[name] = {"error": str(e)}
         report(f"{name}_total", (time.time() - t0) * 1e6, "suite wall time")
-    out = Path(__file__).resolve().parents[1] / "experiments" / "bench_results.json"
-    out.parent.mkdir(exist_ok=True)
+        (OUT_DIR / f"BENCH_{name}.json").write_text(
+            json.dumps(timings, indent=1) + "\n")
+    out = OUT_DIR / "bench_results.json"
     out.write_text(json.dumps(results, indent=1, default=str))
 
 

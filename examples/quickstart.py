@@ -41,6 +41,12 @@ def demo_aom():
 
 def demo_verifier():
     print("== Z3 AoM-fairness verification (paper Sec. 6) ==")
+    try:
+        import z3  # noqa: F401
+    except ImportError:
+        print("  (skipped: z3-solver not installed — "
+              "pip install -r requirements-dev.txt)")
+        return
     res = verify_aom_fairness(
         [uniform_schedule(0.1, 6), uniform_schedule(0.1, 6)],
         VerifierConfig(p_over_c=0.002, epsilon=0.25))
@@ -58,8 +64,9 @@ def demo_kernel():
     clusters = jnp.arange(8, dtype=jnp.int32) % 4
     gate = jnp.ones((8,), jnp.int32)
     got, cnt = ops.olaf_combine(slots, counts, upd, clusters, gate, tile_d=128)
-    want = ref.olaf_combine_ref(slots, counts, upd, clusters, gate)
-    print(f"  kernel == oracle: {bool(jnp.allclose(got, want))}; "
+    want, want_cnt = ref.olaf_combine_ref(slots, counts, upd, clusters, gate)
+    print(f"  kernel == oracle: {bool(jnp.allclose(got, want))} and "
+          f"{bool(jnp.array_equal(cnt, want_cnt))}; "
           f"slot counts {np.asarray(cnt).tolist()}")
 
 

@@ -96,8 +96,19 @@ class _Switch:
             raise ValueError(cfg.queue)
         self.busy = False
         self.last_seen: Dict[int, float] = {}  # cluster -> last arrival time
+        self._max_window = 0.0  # widest active_clusters() probe seen
 
     def active_clusters(self, now: float, window: float) -> int:
+        # Sim time is monotone, so entries that fell out of the sliding
+        # window can be pruned outright — they only return on a new arrival.
+        # Keeps last_seen (and this count) O(active), not O(ever seen).
+        # Pruning uses the largest window this switch has been probed with,
+        # so a narrower probe can never delete entries a wider one counts.
+        self._max_window = max(self._max_window, window)
+        stale = [c for c, t in self.last_seen.items()
+                 if now - t > self._max_window]
+        for c in stale:
+            del self.last_seen[c]
         return sum(1 for t in self.last_seen.values() if now - t <= window)
 
     def feedback(self, now: float, window: float) -> QueueFeedback:

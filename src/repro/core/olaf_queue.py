@@ -23,7 +23,8 @@ aggregated/replaced update inherits the old update's departure position.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -54,7 +55,7 @@ class PyFifoQueue:
 
     def __init__(self, capacity: int) -> None:
         self.capacity = capacity
-        self._q: List[Update] = []
+        self._q: Deque[Update] = deque()
         self.stats = QueueStats()
 
     def __len__(self) -> int:
@@ -75,16 +76,24 @@ class PyFifoQueue:
         if not self._q:
             return None
         self.stats.departed += 1
-        return self._q.pop(0)
+        return self._q.popleft()
 
 
 class PyOlafQueue:
-    """Reference OlafQueue (Algorithm 1 + §12.1 head-lock corner case)."""
+    """Reference OlafQueue (Algorithm 1 + §12.1 head-lock corner case).
+
+    Every operation is O(1): the deque holds departure order, and
+    ``_by_cluster`` maps each cluster to its *unlocked* waiting update (the
+    Olaf invariant guarantees at most one), replacing the per-enqueue linear
+    scan. Combines mutate the waiting ``Update`` in place so its identity —
+    and hence its deque position — is preserved.
+    """
 
     def __init__(self, capacity: int, reward_threshold: Optional[float] = None) -> None:
         self.capacity = capacity
         self.reward_threshold = reward_threshold
-        self._q: List[Update] = []  # kept sorted by seq (departure order)
+        self._q: Deque[Update] = deque()  # kept sorted by seq (departure order)
+        self._by_cluster: Dict[int, Update] = {}  # cluster -> unlocked waiting
         self._seq = 0
         self._locked_seq: Optional[int] = None  # head update in transmission
         self.stats = QueueStats()
@@ -102,25 +111,28 @@ class PyOlafQueue:
     # -- §12.1: the head update may be locked while serializing ----------
     def lock_head(self) -> None:
         if self._q:
-            self._locked_seq = self._q[0].seq
+            head = self._q[0]
+            self._locked_seq = head.seq
+            # a locked head can no longer be combined with
+            if self._by_cluster.get(head.cluster_id) is head:
+                del self._by_cluster[head.cluster_id]
 
-    def _find_unlocked(self, cluster_id: int) -> Optional[int]:
-        for i, u in enumerate(self._q):
-            if u.cluster_id == cluster_id and u.seq != self._locked_seq:
-                return i
-        return None
+    @staticmethod
+    def _overwrite(waiting: Update, new: Update) -> None:
+        """Write ``new``'s fields into ``waiting`` so the object (and its
+        deque position / cluster-map entry) survives the combine."""
+        waiting.__dict__.update(new.__dict__)
 
     # -- Algorithm 1 ------------------------------------------------------
     def enqueue(self, upd: Update) -> bool:
         """Returns True iff the update's information is retained in the queue."""
-        idx = self._find_unlocked(upd.cluster_id)
-        if idx is not None:
-            waiting = self._q[idx]
+        waiting = self._by_cluster.get(upd.cluster_id)
+        if waiting is not None:
             if waiting.replaceable and waiting.worker_id == upd.worker_id:
                 # Alg.1 lines 9-10: same-worker, un-aggregated -> replace.
                 new = replace(waiting, upd)
                 new.replaceable = True  # still a single un-aggregated update
-                self._q[idx] = new
+                self._overwrite(waiting, new)
                 self.stats.replacements += 1
                 return True
             act = gate(upd.reward, waiting.reward, self.reward_threshold)
@@ -131,10 +143,10 @@ class PyOlafQueue:
             if act is Action.REPLACE:
                 new = replace(waiting, upd)
                 new.replaceable = False  # reward-replace counts as a combine event
-                self._q[idx] = new
+                self._overwrite(waiting, new)
                 self.stats.replacements += 1
                 return True
-            self._q[idx] = aggregate(waiting, upd)  # Alg.1 lines 12/16
+            self._overwrite(waiting, aggregate(waiting, upd))  # Alg.1 lines 12/16
             self.stats.aggregations += 1
             return True
         if len(self._q) >= self.capacity:
@@ -143,6 +155,7 @@ class PyOlafQueue:
         upd.seq = self._seq  # Alg.1 lines 18-20: append at tail
         self._seq += 1
         self._q.append(upd)
+        self._by_cluster[upd.cluster_id] = upd
         self.stats.enqueued += 1
         return True
 
@@ -153,9 +166,12 @@ class PyOlafQueue:
         if not self._q:
             return None
         self.stats.departed += 1
-        if self._locked_seq is not None and self._q[0].seq == self._locked_seq:
+        head = self._q.popleft()
+        if self._locked_seq is not None and head.seq == self._locked_seq:
             self._locked_seq = None
-        return self._q.pop(0)
+        if self._by_cluster.get(head.cluster_id) is head:
+            del self._by_cluster[head.cluster_id]
+        return head
 
 
 # ===========================================================================
@@ -241,7 +257,6 @@ def jax_enqueue(state: JaxQueueState, cluster: jnp.ndarray, worker: jnp.ndarray,
     w_payload = state.payload[slot_hit]
     agg_payload = (w_payload * w_cnt.astype(payload.dtype)
                    + payload) / (w_cnt + 1).astype(payload.dtype)
-    new_payload_hit = jnp.where(do_aggregate, agg_payload, payload)
 
     # ---- slot selection ---------------------------------------------------
     # append slot: first empty (argmax over ~occupied)
@@ -259,7 +274,7 @@ def jax_enqueue(state: JaxQueueState, cluster: jnp.ndarray, worker: jnp.ndarray,
         cluster=put(state.cluster, cluster),
         worker=put(state.worker, worker),
         seq=put(state.seq, new_seq_val),
-        gen_time=put(state.gen_time, jnp.maximum(gen_time, jnp.where(do_aggregate, state.gen_time[slot_hit], gen_time))),
+        gen_time=put(state.gen_time, jnp.where(do_aggregate, jnp.maximum(gen_time, state.gen_time[slot_hit]), gen_time)),
         reward=put(state.reward, jnp.where(do_aggregate, jnp.maximum(reward, w_reward), reward)),
         agg_count=put(state.agg_count, jnp.where(do_aggregate, w_cnt + 1, 1)),
         replaceable=put(state.replaceable, same_worker_replace | do_append),
@@ -269,7 +284,6 @@ def jax_enqueue(state: JaxQueueState, cluster: jnp.ndarray, worker: jnp.ndarray,
         n_agg=state.n_agg + do_aggregate.astype(jnp.int32),
         n_repl=state.n_repl + (same_worker_replace | do_reward_replace).astype(jnp.int32),
     )
-    del new_payload_hit
     return new_state
 
 
@@ -303,7 +317,12 @@ def jax_dequeue(state: JaxQueueState) -> Tuple[JaxQueueState, Dict[str, jnp.ndar
 
 def jax_enqueue_batch(state: JaxQueueState, clusters, workers, gen_times,
                       rewards, payloads, reward_threshold: float = jnp.inf) -> JaxQueueState:
-    """Sequential (scan) batch enqueue — an incast burst hitting the queue."""
+    """Sequential (scan) batch enqueue — an incast burst hitting the queue.
+
+    Kept as the slow-path oracle for :func:`jax_enqueue_burst`: each scan step
+    re-materializes the whole ``(Q, D)`` payload, so an U-update burst moves
+    ``O(U · Q · D)`` bytes. Use it to prove equivalence, not in hot loops.
+    """
 
     def body(st, xs):
         c, w, t, r, p = xs
@@ -311,3 +330,118 @@ def jax_enqueue_batch(state: JaxQueueState, clusters, workers, gen_times,
 
     state, _ = jax.lax.scan(body, state, (clusters, workers, gen_times, rewards, payloads))
     return state
+
+
+# Per-update burst events (scalar resolve output).
+_EV_DROP = 0  # full-queue or reward-gated drop: payload discarded
+_EV_AGG = 1  # running-mean aggregate into the target slot
+_EV_RESET = 2  # slot payload restarts from this update (append / replace)
+
+
+def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
+                   reward_threshold):
+    """Scalar half of the burst: Algorithm 1 decisions for U updates.
+
+    A ``lax.scan`` over the burst carrying only the ``(Q,)`` metadata columns
+    — never the ``(Q, D)`` payload — so it costs O(U·Q) scalar ops total.
+    Emits the per-update ``(slot, event)`` assignment consumed by the payload
+    pass, plus the fully-updated metadata/counters.
+    """
+    carry = (state.cluster, state.worker, state.seq, state.gen_time,
+             state.reward, state.agg_count, state.replaceable, state.next_seq,
+             state.n_dropped, state.n_agg, state.n_repl)
+
+    def body(carry, xs):
+        cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr = carry
+        c, w, t, r = xs
+        occupied = cl >= 0
+        same_cluster = occupied & (cl == c)
+        hit = jnp.any(same_cluster)
+        slot_hit = jnp.argmax(same_cluster)
+
+        same_worker_replace = hit & rp[slot_hit] & (wk[slot_hit] == w)
+        rdiff = r - rw[slot_hit]
+        do_reward_replace = hit & ~same_worker_replace & (rdiff > reward_threshold)
+        do_reward_drop = hit & ~same_worker_replace & (rdiff < -reward_threshold)
+        do_aggregate = hit & ~same_worker_replace & ~do_reward_replace & ~do_reward_drop
+
+        full = jnp.all(occupied)
+        do_append = ~hit & ~full
+        do_drop_full = ~hit & full
+
+        slot = jnp.where(hit, slot_hit, jnp.argmax(~occupied))
+        write = same_worker_replace | do_reward_replace | do_aggregate | do_append
+        onehot = (jnp.arange(cl.shape[0]) == slot) & write
+
+        def put(old, new):
+            return jnp.where(onehot, new, old)
+
+        event = jnp.where(do_aggregate, _EV_AGG,
+                          jnp.where(write, _EV_RESET, _EV_DROP))
+        new_carry = (
+            put(cl, c),
+            put(wk, w),
+            put(sq, jnp.where(hit, sq[slot_hit], nseq)),
+            put(gt, jnp.where(do_aggregate, jnp.maximum(t, gt[slot_hit]), t)),
+            put(rw, jnp.where(do_aggregate, jnp.maximum(r, rw[slot_hit]), r)),
+            put(cnt, jnp.where(do_aggregate, cnt[slot_hit] + 1, 1)),
+            put(rp, same_worker_replace | do_append),
+            nseq + do_append.astype(jnp.int32),
+            nd + (do_drop_full | do_reward_drop).astype(jnp.int32),
+            na + do_aggregate.astype(jnp.int32),
+            nr + (same_worker_replace | do_reward_replace).astype(jnp.int32),
+        )
+        return new_carry, (slot.astype(jnp.int32), event.astype(jnp.int32))
+
+    carry, (slots, events) = jax.lax.scan(
+        body, carry, (clusters, workers, gen_times, rewards))
+    return carry, slots, events
+
+
+def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
+                      rewards, payloads, reward_threshold: float = jnp.inf) -> JaxQueueState:
+    """Fused fast path: resolve a whole U-update incast burst in one pass.
+
+    Semantics match ``jax_enqueue_batch`` (sequential Algorithm 1) exactly on
+    all metadata and counters; payloads agree up to float associativity,
+    because the chain of per-update running means over a slot telescopes to
+
+        new[q] = (base[q] · base_n[q] + Σ_{u contributing to q} upd[u]) / n[q]
+
+    where ``base`` is the old slot payload if the burst never replaced slot
+    ``q``, else the payload of the *last* reset (append/replace) event — so
+    the whole payload movement is a single one-hot ``(Q, U) × (U, D)``
+    segment-sum (an MXU matmul on TPU) plus one ``(Q, D)`` blend, instead of
+    U sequential ``(Q, D)`` re-materializations.
+    """
+    Q = state.cluster.shape[0]
+    U = clusters.shape[0]
+    carry, slots, events = _burst_resolve(
+        state, clusters, workers, gen_times, rewards, reward_threshold)
+    (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr) = carry
+
+    u_idx = jnp.arange(U, dtype=jnp.int32)
+    onehot = slots[:, None] == jnp.arange(Q, dtype=jnp.int32)[None, :]  # (U, Q)
+    is_reset = events == _EV_RESET
+    is_agg = events == _EV_AGG
+    # Last reset per slot: everything written before it was overwritten.
+    last_reset = jnp.max(
+        jnp.where(is_reset[:, None] & onehot, u_idx[:, None], -1), axis=0)  # (Q,)
+    contributes = ((is_agg & (u_idx > last_reset[slots]))
+                   | (is_reset & (u_idx == last_reset[slots])))
+    seg = (onehot & contributes[:, None]).astype(jnp.float32)  # (U, Q)
+    sums = jnp.einsum("uq,ud->qd", seg,
+                      payloads.astype(jnp.float32))  # the one-hot matmul
+
+    n_contrib = seg.sum(axis=0)  # (Q,)
+    base_n = jnp.where(last_reset < 0, state.agg_count, 0).astype(jnp.float32)
+    touched = (last_reset >= 0) | (n_contrib > 0)
+    denom = jnp.maximum(base_n + n_contrib, 1.0)
+    combined = ((state.payload.astype(jnp.float32) * base_n[:, None] + sums)
+                / denom[:, None])
+    new_payload = jnp.where(touched[:, None], combined.astype(state.payload.dtype),
+                            state.payload)
+    return JaxQueueState(
+        cluster=cl, worker=wk, seq=sq, gen_time=gt, reward=rw, agg_count=cnt,
+        replaceable=rp, payload=new_payload, next_seq=nseq,
+        n_dropped=nd, n_agg=na, n_repl=nr)

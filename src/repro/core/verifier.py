@@ -25,7 +25,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import z3
+try:
+    import z3
+except ImportError:  # optional dep: fail at use, not at import
+    z3 = None
 
 
 @dataclasses.dataclass
@@ -47,6 +50,9 @@ class VerifyResult:
 
 def _encode(cfg: VerifierConfig, schedules: Sequence[Sequence[float]]):
     """Build constraints; returns (solver_constraints, per-cluster vars)."""
+    if z3 is None:
+        raise ImportError("repro.core.verifier needs z3-solver "
+                          "(pip install -r requirements-dev.txt)")
     F = len(schedules)
     s = cfg.p_over_c
     cons = []

@@ -1,7 +1,8 @@
 """Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling).
 
   olaf_combine     — the paper's data-plane burst combine (masked segment
-                     running-mean into cluster slots)
+                     running-mean into cluster slots as a one-hot MXU
+                     matmul; fused slot counts; optional multi-queue axis)
   flash_attention  — online-softmax attention, (BH, q_blocks, kv_blocks)
                      grid with VMEM scratch accumulators
   decode_attention — single-token GQA attention streaming a (possibly

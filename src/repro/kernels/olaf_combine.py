@@ -13,11 +13,17 @@ i.e. a masked segment-sum over the update batch followed by a running-mean
 renormalization — the same arithmetic as Algorithm 1 applied to a burst
 (gating decisions are data-dependent scalars and stay in the JAX wrapper).
 
-Tiling: grid over (Q slots × D tiles). Per step the kernel holds one
-(U, Dt) update tile and one (1, Dt) slot tile in VMEM; the masked reduce is
-a VPU select+add chain over U — no MXU needed, the kernel is HBM-bandwidth
-bound by design (it must touch every incoming byte exactly once, like the
-line-rate queue).
+The masked segment-sum is expressed as a one-hot (Qt, U) × (U, Dt) matmul so
+it runs on the MXU — there is no per-update unroll, so U scales to hundreds
+of updates with a constant trace size. Tiling: grid over (queues × Q-tiles
+× D-tiles); per step the kernel holds one (U, Dt) update tile and one
+(Qt, Dt) slot tile in VMEM, while ``clusters``/``gate``/``counts`` ride in
+SMEM as scalar-prefetch operands. The kernel is HBM-bandwidth bound by
+design (it must touch every incoming byte exactly once, like the line-rate
+queue); the matmul FLOPs (2·Q·U·D) are far below the MXU roofline at these
+shapes. Updated slot counts are produced by the same kernel launch, and a
+leading S axis batches independent queues (SW1/SW2/SW3-style multi-switch
+combines) in one launch.
 """
 from __future__ import annotations
 
@@ -25,63 +31,112 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
+
+try:  # pltpu is importable on CPU too; guard for exotic builds
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
 
 
 DEFAULT_TILE_D = 512
+DEFAULT_TILE_Q = 8
 
 
 def _combine_kernel(cluster_ref, gate_ref, count_ref, updates_ref, slots_ref,
-                    out_ref, *, n_updates: int):
-    """One (slot q, D-tile) grid step.
+                    out_ref, counts_out_ref, *, tile_q: int):
+    """One (queue s, Q-tile i, D-tile j) grid step.
 
-    cluster_ref: (U,) int32 in SMEM — cluster id per incoming update
-    gate_ref:    (U,) int32 in SMEM — 1 if the update passed reward gating
-    count_ref:   (Q,) int32 in SMEM — current agg_count per slot
-    updates_ref: (U, Dt) VMEM tile of incoming payloads
-    slots_ref:   (1, Dt) VMEM tile of the current slot payload
-    out_ref:     (1, Dt) VMEM tile of the combined slot payload
+    cluster_ref: (S, U) int32 SMEM (scalar prefetch) — cluster id per update
+    gate_ref:    (S, U) int32 SMEM — 1 if the update passed reward gating
+    count_ref:   (S, Q) int32 SMEM — current agg_count per slot
+    updates_ref: (1, U, Dt) VMEM tile of incoming payloads
+    slots_ref:   (1, Qt, Dt) VMEM tile of the current slot payloads
+    out_ref:     (1, Qt, Dt) VMEM tile of the combined slot payloads
+    counts_out_ref: (1, Qt, 1) int32 — written once per Q-tile (at j == 0)
     """
-    q = pl.program_id(0)
-    count = count_ref[q]
-    acc = slots_ref[0, :].astype(jnp.float32) * count.astype(jnp.float32)
-    hits = jnp.int32(0)
-    for u in range(n_updates):  # static unroll: U is small (a burst)
-        take = jnp.logical_and(cluster_ref[u] == q, gate_ref[u] == 1)
-        acc = acc + jnp.where(take, updates_ref[u, :].astype(jnp.float32), 0.0)
-        hits = hits + take.astype(jnp.int32)
-    denom = jnp.maximum(count + hits, 1).astype(jnp.float32)
-    out_ref[0, :] = (acc / denom).astype(out_ref.dtype)
+    s, i = pl.program_id(0), pl.program_id(1)
+    U = updates_ref.shape[1]
+    clusters = cluster_ref[s, :]  # (U,) scalar-prefetch reads
+    gatev = gate_ref[s, :]
+    counts = count_ref[s, pl.ds(i * tile_q, tile_q)]  # (Qt,)
+
+    # one-hot membership (Qt, U): 2-D iota (TPU requires >= 2-D iota)
+    qids = i * tile_q + jax.lax.broadcasted_iota(jnp.int32, (tile_q, U), 0)
+    onehot = jnp.where((clusters[None, :] == qids) & (gatev[None, :] != 0),
+                       1.0, 0.0).astype(jnp.float32)
+    hits = onehot.sum(axis=1).astype(jnp.int32)  # (Qt,)
+
+    acc = slots_ref[0].astype(jnp.float32) * counts.astype(jnp.float32)[:, None]
+    # masked segment-sum as an MXU matmul: (Qt, U) x (U, Dt)
+    acc += jnp.dot(onehot, updates_ref[0].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    denom = jnp.maximum(counts + hits, 1).astype(jnp.float32)
+    out_ref[0] = (acc / denom[:, None]).astype(out_ref.dtype)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        counts_out_ref[0] = (counts + hits)[:, None]
+
+
+def _pick_tile_q(Q: int, tile_q: int) -> int:
+    tile_q = min(tile_q, Q)
+    while Q % tile_q:
+        tile_q -= 1
+    return tile_q
 
 
 def olaf_combine_pallas(slots: jnp.ndarray, counts: jnp.ndarray,
                         updates: jnp.ndarray, clusters: jnp.ndarray,
-                        gate: jnp.ndarray, *, tile_d: int = DEFAULT_TILE_D,
-                        interpret: bool = True) -> jnp.ndarray:
-    """slots: (Q, D); counts: (Q,); updates: (U, D); clusters/gate: (U,).
+                        gate: jnp.ndarray, *, tile_q: int = DEFAULT_TILE_Q,
+                        tile_d: int = DEFAULT_TILE_D,
+                        interpret: bool = True):
+    """Fused burst combine; returns ``(new_slots, new_counts)``.
 
-    Returns the combined slot payloads (Q, D). ``interpret=True`` runs the
-    kernel body on CPU (this container); on TPU pass ``interpret=False``.
+    Rank-2: slots (Q, D), counts (Q,), updates (U, D), clusters/gate (U,).
+    Rank-3 (multi-queue): a leading S axis on every operand batches S
+    independent queues (one per switch) in a single kernel launch.
+    ``interpret=True`` runs the kernel body on CPU (this container); on TPU
+    pass ``interpret=False``.
     """
-    Q, D = slots.shape
-    U = updates.shape[0]
+    if pltpu is None:
+        raise ImportError("olaf_combine needs jax.experimental.pallas.tpu "
+                          "(PrefetchScalarGridSpec) — unavailable in this "
+                          "jax build")
+    squeeze = slots.ndim == 2
+    if squeeze:
+        slots, counts = slots[None], counts[None]
+        updates, clusters, gate = updates[None], clusters[None], gate[None]
+    S, Q, D = slots.shape
+    U = updates.shape[1]
+    tile_q = _pick_tile_q(Q, tile_q)
     tile_d = min(tile_d, D)
     assert D % tile_d == 0, (D, tile_d)
 
-    grid = (Q, D // tile_d)
-    kernel = functools.partial(_combine_kernel, n_updates=U)
-    return pl.pallas_call(
+    grid = (S, Q // tile_q, D // tile_d)
+    kernel = functools.partial(_combine_kernel, tile_q=tile_q)
+    new_slots, new_counts = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # clusters (scalar-read)
-            pl.BlockSpec(memory_space=pl.ANY),  # gate
-            pl.BlockSpec(memory_space=pl.ANY),  # counts
-            pl.BlockSpec((U, tile_d), lambda q, j: (0, j)),
-            pl.BlockSpec((1, tile_d), lambda q, j: (q, j)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,  # clusters, gate, counts -> SMEM
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, U, tile_d), lambda s, i, j, *prefetch: (s, 0, j)),
+                pl.BlockSpec((1, tile_q, tile_d), lambda s, i, j, *prefetch: (s, i, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, tile_q, tile_d), lambda s, i, j, *prefetch: (s, i, j)),
+                pl.BlockSpec((1, tile_q, 1), lambda s, i, j, *prefetch: (s, i, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((S, Q, D), slots.dtype),
+            jax.ShapeDtypeStruct((S, Q, 1), jnp.int32),
         ],
-        out_specs=pl.BlockSpec((1, tile_d), lambda q, j: (q, j)),
-        out_shape=jax.ShapeDtypeStruct((Q, D), slots.dtype),
         interpret=interpret,
-    )(clusters, gate, counts, updates, slots)
+    )(clusters.astype(jnp.int32), gate.astype(jnp.int32),
+      counts.astype(jnp.int32), updates, slots)
+    new_counts = new_counts[..., 0]
+    if squeeze:
+        new_slots, new_counts = new_slots[0], new_counts[0]
+    return new_slots, new_counts

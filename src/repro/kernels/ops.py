@@ -19,20 +19,38 @@ from repro.kernels.olaf_combine import olaf_combine_pallas
 _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
 
 
-@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
-def olaf_combine(slots, counts, updates, clusters, gate, *, tile_d: int = 512,
-                 interpret: bool = _INTERPRET):
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_d", "interpret"))
+def olaf_combine(slots, counts, updates, clusters, gate, *, tile_q: int = 8,
+                 tile_d: int = 512, interpret: bool = _INTERPRET):
     """Combine a burst of updates into cluster slots (running mean).
 
     slots (Q,D), counts (Q,) int32, updates (U,D), clusters (U,) int32,
-    gate (U,) int32/bool -> (new_slots (Q,D), new_counts (Q,))
+    gate (U,) int32/bool -> (new_slots (Q,D), new_counts (Q,)).
+
+    A leading S axis on every operand batches S independent queues (the
+    SW1/SW2/SW3 multi-switch combine) in one kernel launch; see also
+    :func:`olaf_combine_multi` for the explicitly-batched signature. Both
+    slots and counts come fused out of a single Pallas kernel — the counts
+    are not recomputed host-side.
     """
     gate = gate.astype(jnp.int32)
-    new_slots = olaf_combine_pallas(slots, counts, updates, clusters, gate,
-                                    tile_d=tile_d, interpret=interpret)
-    onehot = jax.nn.one_hot(clusters, slots.shape[0], dtype=jnp.int32)
-    new_counts = counts + (onehot * gate[:, None]).sum(axis=0)
-    return new_slots, new_counts
+    return olaf_combine_pallas(slots, counts, updates, clusters, gate,
+                               tile_q=tile_q, tile_d=tile_d,
+                               interpret=interpret)
+
+
+def olaf_combine_multi(slots, counts, updates, clusters, gate, *,
+                       tile_q: int = 8, tile_d: int = 512,
+                       interpret: bool = _INTERPRET):
+    """Multi-queue combine: every operand carries a leading S (switch) axis.
+
+    slots (S,Q,D), counts (S,Q), updates (S,U,D), clusters/gate (S,U)
+    -> (new_slots (S,Q,D), new_counts (S,Q)). Equivalent to
+    ``jax.vmap(olaf_combine)`` but runs as one kernel launch with the switch
+    axis folded into the Pallas grid.
+    """
+    return olaf_combine(slots, counts, updates, clusters, gate,
+                        tile_q=tile_q, tile_d=tile_d, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(

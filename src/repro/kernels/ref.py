@@ -9,8 +9,12 @@ import numpy as np
 def olaf_combine_ref(slots, counts, updates, clusters, gate):
     """Running-mean segment combine (Algorithm 1 applied to a burst).
 
-    slots (Q,D), counts (Q,), updates (U,D), clusters (U,), gate (U,) -> (Q,D)
+    slots (Q,D), counts (Q,), updates (U,D), clusters (U,), gate (U,)
+    -> (new_slots (Q,D), new_counts (Q,)). A leading S axis batches
+    independent queues (mirrors the kernel's multi-queue grid axis).
     """
+    if slots.ndim == 3:
+        return jax.vmap(olaf_combine_ref)(slots, counts, updates, clusters, gate)
     Q = slots.shape[0]
     onehot = (jax.nn.one_hot(clusters, Q, dtype=updates.dtype)
               * gate.astype(updates.dtype)[:, None])  # (U,Q)
@@ -18,7 +22,8 @@ def olaf_combine_ref(slots, counts, updates, clusters, gate):
     hits = onehot.sum(axis=0)  # (Q,)
     acc = slots.astype(jnp.float32) * counts.astype(jnp.float32)[:, None] + sums
     denom = jnp.maximum(counts.astype(jnp.float32) + hits, 1.0)
-    return (acc / denom[:, None]).astype(slots.dtype)
+    new_counts = counts.astype(jnp.int32) + hits.astype(jnp.int32)
+    return (acc / denom[:, None]).astype(slots.dtype), new_counts
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):

@@ -75,7 +75,8 @@ def run_olaf_async(cfg, args) -> float:
     resident OlafQueue; the PS side drains the queue and applies combined
     updates. Workers proceed without a barrier — a straggler's update merges
     or is superseded (the paper's technique applied to LM training)."""
-    from repro.core.olaf_queue import jax_dequeue, jax_enqueue, jax_queue_init
+    from repro.core.olaf_queue import (jax_dequeue, jax_enqueue_burst,
+                                       jax_queue_init)
     from repro.models.module import tree_paths
 
     opt = OptConfig(lr=args.lr, grad_clip=1.0)
@@ -119,24 +120,32 @@ def run_olaf_async(cfg, args) -> float:
     worker_next = np.zeros(args.workers)
     worker_step = np.zeros(args.workers, int)
     n_clusters = max(args.workers // 2, 2)  # workers grouped into clusters
+    burst_size = 2  # updates arriving per PS drain (opportunistic window)
     losses = []
     applied = 0
-    enqueued = 0
     while applied < args.steps:
-        w = int(np.argmin(worker_next))  # next worker to finish (async)
-        batch = {k: jnp.asarray(v)
-                 for k, v in shards[w].batch(worker_step[w]).items()}
-        loss, grads = grad_fn(params, batch)
-        queue = jax_enqueue(queue, jnp.int32(w % n_clusters), jnp.int32(w),
-                            jnp.float32(worker_next[w]), -loss,
-                            flatten(grads))
-        worker_step[w] += 1
-        worker_next[w] += worker_speed[w]
-        enqueued += 1
-        # congested PS: drains every other arrival, so same-cluster updates
-        # meet in the queue and combine (the paper's opportunistic window)
-        if enqueued % 2:
-            continue
+        # congested PS: a burst of updates arrives between drains, so
+        # same-cluster updates meet in the queue and combine (the paper's
+        # opportunistic window) — pushed through the fused burst fast path.
+        burst = dict(c=[], w=[], t=[], r=[], p=[])
+        for _ in range(burst_size):
+            w = int(np.argmin(worker_next))  # next worker to finish (async)
+            batch = {k: jnp.asarray(v)
+                     for k, v in shards[w].batch(worker_step[w]).items()}
+            loss, grads = grad_fn(params, batch)
+            burst["c"].append(w % n_clusters)
+            burst["w"].append(w)
+            burst["t"].append(worker_next[w])
+            burst["r"].append(-loss)
+            burst["p"].append(flatten(grads))
+            worker_step[w] += 1
+            worker_next[w] += worker_speed[w]
+        queue = jax_enqueue_burst(
+            queue, jnp.asarray(burst["c"], jnp.int32),
+            jnp.asarray(burst["w"], jnp.int32),
+            jnp.asarray(burst["t"], jnp.float32),
+            jnp.stack(burst["r"]).astype(jnp.float32),
+            jnp.stack(burst["p"]))
         queue, out = jax_dequeue(queue)
         if bool(out["valid"]):
             g = unflatten_like(out["payload"], params)

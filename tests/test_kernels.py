@@ -15,7 +15,8 @@ def rand(rng, shape, dtype):
 
 class TestOlafCombine:
     @pytest.mark.parametrize("Q,U,D", [(4, 3, 128), (8, 16, 512), (2, 1, 1024),
-                                       (16, 32, 256)])
+                                       (16, 32, 256), (8, 256, 256),
+                                       (32, 257, 128)])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_matches_ref(self, Q, U, D, dtype):
         rng = np.random.default_rng(Q * 101 + U)
@@ -26,17 +27,60 @@ class TestOlafCombine:
         gate = jnp.asarray(rng.integers(0, 2, (U,)), jnp.int32)
         got, got_counts = ops.olaf_combine(slots, counts, updates, clusters,
                                            gate, tile_d=min(128, D))
-        want = ref.olaf_combine_ref(slots, counts, updates, clusters, gate)
+        want, want_counts = ref.olaf_combine_ref(slots, counts, updates,
+                                                 clusters, gate)
         tol = 1e-5 if dtype == jnp.float32 else 2e-2
         np.testing.assert_allclose(np.asarray(got, np.float32),
                                    np.asarray(want, np.float32),
                                    rtol=tol, atol=tol)
-        # counts bookkeeping
+        # counts come fused from the same kernel launch
+        np.testing.assert_array_equal(np.asarray(got_counts),
+                                      np.asarray(want_counts))
         onehot = np.zeros((U, Q), np.int32)
         for u in range(U):
             onehot[u, int(clusters[u])] = int(gate[u])
         np.testing.assert_array_equal(np.asarray(got_counts),
                                       np.asarray(counts) + onehot.sum(0))
+
+    @pytest.mark.parametrize("S,Q,U,D", [(3, 8, 16, 256), (2, 5, 7, 128)])
+    def test_multi_queue_axis(self, S, Q, U, D):
+        """A leading switch axis batches independent queues in one launch."""
+        rng = np.random.default_rng(S * 7 + Q)
+        slots = rand(rng, (S, Q, D), jnp.float32)
+        counts = jnp.asarray(rng.integers(0, 5, (S, Q)), jnp.int32)
+        updates = rand(rng, (S, U, D), jnp.float32)
+        clusters = jnp.asarray(rng.integers(0, Q, (S, U)), jnp.int32)
+        gate = jnp.asarray(rng.integers(0, 2, (S, U)), jnp.int32)
+        got, got_counts = ops.olaf_combine_multi(slots, counts, updates,
+                                                 clusters, gate,
+                                                 tile_d=min(128, D))
+        for s in range(S):
+            want, want_counts = ref.olaf_combine_ref(
+                slots[s], counts[s], updates[s], clusters[s], gate[s])
+            np.testing.assert_allclose(np.asarray(got[s]), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_array_equal(np.asarray(got_counts[s]),
+                                          np.asarray(want_counts))
+
+    def test_vmap_multi_queue(self):
+        """jax.vmap over the combine maps onto the multi-queue grid axis."""
+        rng = np.random.default_rng(11)
+        S, Q, U, D = 3, 4, 6, 128
+        slots = rand(rng, (S, Q, D), jnp.float32)
+        counts = jnp.asarray(rng.integers(0, 3, (S, Q)), jnp.int32)
+        updates = rand(rng, (S, U, D), jnp.float32)
+        clusters = jnp.asarray(rng.integers(0, Q, (S, U)), jnp.int32)
+        gate = jnp.ones((S, U), jnp.int32)
+        got, got_counts = jax.vmap(
+            lambda sl, ct, up, cl, ga: ops.olaf_combine(sl, ct, up, cl, ga,
+                                                        tile_d=128)
+        )(slots, counts, updates, clusters, gate)
+        want, want_counts = ref.olaf_combine_ref(slots, counts, updates,
+                                                 clusters, gate)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got_counts),
+                                      np.asarray(want_counts))
 
     def test_empty_slot_mean(self):
         # combining into an empty slot (count 0) must give the plain mean

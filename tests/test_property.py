@@ -11,6 +11,9 @@ Key invariants (paper §3/§4):
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.aggregation import Update

@@ -1,6 +1,8 @@
 """Tests for the Z3 formal verification of AoM objectives (§6, §12.2)."""
 import pytest
 
+pytest.importorskip("z3", reason="z3-solver not installed "
+                    "(pip install -r requirements-dev.txt)")
 from repro.core.verifier import (VerifierConfig, admissible_thresholds,
                                  uniform_schedule, verify_aom_fairness)
 
