@@ -1,0 +1,208 @@
+"""Device-resident PS drain pipeline benchmarks (BENCH_train.json).
+
+Two measurements of the enqueue→combine→drain→apply cycle:
+
+  * ``ps_step_micro`` — the PS step in isolation (no gradient compute):
+    the PR 1 loop (burst enqueue, then one ``jax_dequeue`` + a host
+    validity round trip + a separately-dispatched apply per iteration)
+    vs the jitted zero-round-trip step (``jax_enqueue_burst`` →
+    ``jax_dequeue_burst`` → weighted apply, donated buffers, one dispatch).
+  * ``olaf_async_e2e`` — ``run_olaf_async`` end to end on a tiny LM
+    (gradient compute included, so the PS-step win is diluted by the
+    model's forward/backward): legacy inline loop vs the restructured
+    driver, steps/sec.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def ps_step_micro(Q: int = 32, D: int = 65536, burst: int = 4, k: int = 4,
+                  iters: int = 20) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.olaf_queue import (jax_dequeue, jax_dequeue_burst,
+                                       jax_enqueue_burst, jax_queue_init)
+
+    rng = np.random.default_rng(0)
+    state = jax_queue_init(Q, D)
+    params = jnp.asarray(rng.normal(size=D), jnp.float32)
+    args = (jnp.asarray(rng.integers(0, Q, burst), jnp.int32),
+            jnp.asarray(rng.integers(0, 8, burst), jnp.int32),
+            jnp.asarray(rng.random(burst), jnp.float32),
+            jnp.asarray(rng.normal(size=burst), jnp.float32),
+            jnp.asarray(rng.normal(size=(burst, D)), jnp.float32))
+    lr = 1e-3
+
+    enq = jax.jit(jax_enqueue_burst)
+    deq = jax.jit(jax_dequeue)
+    apply_one = jax.jit(lambda p, g: p - lr * g)
+
+    def legacy_iter(queue, params):
+        # PR 1 shape: enqueue burst, single dequeue, host round trip on
+        # out["valid"], then a separately-dispatched apply
+        queue = enq(queue, *args)
+        queue, out = deq(queue)
+        if bool(out["valid"]):  # blocking device sync every iteration
+            params = apply_one(params, out["payload"])
+        return queue, params
+
+    def fused_step(queue, params):
+        queue = jax_enqueue_burst(queue, *args)
+        queue, out = jax_dequeue_burst(queue, k)
+        wts = out["valid"] * out["agg_count"].astype(jnp.float32)
+        g = jnp.einsum("k,kd->d", wts, out["payload"]) \
+            / jnp.maximum(wts.sum(), 1.0)
+        return queue, params - lr * g
+
+    fused = jax.jit(fused_step, donate_argnums=(0,))
+
+    def fresh():
+        # fused donates the queue buffers, so every run starts from a copy
+        return jax.tree_util.tree_map(jnp.copy, state), jnp.copy(params)
+
+    def run_legacy(q, p):
+        for _ in range(iters):
+            q, p = legacy_iter(q, p)
+        jax.block_until_ready(p)
+
+    def run_fused(q, p):
+        for _ in range(iters):
+            q, p = fused(q, p)
+        jax.block_until_ready(p)
+
+    def timed(run, reps=3):
+        """Best-of-``reps``: the min suppresses scheduler/load noise."""
+        q, p = fresh()
+        run(q, p)  # compile/warm
+        best = float("inf")
+        for _ in range(reps):
+            q, p = fresh()
+            t0 = time.time()
+            run(q, p)
+            best = min(best, (time.time() - t0) / iters * 1e6)
+        return best
+
+    legacy_us = timed(run_legacy)
+    fused_us = timed(run_fused)
+    return dict(Q=Q, D=D, burst=burst, k=k, legacy_us=legacy_us,
+                fused_us=fused_us, speedup=legacy_us / fused_us)
+
+
+def _tiny_args(steps: int) -> argparse.Namespace:
+    return argparse.Namespace(
+        arch="smollm-360m", reduced=True, mode="olaf-async", steps=steps,
+        batch=4, seq=32, lr=1e-3, workers=4, seed=0, ckpt=None,
+        ckpt_every=0, log_every=0, burst_size=2, drain_k=4)
+
+
+def _legacy_olaf_async(cfg, args) -> float:
+    """The PR 1 loop verbatim: burst enqueue, one jax_dequeue per applied
+    update, a bool(out['valid']) host sync + float(loss) every iteration."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.olaf_queue import (jax_dequeue, jax_enqueue_burst,
+                                       jax_queue_init)
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import api
+    from repro.models.module import tree_paths
+    from repro.optim.optimizers import (OptConfig, apply_updates,
+                                        init_opt_state)
+
+    opt = OptConfig(lr=args.lr, grad_clip=1.0)
+    params = api.init_model(jax.random.key(args.seed), cfg)
+    opt_state = init_opt_state(params, opt)
+    dim = sum(int(np.prod(v.shape)) for v in tree_paths(params).values())
+    queue = jax_queue_init(capacity=max(args.workers, 4), dim=dim)
+    shards = [SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                     global_batch=args.batch,
+                                     n_shards=args.workers, shard_id=i,
+                                     seed=args.seed))
+              for i in range(args.workers)]
+
+    def flatten(tree):
+        return jnp.concatenate([jnp.ravel(v).astype(jnp.float32)
+                                for v in tree_paths(tree).values()])
+
+    def unflatten_like(flat, like):
+        out, off = {}, 0
+        for k, v in tree_paths(like).items():
+            n = int(np.prod(v.shape))
+            out[k] = flat[off:off + n].reshape(v.shape).astype(v.dtype)
+            off += n
+        root = {}
+        for path, leaf in out.items():
+            d = root
+            parts = path.split("/")
+            for p in parts[:-1]:
+                d = d.setdefault(p, {})
+            d[parts[-1]] = leaf
+        return root
+
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, b: api.loss_fn(p, b, cfg)))
+    rng = np.random.default_rng(args.seed)
+    worker_speed = 1.0 + 0.5 * rng.random(args.workers)
+    worker_next = np.zeros(args.workers)
+    worker_step = np.zeros(args.workers, int)
+    n_clusters = max(args.workers // 2, 2)
+    losses, applied = [], 0
+    while applied < args.steps:
+        burst = dict(c=[], w=[], t=[], r=[], p=[])
+        for _ in range(2):
+            w = int(np.argmin(worker_next))
+            batch = {k: jnp.asarray(v)
+                     for k, v in shards[w].batch(worker_step[w]).items()}
+            loss, grads = grad_fn(params, batch)
+            burst["c"].append(w % n_clusters)
+            burst["w"].append(w)
+            burst["t"].append(worker_next[w])
+            burst["r"].append(-loss)
+            burst["p"].append(flatten(grads))
+            worker_step[w] += 1
+            worker_next[w] += worker_speed[w]
+        queue = jax_enqueue_burst(
+            queue, jnp.asarray(burst["c"], jnp.int32),
+            jnp.asarray(burst["w"], jnp.int32),
+            jnp.asarray(burst["t"], jnp.float32),
+            jnp.stack(burst["r"]).astype(jnp.float32),
+            jnp.stack(burst["p"]))
+        queue, out = jax_dequeue(queue)
+        if bool(out["valid"]):
+            g = unflatten_like(out["payload"], params)
+            params, opt_state = apply_updates(params, g, opt_state, opt)
+            applied += 1
+            losses.append(float(loss))
+    return losses[-1]
+
+
+def olaf_async_e2e(steps: int = 16) -> dict:
+    from repro.configs import get_config
+    from repro.launch.train import run_olaf_async
+
+    cfg = get_config("smollm-360m").reduced()
+    t0 = time.time()
+    _legacy_olaf_async(cfg, _tiny_args(steps))
+    legacy_s = time.time() - t0
+    t0 = time.time()
+    run_olaf_async(cfg, _tiny_args(steps))
+    new_s = time.time() - t0
+    return dict(steps=steps, legacy_steps_per_s=steps / legacy_s,
+                new_steps_per_s=steps / new_s, speedup=legacy_s / new_s)
+
+
+def main(report):
+    micro = ps_step_micro()
+    report("ps_step_micro_q32_d64k", micro["fused_us"],
+           f"legacy {micro['legacy_us']:.0f}us vs fused "
+           f"{micro['fused_us']:.0f}us = {micro['speedup']:.1f}x "
+           f"(burst {micro['burst']}, drain-k {micro['k']})")
+    e2e = olaf_async_e2e()
+    report("olaf_async_e2e_steps_per_s", 1e6 / max(e2e["new_steps_per_s"], 1e-9),
+           f"legacy {e2e['legacy_steps_per_s']:.2f} vs jitted PS step "
+           f"{e2e['new_steps_per_s']:.2f} steps/s = {e2e['speedup']:.2f}x "
+           f"(tiny LM, gradient compute included)")
+    return dict(ps_step_micro=micro, olaf_async_e2e=e2e)

@@ -1,0 +1,134 @@
+"""Fail on perf regressions in the persisted benchmark results.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/check_regression.py queue train ...
+  PYTHONPATH=src:. python benchmarks/check_regression.py --floors
+
+Two gates:
+
+* **absolute mode** (default, for local pre-commit runs): per suite,
+  compares the freshly-written ``experiments/BENCH_<suite>.json`` against
+  the baseline committed at HEAD (``git show``). Meaningful because both
+  numbers come from the same machine. Only the curated ``STABLE_KEYS``
+  rows are gated; a row fails when it is BOTH >``threshold`` (default 20%,
+  ``BENCH_REGRESSION_THRESHOLD`` env var) slower relatively AND more than
+  ``ABS_FLOOR_US`` slower absolutely.
+* **``--floors`` mode** (for CI): reads the fast-path *speedups* from
+  ``experiments/bench_results.json`` — ratios of two timings taken in the
+  same run on the same machine, so the runner's constant machine factor
+  cancels — and fails if any drops below its conservative floor. This is
+  the gate a shared runner can enforce without chasing contributor-box
+  baselines.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+EXP = REPO / "experiments"
+
+STABLE_KEYS = {
+    "queue": ["burst_vs_scan_u64_q32_d64k", "drain_vs_seq_k8_q32_d64k"],
+    "train": ["ps_step_micro_q32_d64k"],
+    "kernels": [],  # interpret-mode sweeps: tracked in the diff, not gated
+}
+ABS_FLOOR_US = 500.0
+
+# suite -> benchmark -> minimum same-run speedup. Deliberately below the
+# locally-recorded values (13.5x / 6.3x / 1.9x / 5.3x at the time of
+# writing) so shared-runner noise does not flake, while a fast path that
+# stops being a fast path still fails.
+SPEEDUP_FLOORS = {
+    "queue": {"burst_fast_path": 5.0, "drain_fast_path": 3.0},
+    "train": {"ps_step_micro": 1.1, "olaf_async_e2e": 1.5},
+}
+
+
+def baseline(suite: str) -> dict:
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:experiments/BENCH_{suite}.json"],
+            cwd=REPO, capture_output=True, text=True, check=True).stdout
+    except subprocess.CalledProcessError:
+        return {}
+    return json.loads(blob)
+
+
+def check(suite: str, threshold: float) -> list:
+    cur_path = EXP / f"BENCH_{suite}.json"
+    if not cur_path.exists():
+        print(f"[{suite}] no fresh results at {cur_path} — run the suite "
+              f"first", file=sys.stderr)
+        return [f"{suite}: missing results"]
+    cur = json.loads(cur_path.read_text())
+    base = baseline(suite)
+    failures = []
+    for key in STABLE_KEYS.get(suite, []):
+        if key not in base:
+            print(f"[{suite}] {key}: no baseline yet — skipped")
+            continue
+        if key not in cur:
+            failures.append(f"{suite}/{key}: row disappeared from results")
+            continue
+        b, c = float(base[key]["us"]), float(cur[key]["us"])
+        rel = (c - b) / max(b, 1e-9)
+        verdict = "OK"
+        if rel > threshold and (c - b) > ABS_FLOOR_US:
+            verdict = "REGRESSION"
+            failures.append(
+                f"{suite}/{key}: {b:.0f}us -> {c:.0f}us (+{100 * rel:.0f}%)")
+        print(f"[{suite}] {key}: baseline {b:.0f}us, current {c:.0f}us "
+              f"({'+' if rel >= 0 else ''}{100 * rel:.0f}%) {verdict}")
+    return failures
+
+
+def check_floors() -> list:
+    path = EXP / "bench_results.json"
+    if not path.exists():
+        print(f"no structured results at {path} — run the suites first",
+              file=sys.stderr)
+        return ["floors: missing bench_results.json"]
+    results = json.loads(path.read_text())
+    failures = []
+    for suite, floors in SPEEDUP_FLOORS.items():
+        rows = results.get(suite, {})
+        for key, floor in floors.items():
+            speedup = rows.get(key, {}).get("speedup") \
+                if isinstance(rows.get(key), dict) else None
+            if speedup is None:
+                print(f"[{suite}] {key}: no speedup recorded — skipped")
+                continue
+            verdict = "OK" if speedup >= floor else "REGRESSION"
+            if speedup < floor:
+                failures.append(
+                    f"{suite}/{key}: speedup {speedup:.2f}x < floor "
+                    f"{floor:.1f}x")
+            print(f"[{suite}] {key}: speedup {speedup:.2f}x "
+                  f"(floor {floor:.1f}x) {verdict}")
+    return failures
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    if "--floors" in argv:
+        failures = check_floors()
+    else:
+        suites = argv or list(STABLE_KEYS)
+        threshold = float(os.environ.get("BENCH_REGRESSION_THRESHOLD", "0.2"))
+        failures = []
+        for suite in suites:
+            failures += check(suite, threshold)
+    if failures:
+        print("\nperf regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nperf regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

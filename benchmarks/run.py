@@ -18,7 +18,8 @@ OUT_DIR = Path(__file__).resolve().parents[1] / "experiments"
 
 def main() -> None:
     from benchmarks import (bench_kernels, bench_multihop, bench_queue,
-                            bench_roofline, bench_training, bench_verifier)
+                            bench_roofline, bench_train, bench_training,
+                            bench_verifier)
     results = {}
     print("name,us_per_call,derived")
 
@@ -31,8 +32,9 @@ def main() -> None:
 
     modules = [
         ("queue", bench_queue), ("multihop", bench_multihop),
-        ("training", bench_training), ("verifier", bench_verifier),
-        ("kernels", bench_kernels), ("roofline", bench_roofline),
+        ("train", bench_train), ("training", bench_training),
+        ("verifier", bench_verifier), ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     if only and only not in {n for n, _ in modules}:
@@ -53,6 +55,15 @@ def main() -> None:
         (OUT_DIR / f"BENCH_{name}.json").write_text(
             json.dumps(timings, indent=1) + "\n")
     out = OUT_DIR / "bench_results.json"
+    if only and out.exists():
+        # single-suite runs merge into the existing structured results
+        # instead of clobbering every other suite's entry
+        try:
+            prev = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            prev = {}
+        prev.update(results)
+        results = prev
     out.write_text(json.dumps(results, indent=1, default=str))
 
 

@@ -34,7 +34,7 @@ def main():
         arch="smollm-360m", reduced=True, mode="olaf-async" if args.olaf
         else "sync", steps=args.steps, batch=8, seq=128, lr=3e-3,
         workers=4, seed=0, ckpt=None if args.olaf else args.ckpt,
-        ckpt_every=20, log_every=10)
+        ckpt_every=20, log_every=10, burst_size=2, drain_k=4)
     if args.olaf:
         T.run_olaf_async(cfg, ns)
     else:

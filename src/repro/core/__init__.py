@@ -12,9 +12,10 @@ from repro.core.aggregation import Action, Update, aggregate, gate, replace
 from repro.core.aom import (aom_trajectory, average_aom, jain_fairness,
                             peak_aom, per_cluster_average_aom)
 from repro.core.olaf_queue import (JaxQueueState, PyFifoQueue, PyOlafQueue,
-                                   jax_dequeue, jax_enqueue,
+                                   jax_dequeue, jax_dequeue_burst,
+                                   jax_dequeue_burst_donating, jax_enqueue,
                                    jax_enqueue_batch, jax_enqueue_burst,
-                                   jax_queue_init)
+                                   jax_enqueue_burst_donating, jax_queue_init)
 from repro.core.txctl import (QueueFeedback, TransmissionController,
                               TxControlConfig)
 
@@ -23,6 +24,8 @@ __all__ = [
     "aom_trajectory", "average_aom", "jain_fairness", "peak_aom",
     "per_cluster_average_aom",
     "JaxQueueState", "PyFifoQueue", "PyOlafQueue", "jax_dequeue",
-    "jax_enqueue", "jax_enqueue_batch", "jax_enqueue_burst", "jax_queue_init",
+    "jax_dequeue_burst", "jax_dequeue_burst_donating", "jax_enqueue",
+    "jax_enqueue_batch", "jax_enqueue_burst", "jax_enqueue_burst_donating",
+    "jax_queue_init",
     "QueueFeedback", "TransmissionController", "TxControlConfig",
 ]

@@ -1,0 +1,264 @@
+"""Netsim/JAX hybrid multi-switch data plane (§8.3 topology on device).
+
+The paper splits each OLAF switch into a control plane (Algorithm 1 gating
+decisions on packet metadata) and a data plane (payload combining at line
+rate). This module makes the same split across the host/accelerator
+boundary for the SW1/SW2/SW3 multi-hop topology:
+
+  * control plane — the discrete-event :class:`~repro.core.netsim.
+    NetworkSimulator` runs metadata-only and emits its queue transitions
+    through the ``on_queue_event`` hook (the trace). The trace is replayed
+    against per-switch :class:`~repro.core.olaf_queue.PyOlafQueue` mirrors,
+    which re-derive every aggregate/replace/append/drop decision.
+  * data plane — all payload bytes live in one device-resident
+    ``(S, Q, D)`` slot buffer. Pending combines accumulate per switch and
+    are flushed with a single :func:`repro.kernels.ops.olaf_combine_multi`
+    launch covering SW1, SW2 and SW3 at once (the switch axis is folded
+    into the Pallas grid); forwarded SW1/SW2→SW3 packets and PS deliveries
+    are one-row device gathers. The kernel's ``gate`` carries each packet's
+    ``agg_count`` as its aggregation weight, so multi-hop combining stays
+    an exact weighted mean of the raw worker gradients.
+
+Windows close exactly when a transmission completes (a slot payload must be
+materialized before it leaves the switch), so under congestion — the OLAF
+operating point — many updates amortize each kernel launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.aggregation import Update
+from repro.core.netsim import NetworkSimulator, SimCfg, multihop_cfg
+from repro.core.olaf_queue import PyOlafQueue
+from repro.kernels.olaf_combine import _pick_tile_q as _largest_tile
+
+
+class _SwitchMirror:
+    """Metadata mirror of one switch: replayed PyOlafQueue + device-slot
+    assignment. ``slot_of_cluster`` holds a FIFO of slots per cluster —
+    normally one, momentarily two when a locked head coexists with a fresh
+    same-cluster append (§12.1)."""
+
+    def __init__(self, name: str, capacity: int,
+                 reward_threshold: Optional[float]) -> None:
+        self.name = name
+        self.queue = PyOlafQueue(capacity, reward_threshold)
+        self.free_slots: List[int] = list(range(capacity))[::-1]
+        self.slot_of_cluster: Dict[int, Deque[int]] = {}
+        # pending window entries: (slot, event, weight) with event in
+        # {"agg", "reset"}; payload rows ride in the parallel list
+        self.pending: List[Tuple[int, str, int]] = []
+        self.pending_rows: List[jnp.ndarray] = []
+
+    def classify(self, upd: Update) -> Tuple[Optional[int], str]:
+        """Replay Algorithm 1 on the metadata queue; classify the enqueue
+        by the stats delta and return ``(device_slot, event)``."""
+        st = self.queue.stats
+        before = (st.aggregations, st.replacements, st.enqueued, st.dropped)
+        self.queue.enqueue(upd)
+        if st.dropped != before[3]:
+            return None, "drop"
+        if st.enqueued != before[2]:  # fresh append -> allocate a slot
+            slot = self.free_slots.pop()
+            self.slot_of_cluster.setdefault(upd.cluster_id,
+                                            deque()).append(slot)
+            return slot, "reset"
+        # combine into the *unlocked* waiting update = the newest slot
+        slot = self.slot_of_cluster[upd.cluster_id][-1]
+        return slot, ("reset" if st.replacements != before[1] else "agg")
+
+    def pop_slot(self, cluster_id: int) -> int:
+        slots = self.slot_of_cluster[cluster_id]
+        slot = slots.popleft()
+        if not slots:
+            del self.slot_of_cluster[cluster_id]
+        self.free_slots.append(slot)
+        return slot
+
+
+@dataclasses.dataclass
+class HybridResult:
+    delivered: List[Tuple[float, Update, jnp.ndarray]]  # (time, meta, payload)
+    launches: int  # olaf_combine_multi kernel launches
+    combined_updates: int  # window entries that went through the kernel
+    queue_stats: Dict[str, Dict[str, int]]
+    final_counts: np.ndarray  # (S, Q) residual device slot counts
+    # per switch: device slot -> agg_count according to the metadata mirror
+    # (must agree with final_counts — the kernel's fused count output)
+    residual_slot_counts: Dict[str, Dict[int, int]] = dataclasses.field(
+        default_factory=dict)
+
+
+class HybridMultiSwitchDataPlane:
+    """Replays a netsim queue-event trace with device-resident payloads."""
+
+    def __init__(self, switch_cfgs, ingress_switches, dim: int,
+                 payload_rows: np.ndarray, *, interpret: bool = True) -> None:
+        self.names = [s.name for s in switch_cfgs]
+        self.index = {n: i for i, n in enumerate(self.names)}
+        self.next_hop = {s.name: s.next_hop for s in switch_cfgs}
+        self.ingress = set(ingress_switches)
+        self.mirrors = [_SwitchMirror(s.name, s.queue_slots,
+                                      s.reward_threshold)
+                        for s in switch_cfgs]
+        S = len(self.names)
+        Q = max(s.queue_slots for s in switch_cfgs)
+        assert all(s.queue_slots == Q for s in switch_cfgs), \
+            "one (S, Q, D) buffer => equal queue_slots per switch"
+        self.slots_dev = jnp.zeros((S, Q, dim), jnp.float32)
+        self.counts_dev = jnp.zeros((S, Q), jnp.int32)
+        self.dim = dim
+        self.tile_d = _largest_tile(dim, 512)  # shared divisor-shrink rule
+        self.interpret = interpret
+        self._rows = payload_rows  # (N, dim) ingress payloads in gen order
+        self._next_row = 0
+        self._zero_row = jnp.zeros((dim,), jnp.float32)
+        # per upstream switch: drained (meta, device row) awaiting next hop
+        self._forward: Dict[str, Deque[Tuple[Update, jnp.ndarray]]] = {
+            n: deque() for n in self.names}
+        self.delivered: List[Tuple[float, Update, jnp.ndarray]] = []
+        self.launches = 0
+        self.combined_updates = 0
+
+    # -- trace feed --------------------------------------------------------
+    def feed(self, now: float, sw_name: str, kind: str,
+             meta: Optional[Update]) -> None:
+        s = self.index[sw_name]
+        mirror = self.mirrors[s]
+        if kind == "lock":
+            mirror.queue.lock_head()
+            return
+        if kind == "enqueue":
+            if sw_name in self.ingress:  # fresh worker update
+                row = jnp.asarray(self._rows[self._next_row], jnp.float32)
+                self._next_row += 1
+                upd = Update(cluster_id=meta.cluster_id,
+                             worker_id=meta.worker_id,
+                             gen_time=meta.gen_time, reward=meta.reward,
+                             size_bits=meta.size_bits)
+            else:  # forwarded from the upstream switch that drained it
+                upd, row = self._match_forward(meta)
+            weight = upd.agg_count
+            slot, event = mirror.classify(upd)
+            if event != "drop":
+                mirror.pending.append((slot, event, weight))
+                mirror.pending_rows.append(row)
+            return
+        assert kind == "dequeue", kind
+        # a payload leaves the switch: land every pending combine first
+        self.flush()
+        upd = mirror.queue.dequeue()
+        assert upd is not None and upd.cluster_id == meta.cluster_id
+        slot = mirror.pop_slot(upd.cluster_id)
+        row = self.slots_dev[s, slot]
+        self.slots_dev = self.slots_dev.at[s, slot].set(0.0)
+        self.counts_dev = self.counts_dev.at[s, slot].set(0)
+        if self.next_hop[sw_name] is None:
+            self.delivered.append((now, upd, row))
+        else:
+            self._forward[sw_name].append((upd, row))
+
+    def _match_forward(self, meta: Update) -> Tuple[Update, jnp.ndarray]:
+        srcs = [n for n, q in self._forward.items()
+                if q and q[0][0].cluster_id == meta.cluster_id
+                and q[0][0].worker_id == meta.worker_id]
+        assert len(srcs) == 1, f"ambiguous forward match: {srcs}"
+        return self._forward[srcs[0]].popleft()
+
+    # -- the single-launch data plane --------------------------------------
+    def flush(self) -> None:
+        """One ``olaf_combine_multi`` launch landing every switch's pending
+        window into the (S, Q, D) slot buffer."""
+        if not any(m.pending for m in self.mirrors):
+            return
+        from repro.kernels import ops  # deferred: keeps netsim jax-light
+        S, Q, _ = self.slots_dev.shape
+        U = max(len(m.pending) for m in self.mirrors)
+        # bucket the window size to the next power of two so the jitted
+        # kernel compiles O(log U) variants instead of one per distinct U
+        U = max(4, 1 << (U - 1).bit_length())
+        clusters = np.zeros((S, U), np.int32)
+        gate = np.zeros((S, U), np.int32)
+        reset_mask = np.zeros((S, Q), bool)
+        rows: List[jnp.ndarray] = []
+        for s, m in enumerate(self.mirrors):
+            # telescoped-mean bookkeeping (same rule as jax_enqueue_burst):
+            # only the last reset per slot and the aggs after it contribute
+            last_reset = {}
+            for u, (slot, event, _) in enumerate(m.pending):
+                if event == "reset":
+                    last_reset[slot] = u
+            for u, (slot, event, weight) in enumerate(m.pending):
+                lr = last_reset.get(slot, -1)
+                contributes = (u > lr) if event == "agg" else (u == lr)
+                clusters[s, u] = slot
+                gate[s, u] = weight if contributes else 0
+            for slot in last_reset:
+                reset_mask[s, slot] = True  # slot restarts from the window
+            rows.extend(m.pending_rows)
+            rows.extend([self._zero_row] * (U - len(m.pending)))
+            self.combined_updates += len(m.pending)
+            m.pending, m.pending_rows = [], []
+        updates = jnp.stack(rows).reshape(S, U, self.dim)
+        counts_in = jnp.where(jnp.asarray(reset_mask), 0, self.counts_dev)
+        self.slots_dev, self.counts_dev = ops.olaf_combine_multi(
+            self.slots_dev, counts_in, updates, jnp.asarray(clusters),
+            jnp.asarray(gate), tile_d=self.tile_d, interpret=self.interpret)
+        self.launches += 1
+
+    def result(self) -> HybridResult:
+        self.flush()
+        residual: Dict[str, Dict[int, int]] = {}
+        for m in self.mirrors:
+            seen: Dict[int, int] = {}
+            slot_counts: Dict[int, int] = {}
+            for u in m.queue._q:  # seq order == per-cluster allocation order
+                idx = seen.get(u.cluster_id, 0)
+                seen[u.cluster_id] = idx + 1
+                slot_counts[m.slot_of_cluster[u.cluster_id][idx]] = u.agg_count
+            residual[m.name] = slot_counts
+        return HybridResult(
+            delivered=self.delivered, launches=self.launches,
+            combined_updates=self.combined_updates,
+            queue_stats={m.name: m.queue.stats.as_dict()
+                         for m in self.mirrors},
+            final_counts=np.asarray(self.counts_dev),
+            residual_slot_counts=residual)
+
+
+def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
+                        interpret: bool = True,
+                        payload_rows: Optional[np.ndarray] = None,
+                        sim_cfg: Optional[SimCfg] = None,
+                        **cfg_kw) -> Tuple[HybridResult, SimCfg]:
+    """SW1/SW2/SW3 hybrid run: metadata trace from the event-driven sim,
+    payload combining on device in one vmapped/multi-queue kernel launch
+    per transmission window.
+
+    ``payload_rows`` (N, dim) are consumed in worker-generation order (pass
+    the same array to a payload-carrying oracle sim to cross-check); when
+    omitted they are drawn from ``seed``.
+    """
+    cfg = sim_cfg if sim_cfg is not None else multihop_cfg(
+        "olaf", seed=seed, **cfg_kw)
+    events: List[Tuple[float, str, str, Optional[Update]]] = []
+    trace_cfg = dataclasses.replace(
+        cfg, on_queue_event=lambda now, sw, kind, upd: events.append(
+            (now, sw, kind, upd)))
+    sim_res = NetworkSimulator(trace_cfg).run()
+    if payload_rows is None:
+        rng = np.random.default_rng(seed + 1)
+        payload_rows = rng.normal(
+            size=(sim_res.sent + 1, dim)).astype(np.float32)
+    plane = HybridMultiSwitchDataPlane(
+        cfg.switches, {w.ingress_switch for w in cfg.workers}, dim,
+        payload_rows, interpret=interpret)
+    for now, sw, kind, meta in events:
+        plane.feed(now, sw, kind, meta)
+    return plane.result(), cfg

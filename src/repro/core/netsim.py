@@ -79,6 +79,12 @@ class SimCfg:
     payload_fn: Optional[Callable[[float, int], Tuple[Optional[np.ndarray], float]]] = None
     on_deliver: Optional[Callable[[float, Update], object]] = None
     on_ack: Optional[Callable[[float, int, object], None]] = None
+    # on_queue_event(now, switch_name, kind, update) with kind in
+    # {"enqueue", "lock", "dequeue"}: fires on every queue transition in
+    # event order. This is the control-plane trace consumed by the hybrid
+    # device data plane (``repro.core.hybrid``), which replays the switch
+    # decisions host-side while all payload bytes move on the accelerator.
+    on_queue_event: Optional[Callable[[float, str, str, Optional[Update]], None]] = None
 
 
 # --------------------------------------------------------------------------
@@ -263,11 +269,20 @@ class NetworkSimulator:
             self.deferred += 1  # worker keeps training; next update subsumes
         self._schedule_generation(w)
 
+    def _queue_event(self, name: str, kind: str, upd: Optional[Update]) -> None:
+        if self.cfg.on_queue_event is not None:
+            self.cfg.on_queue_event(self.now, name, kind, upd)
+
     # -- switch / queue path -------------------------------------------------
     def _arrive_at_switch(self, name: str, upd: Update) -> None:
         sw = self.switches[name]
         sw.last_seen[upd.cluster_id] = self.now
+        # snapshot before enqueue: the queue may merge-mutate the update
+        if self.cfg.on_queue_event is not None:
+            snap = dataclasses.replace(upd, payload=None)
         sw.queue.enqueue(upd)
+        if self.cfg.on_queue_event is not None:
+            self._queue_event(name, "enqueue", snap)
         if not sw.busy:
             self._start_transmission(sw)
 
@@ -279,11 +294,13 @@ class NetworkSimulator:
         sw.busy = True
         if isinstance(sw.queue, PyOlafQueue):
             sw.queue.lock_head()  # §12.1: in-flight update cannot be combined
+            self._queue_event(sw.cfg.name, "lock", head)
         tx_time = head.size_bits / sw.cfg.uplink.capacity_bps
         self._at(self.now + tx_time, lambda: self._finish_transmission(sw))
 
     def _finish_transmission(self, sw: _Switch) -> None:
         upd = sw.queue.dequeue()
+        self._queue_event(sw.cfg.name, "dequeue", upd)
         sw.busy = False
         if upd is not None:
             arrive = self.now + sw.cfg.uplink.prop_delay

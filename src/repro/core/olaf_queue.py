@@ -315,6 +315,59 @@ def jax_dequeue(state: JaxQueueState) -> Tuple[JaxQueueState, Dict[str, jnp.ndar
     return new_state, out
 
 
+def jax_dequeue_burst(state: JaxQueueState, k: int
+                      ) -> Tuple[JaxQueueState, Dict[str, jnp.ndarray]]:
+    """Drain-k: pop the ``k`` oldest valid slots in one fixed-shape pass.
+
+    Equivalent to ``k`` repeated :func:`jax_dequeue` calls (the oracle), but
+    the payload block is produced by a single one-hot ``(k, Q) × (Q, D)``
+    gather matmul instead of ``k`` sequential ``(Q, D)`` re-materializations
+    — O(Q·D + k·D) bytes moved instead of O(k·Q·D).
+
+    Returns ``(new_state, out)`` where every ``out`` entry has a leading
+    ``k`` axis in FIFO order (row 0 = oldest). ``out['valid']`` is a prefix
+    mask: occupied slots sort before empty ones (their ``seq`` is smaller
+    than the empty sentinel), so once a row is invalid all later rows are
+    too. ``out['n_valid']`` is the number of updates actually popped.
+    """
+    Q = state.cluster.shape[0]
+    k = min(int(k), Q)
+    # k smallest seqs == top-k of -seq. Valid slots have unique seq (the
+    # monotone next_seq counter) strictly below the empty sentinel, so the
+    # valid rows form a FIFO-ordered prefix; sentinel ties are broken by
+    # slot index, which is irrelevant because those rows are masked invalid.
+    _, slots = jax.lax.top_k(-state.seq, k)
+    valid = state.cluster[slots] >= 0
+    # one-hot gather (k, Q); invalid rows are zeroed so their payload is 0
+    # and they cannot clear a live slot.
+    onehot = ((slots[:, None] == jnp.arange(Q, dtype=slots.dtype)[None, :])
+              & valid[:, None])
+    payload = jnp.einsum("kq,qd->kd", onehot.astype(state.payload.dtype),
+                         state.payload)
+    out = dict(
+        valid=valid,
+        n_valid=valid.sum(),
+        cluster=state.cluster[slots],
+        worker=state.worker[slots],
+        gen_time=state.gen_time[slots],
+        reward=state.reward[slots],
+        agg_count=state.agg_count[slots],
+        payload=payload,
+    )
+    popped = jnp.any(onehot, axis=0)  # (Q,)
+    new_state = dataclasses.replace(
+        state,
+        cluster=jnp.where(popped, -1, state.cluster),
+        worker=jnp.where(popped, -1, state.worker),
+        seq=jnp.where(popped, _EMPTY_SEQ, state.seq),
+        reward=jnp.where(popped, -jnp.inf, state.reward),
+        agg_count=jnp.where(popped, 0, state.agg_count),
+        replaceable=jnp.where(popped, False, state.replaceable),
+        payload=jnp.where(popped[:, None], 0.0, state.payload),
+    )
+    return new_state, out
+
+
 def jax_enqueue_batch(state: JaxQueueState, clusters, workers, gen_times,
                       rewards, payloads, reward_threshold: float = jnp.inf) -> JaxQueueState:
     """Sequential (scan) batch enqueue — an incast burst hitting the queue.
@@ -445,3 +498,16 @@ def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
         cluster=cl, worker=wk, seq=sq, gen_time=gt, reward=rw, agg_count=cnt,
         replaceable=rp, payload=new_payload, next_seq=nseq,
         n_dropped=nd, n_agg=na, n_repl=nr)
+
+
+# ---------------------------------------------------------------------------
+# Donating jitted entry points for the PS hot loop.
+#
+# The queue state is donated: XLA reuses the O(Q·D) payload buffer in place
+# instead of copying it every call (a no-op on backends without donation,
+# e.g. CPU, where jax falls back to a copy). Callers must treat the passed-in
+# state as consumed and use only the returned one.
+# ---------------------------------------------------------------------------
+jax_enqueue_burst_donating = jax.jit(jax_enqueue_burst, donate_argnums=0)
+jax_dequeue_burst_donating = jax.jit(jax_dequeue_burst, static_argnums=1,
+                                     donate_argnums=0)

@@ -2,7 +2,12 @@
 
   olaf_combine     — the paper's data-plane burst combine (masked segment
                      running-mean into cluster slots as a one-hot MXU
-                     matmul; fused slot counts; optional multi-queue axis)
+                     matmul; per-update integer aggregation weights; fused
+                     slot counts; optional multi-queue axis)
+  olaf_enqueue     — fused burst enqueue: Algorithm 1 gating as an
+                     in-kernel scalar resolve over SMEM prefetch operands
+                     plus the telescoped-mean payload matmul, one launch
+                     per burst (oracle: olaf_queue.jax_enqueue_burst)
   flash_attention  — online-softmax attention, (BH, q_blocks, kv_blocks)
                      grid with VMEM scratch accumulators
   decode_attention — single-token GQA attention streaming a (possibly

@@ -48,7 +48,12 @@ def _combine_kernel(cluster_ref, gate_ref, count_ref, updates_ref, slots_ref,
     """One (queue s, Q-tile i, D-tile j) grid step.
 
     cluster_ref: (S, U) int32 SMEM (scalar prefetch) — cluster id per update
-    gate_ref:    (S, U) int32 SMEM — 1 if the update passed reward gating
+    gate_ref:    (S, U) int32 SMEM — aggregation weight per update: 0 drops
+                 it, 1 is a plain (un-aggregated) update, w > 1 means the
+                 update is itself the mean of w raw updates (a combined
+                 packet arriving from an upstream switch) and contributes
+                 with weight w — so multi-hop combining stays an exact
+                 weighted mean of the raw gradients
     count_ref:   (S, Q) int32 SMEM — current agg_count per slot
     updates_ref: (1, U, Dt) VMEM tile of incoming payloads
     slots_ref:   (1, Qt, Dt) VMEM tile of the current slot payloads
@@ -61,10 +66,11 @@ def _combine_kernel(cluster_ref, gate_ref, count_ref, updates_ref, slots_ref,
     gatev = gate_ref[s, :]
     counts = count_ref[s, pl.ds(i * tile_q, tile_q)]  # (Qt,)
 
-    # one-hot membership (Qt, U): 2-D iota (TPU requires >= 2-D iota)
+    # weighted one-hot membership (Qt, U): 2-D iota (TPU requires >= 2-D
+    # iota); each entry is the update's aggregation weight, not just 1.
     qids = i * tile_q + jax.lax.broadcasted_iota(jnp.int32, (tile_q, U), 0)
-    onehot = jnp.where((clusters[None, :] == qids) & (gatev[None, :] != 0),
-                       1.0, 0.0).astype(jnp.float32)
+    onehot = jnp.where(clusters[None, :] == qids,
+                       gatev[None, :], 0).astype(jnp.float32)
     hits = onehot.sum(axis=1).astype(jnp.int32)  # (Qt,)
 
     acc = slots_ref[0].astype(jnp.float32) * counts.astype(jnp.float32)[:, None]
@@ -140,3 +146,227 @@ def olaf_combine_pallas(slots: jnp.ndarray, counts: jnp.ndarray,
     if squeeze:
         new_slots, new_counts = new_slots[0], new_counts[0]
     return new_slots, new_counts
+
+
+# ===========================================================================
+# Fused enqueue kernel: Algorithm 1's gating *and* payload movement in one
+# launch (the device analogue of the switch pipeline's single pass).
+# ===========================================================================
+# Per-update burst events — mirror repro.core.olaf_queue._EV_*.
+_EV_DROP = 0
+_EV_AGG = 1
+_EV_RESET = 2
+
+
+def _enqueue_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
+                    updates_ref, slotpay_ref,
+                    out_ref, meta_i_ref, meta_f_ref,
+                    slots_scr, contrib_scr, lastreset_scr, *, tile_q: int):
+    """One (Q-tile i, D-tile j) grid step of the fused burst enqueue.
+
+    Scalar-prefetch SMEM operands:
+      qi_ref: (5, Q) int32 — queue [cluster, worker, seq, agg_count, replaceable]
+      qf_ref: (2, Q) f32   — queue [gen_time, reward]
+      qc_ref: (1, 4) int32 — counters [next_seq, n_dropped, n_agg, n_repl]
+      ui_ref: (2, U) int32 — burst [clusters, workers]
+      uf_ref: (3, U) f32   — burst [gen_times, rewards, reward_threshold row]
+    VMEM tiles: updates (U, Dt), slotpay (Qt, Dt).
+    Outputs: new payload tile (Qt, Dt); meta_i (9, Q) int32 (rows 0-4 the qi
+    columns, rows 5-8 the counters broadcast across Q); meta_f (2, Q) f32.
+    SMEM scratch: per-update slot / contributes (1, U) and per-slot
+    last-reset index (1, Q), written once at the first grid step and reused
+    by every later (i, j) step — TPU grid steps run sequentially on one
+    core, so scratch persists across the whole grid.
+
+    The scalar resolve is the same sequential Algorithm 1 walk as
+    ``olaf_queue._burst_resolve`` (a fori_loop over U carrying only (Q,)
+    metadata vectors, all decisions on the VPU from SMEM reads); the payload
+    movement is the telescoped weighted mean of ``jax_enqueue_burst``: one
+    one-hot (Qt, U) × (U, Dt) segment-sum on the MXU plus one blend.
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+    Q = qi_ref.shape[1]
+    U = ui_ref.shape[1]
+    qidx = jax.lax.broadcasted_iota(jnp.int32, (1, Q), 1)[0]
+    uidx = jax.lax.broadcasted_iota(jnp.int32, (1, U), 1)[0]
+
+    @pl.when((i == 0) & (j == 0))
+    def _resolve():
+        cl0 = qi_ref[0, :]
+        wk0 = qi_ref[1, :]
+        sq0 = qi_ref[2, :]
+        cnt0 = qi_ref[3, :]
+        rp0 = qi_ref[4, :]
+        gt0 = qf_ref[0, :]
+        rw0 = qf_ref[1, :]
+        thr = uf_ref[2, 0]
+
+        def body(u, carry):
+            (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+             slots_v, events_v) = carry
+            c = ui_ref[0, u]
+            w = ui_ref[1, u]
+            t = uf_ref[0, u]
+            r = uf_ref[1, u]
+            occupied = cl >= 0
+            same = occupied & (cl == c)
+            hit = jnp.any(same)
+            # scalar extraction from the (at most one) matching slot — a
+            # masked sum instead of a dynamic gather
+            w_worker = jnp.sum(jnp.where(same, wk, 0))
+            w_seq = jnp.sum(jnp.where(same, sq, 0))
+            w_cnt = jnp.sum(jnp.where(same, cnt, 0))
+            w_repl = jnp.any(same & (rp != 0))
+            w_reward = jnp.sum(jnp.where(same, rw, 0.0))
+            w_gt = jnp.sum(jnp.where(same, gt, 0.0))
+
+            swr = hit & w_repl & (w_worker == w)
+            rdiff = r - w_reward
+            do_rr = hit & ~swr & (rdiff > thr)
+            do_rd = hit & ~swr & (rdiff < -thr)
+            do_agg = hit & ~swr & ~do_rr & ~do_rd
+            full = jnp.all(occupied)
+            do_append = ~hit & ~full
+            do_dropf = ~hit & full
+
+            # min-index in place of argmax (lowers without gather support)
+            slot_hit = jnp.min(jnp.where(same, qidx, Q))
+            slot_append = jnp.min(jnp.where(~occupied, qidx, Q))
+            slot = jnp.minimum(jnp.where(hit, slot_hit, slot_append), Q - 1)
+            write = swr | do_rr | do_agg | do_append
+            onehot = (qidx == slot) & write
+
+            def put(old, new):
+                return jnp.where(onehot, new, old)
+
+            event = jnp.where(do_agg, _EV_AGG,
+                              jnp.where(write, _EV_RESET, _EV_DROP))
+            return (
+                put(cl, c),
+                put(wk, w),
+                put(sq, jnp.where(hit, w_seq, nseq)),
+                put(gt, jnp.where(do_agg, jnp.maximum(t, w_gt), t)),
+                put(rw, jnp.where(do_agg, jnp.maximum(r, w_reward), r)),
+                put(cnt, jnp.where(do_agg, w_cnt + 1, 1)),
+                put(rp, (swr | do_append).astype(jnp.int32)),
+                nseq + do_append.astype(jnp.int32),
+                nd + (do_dropf | do_rd).astype(jnp.int32),
+                na + do_agg.astype(jnp.int32),
+                nr + (swr | do_rr).astype(jnp.int32),
+                jnp.where(uidx == u, slot, slots_v),
+                jnp.where(uidx == u, event.astype(jnp.int32), events_v),
+            )
+
+        carry0 = (cl0, wk0, sq0, gt0, rw0, cnt0, rp0,
+                  qc_ref[0, 0], qc_ref[0, 1], qc_ref[0, 2], qc_ref[0, 3],
+                  jnp.zeros((U,), jnp.int32), jnp.zeros((U,), jnp.int32))
+        (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+         slots_v, events_v) = jax.lax.fori_loop(0, U, body, carry0)
+
+        # telescoped-mean bookkeeping: which updates survive into the slot
+        onehot_uq = slots_v[:, None] == qidx[None, :]  # (U, Q)
+        is_reset = events_v == _EV_RESET
+        is_agg = events_v == _EV_AGG
+        last_reset = jnp.max(
+            jnp.where(is_reset[:, None] & onehot_uq, uidx[:, None], -1),
+            axis=0)  # (Q,)
+        lr_u = jnp.sum(jnp.where(onehot_uq, last_reset[None, :], 0), axis=1)
+        contributes = ((is_agg & (uidx > lr_u))
+                       | (is_reset & (uidx == lr_u)))
+        slots_scr[0, :] = slots_v
+        contrib_scr[0, :] = contributes.astype(jnp.int32)
+        lastreset_scr[0, :] = last_reset
+
+        meta_i_ref[0, :] = cl
+        meta_i_ref[1, :] = wk
+        meta_i_ref[2, :] = sq
+        meta_i_ref[3, :] = cnt
+        meta_i_ref[4, :] = rp
+        meta_i_ref[5, :] = jnp.zeros((Q,), jnp.int32) + nseq
+        meta_i_ref[6, :] = jnp.zeros((Q,), jnp.int32) + nd
+        meta_i_ref[7, :] = jnp.zeros((Q,), jnp.int32) + na
+        meta_i_ref[8, :] = jnp.zeros((Q,), jnp.int32) + nr
+        meta_f_ref[0, :] = gt
+        meta_f_ref[1, :] = rw
+
+    # ---- payload pass (every grid step, MXU) ----------------------------
+    slots_v = slots_scr[0, :]
+    contrib = contrib_scr[0, :]
+    lr_tile = lastreset_scr[0, pl.ds(i * tile_q, tile_q)]
+    counts_tile = qi_ref[3, pl.ds(i * tile_q, tile_q)]  # pre-burst agg_count
+    qids = i * tile_q + jax.lax.broadcasted_iota(
+        jnp.int32, (tile_q, updates_ref.shape[0]), 0)
+    seg = jnp.where((slots_v[None, :] == qids) & (contrib[None, :] != 0),
+                    1.0, 0.0).astype(jnp.float32)  # (Qt, U)
+    sums = jnp.dot(seg, updates_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    n_contrib = seg.sum(axis=1)
+    base_n = jnp.where(lr_tile < 0, counts_tile, 0).astype(jnp.float32)
+    touched = (lr_tile >= 0) | (n_contrib > 0)
+    denom = jnp.maximum(base_n + n_contrib, 1.0)
+    old = slotpay_ref[...].astype(jnp.float32)
+    combined = (old * base_n[:, None] + sums) / denom[:, None]
+    out_ref[...] = jnp.where(touched[:, None], combined,
+                             old).astype(out_ref.dtype)
+
+
+def olaf_enqueue_pallas(cluster, worker, seq, gen_time, reward, agg_count,
+                        replaceable, next_seq, n_dropped, n_agg, n_repl,
+                        payload, clusters, workers, gen_times, rewards,
+                        payloads, reward_threshold=float("inf"), *,
+                        tile_q: int = DEFAULT_TILE_Q,
+                        tile_d: int = DEFAULT_TILE_D,
+                        interpret: bool = True):
+    """Single-launch fused burst enqueue over raw queue-state arrays.
+
+    Returns ``(new_payload (Q, D), meta_i (9, Q) int32, meta_f (2, Q) f32)``
+    — see :func:`_enqueue_kernel` for the packing. The JaxQueueState-typed
+    wrapper lives in ``repro.kernels.ops.olaf_enqueue``.
+    """
+    if pltpu is None:
+        raise ImportError("olaf_enqueue needs jax.experimental.pallas.tpu "
+                          "(PrefetchScalarGridSpec) — unavailable in this "
+                          "jax build")
+    Q, D = payload.shape
+    U = clusters.shape[0]
+    tile_q = _pick_tile_q(Q, tile_q)
+    tile_d = _pick_tile_q(D, tile_d)  # same largest-divisor shrink for D
+    i32, f32 = jnp.int32, jnp.float32
+    qi = jnp.stack([cluster.astype(i32), worker.astype(i32), seq.astype(i32),
+                    agg_count.astype(i32), replaceable.astype(i32)])
+    qf = jnp.stack([gen_time.astype(f32), reward.astype(f32)])
+    qc = jnp.stack([jnp.asarray(next_seq, i32), jnp.asarray(n_dropped, i32),
+                    jnp.asarray(n_agg, i32), jnp.asarray(n_repl, i32)])[None]
+    ui = jnp.stack([clusters.astype(i32), workers.astype(i32)])
+    uf = jnp.stack([gen_times.astype(f32), rewards.astype(f32),
+                    jnp.full((U,), reward_threshold, f32)])
+
+    grid = (Q // tile_q, D // tile_d)
+    kernel = functools.partial(_enqueue_kernel, tile_q=tile_q)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,  # qi, qf, qc, ui, uf -> SMEM
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((U, tile_d), lambda i, j, *prefetch: (0, j)),
+                pl.BlockSpec((tile_q, tile_d), lambda i, j, *prefetch: (i, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec((tile_q, tile_d), lambda i, j, *prefetch: (i, j)),
+                pl.BlockSpec((9, Q), lambda i, j, *prefetch: (0, 0)),
+                pl.BlockSpec((2, Q), lambda i, j, *prefetch: (0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.SMEM((1, U), jnp.int32),
+                pltpu.SMEM((1, U), jnp.int32),
+                pltpu.SMEM((1, Q), jnp.int32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, D), payload.dtype),
+            jax.ShapeDtypeStruct((9, Q), jnp.int32),
+            jax.ShapeDtypeStruct((2, Q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qi, qf, qc, ui, uf, payloads, payload)

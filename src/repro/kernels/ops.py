@@ -12,9 +12,10 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core.olaf_queue import JaxQueueState
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.olaf_combine import olaf_combine_pallas
+from repro.kernels.olaf_combine import olaf_combine_pallas, olaf_enqueue_pallas
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
 
@@ -51,6 +52,33 @@ def olaf_combine_multi(slots, counts, updates, clusters, gate, *,
     """
     return olaf_combine(slots, counts, updates, clusters, gate,
                         tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_d", "interpret"))
+def olaf_enqueue(state: JaxQueueState, clusters, workers, gen_times, rewards,
+                 payloads, reward_threshold=jnp.inf, *, tile_q: int = 8,
+                 tile_d: int = 512, interpret: bool = _INTERPRET
+                 ) -> JaxQueueState:
+    """Fused single-launch burst enqueue (Algorithm 1 for U updates).
+
+    Drop-in replacement for ``repro.core.olaf_queue.jax_enqueue_burst`` (the
+    oracle it is tested against): the ``_burst_resolve`` scalar scan runs
+    inside the kernel from SMEM scalar-prefetch operands and the payload
+    telescoped-mean runs on the MXU over the same (Q-tile × D-tile) grid as
+    ``olaf_combine`` — one kernel launch for the whole burst instead of a
+    scan + einsum + blend pipeline.
+    """
+    new_payload, mi, mf = olaf_enqueue_pallas(
+        state.cluster, state.worker, state.seq, state.gen_time, state.reward,
+        state.agg_count, state.replaceable, state.next_seq, state.n_dropped,
+        state.n_agg, state.n_repl, state.payload,
+        clusters, workers, gen_times, rewards, payloads, reward_threshold,
+        tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+    return JaxQueueState(
+        cluster=mi[0], worker=mi[1], seq=mi[2], gen_time=mf[0], reward=mf[1],
+        agg_count=mi[3], replaceable=mi[4].astype(bool), payload=new_payload,
+        next_seq=mi[5, 0], n_dropped=mi[6, 0], n_agg=mi[7, 0],
+        n_repl=mi[8, 0])
 
 
 @functools.partial(jax.jit, static_argnames=(

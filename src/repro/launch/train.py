@@ -74,8 +74,17 @@ def run_olaf_async(cfg, args) -> float:
     their own shard streams and push flattened updates through the device-
     resident OlafQueue; the PS side drains the queue and applies combined
     updates. Workers proceed without a barrier — a straggler's update merges
-    or is superseded (the paper's technique applied to LM training)."""
-    from repro.core.olaf_queue import (jax_dequeue, jax_enqueue_burst,
+    or is superseded (the paper's technique applied to LM training).
+
+    The whole enqueue→combine→drain→apply cycle is ONE jitted step with
+    donated queue/params/opt buffers: the burst is pushed through
+    ``jax_enqueue_burst``, the k oldest updates are drained with
+    ``jax_dequeue_burst`` (drain-k), and their agg_count-weighted mean
+    gradient is applied — no per-update ``jax_dequeue`` round trips and no
+    host sync inside the loop. Only buffered scalar logs cross the host
+    boundary, in batches of ``log_every``.
+    """
+    from repro.core.olaf_queue import (jax_dequeue_burst, jax_enqueue_burst,
                                        jax_queue_init)
     from repro.models.module import tree_paths
 
@@ -86,6 +95,7 @@ def run_olaf_async(cfg, args) -> float:
     sizes = {k: int(np.prod(v.shape)) for k, v in flat_like.items()}
     dim = sum(sizes.values())
     queue = jax_queue_init(capacity=max(args.workers, 4), dim=dim)
+    drain_k = max(1, min(args.drain_k, max(args.workers, 4)))
 
     shards = [SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                      global_batch=args.batch,
@@ -113,6 +123,34 @@ def run_olaf_async(cfg, args) -> float:
             d[parts[-1]] = leaf
         return root
 
+    def ps_step(queue, params, opt_state, clusters, workers, times, rewards,
+                payloads, losses):
+        """enqueue_burst → drain_k → weighted combined-gradient apply.
+
+        After a non-empty burst enqueue the queue always holds at least one
+        update (either something was already waiting or the burst appended),
+        so the drain is guaranteed to pop ≥ 1 valid update and every call is
+        exactly one optimizer step — no validity round trip needed.
+        """
+        queue = jax_enqueue_burst(queue, clusters, workers, times, rewards,
+                                  payloads)
+        queue, out = jax_dequeue_burst(queue, drain_k)
+        # each popped payload is the mean of agg_count raw gradients; the
+        # applied gradient is their exact weighted mean
+        wts = out["valid"] * out["agg_count"].astype(jnp.float32)
+        g_flat = jnp.einsum("k,kd->d", wts, out["payload"]) \
+            / jnp.maximum(wts.sum(), 1.0)
+        g = unflatten_like(g_flat, params)
+        params, opt_state = apply_updates(params, g, opt_state, opt)
+        stats = dict(loss=jnp.mean(losses), applied=out["n_valid"],
+                     combined=wts.sum(), agg_total=queue.n_agg,
+                     occupancy=(queue.cluster >= 0).sum())
+        return queue, params, opt_state, stats
+
+    # donated buffers: the O(Q·D) queue payload and the params/opt trees are
+    # updated in place instead of copied every step
+    ps_step = jax.jit(ps_step, donate_argnums=(0, 1, 2))
+
     grad_fn = jax.jit(jax.value_and_grad(
         lambda p, b: api.loss_fn(p, b, cfg)))
     rng = np.random.default_rng(args.seed)
@@ -120,14 +158,26 @@ def run_olaf_async(cfg, args) -> float:
     worker_next = np.zeros(args.workers)
     worker_step = np.zeros(args.workers, int)
     n_clusters = max(args.workers // 2, 2)  # workers grouped into clusters
-    burst_size = 2  # updates arriving per PS drain (opportunistic window)
-    losses = []
-    applied = 0
-    while applied < args.steps:
+    burst_size = max(1, args.burst_size)
+    pending = []  # device-side per-step stats, drained in batches
+    log_rows = []  # host-side (step, loss, combined) after each flush
+    # logging disabled -> one flush at the end, never a mid-loop sync
+    flush_every = args.log_every if args.log_every > 0 else max(args.steps, 1)
+
+    def flush():
+        # one host sync for the whole batch of buffered scalars
+        for row in jax.device_get(pending):
+            step = len(log_rows) + 1
+            log_rows.append((step, float(row["loss"]), int(row["combined"])))
+        del pending[:]
+
+    t0 = time.time()
+    for it in range(args.steps):
         # congested PS: a burst of updates arrives between drains, so
         # same-cluster updates meet in the queue and combine (the paper's
         # opportunistic window) — pushed through the fused burst fast path.
         burst = dict(c=[], w=[], t=[], r=[], p=[])
+        burst_losses = []
         for _ in range(burst_size):
             w = int(np.argmin(worker_next))  # next worker to finish (async)
             batch = {k: jnp.asarray(v)
@@ -138,26 +188,29 @@ def run_olaf_async(cfg, args) -> float:
             burst["t"].append(worker_next[w])
             burst["r"].append(-loss)
             burst["p"].append(flatten(grads))
+            burst_losses.append(loss)
             worker_step[w] += 1
             worker_next[w] += worker_speed[w]
-        queue = jax_enqueue_burst(
-            queue, jnp.asarray(burst["c"], jnp.int32),
+        queue, params, opt_state, stats = ps_step(
+            queue, params, opt_state,
+            jnp.asarray(burst["c"], jnp.int32),
             jnp.asarray(burst["w"], jnp.int32),
             jnp.asarray(burst["t"], jnp.float32),
             jnp.stack(burst["r"]).astype(jnp.float32),
-            jnp.stack(burst["p"]))
-        queue, out = jax_dequeue(queue)
-        if bool(out["valid"]):
-            g = unflatten_like(out["payload"], params)
-            params, opt_state = apply_updates(params, g, opt_state, opt)
-            applied += 1
-            losses.append(float(loss))
-            if args.log_every and applied % args.log_every == 0:
-                agg = int(out["agg_count"])
-                print(f"applied {applied}: loss {float(loss):.4f} "
-                      f"(combined {agg} updates)")
+            jnp.stack(burst["p"]), jnp.stack(burst_losses))
+        pending.append(stats)
+        if len(pending) >= flush_every:
+            flush()
+            if args.log_every:
+                step, loss_v, combined = log_rows[-1]
+                print(f"applied {step}: loss {loss_v:.4f} "
+                      f"(combined {combined} updates)")
+    flush()
+    wall = time.time() - t0
+    losses = [l for _, l, _ in log_rows]
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}); "
-          f"queue aggregations {int(queue.n_agg)}")
+          f"queue aggregations {int(queue.n_agg)}; "
+          f"{args.steps / max(wall, 1e-9):.2f} steps/s")
     return losses[-1]
 
 
@@ -172,6 +225,10 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--burst-size", type=int, default=2,
+                    help="updates arriving per PS drain (olaf-async)")
+    ap.add_argument("--drain-k", type=int, default=4,
+                    help="queue slots drained per jitted PS step (olaf-async)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)

@@ -62,3 +62,17 @@ class ParameterServer:
             self.rejected += 1
             self.reward_log.append((now, reward, False))
         return self.w
+
+    def on_updates(self, now: float, payloads: np.ndarray, rewards: np.ndarray,
+                   gen_times: np.ndarray, agg_counts: np.ndarray) -> np.ndarray:
+        """Drain-k batched apply: a block of k drained updates is combined
+        into one ``agg_count``-weighted mean gradient and applied through the
+        same reward-gated rule, carrying the batch's best reward and freshest
+        gen_time (the combined update subsumes its constituents, mirroring
+        ``aggregation.aggregate``)."""
+        w = np.asarray(agg_counts, np.float64)
+        if w.size == 0 or w.sum() <= 0:
+            return self.w
+        g = (w[:, None] * np.asarray(payloads, np.float64)).sum(0) / w.sum()
+        return self.on_update(now, g, float(np.max(rewards)),
+                              float(np.max(gen_times)))

@@ -47,6 +47,12 @@ class AsyncTrainConfig:
     local_lr: float = 5e-3  # worker-side local step while awaiting ACK
     seed: int = 0
     horizon: float = 1e9
+    # Device-resident PS drain pipeline: 0 applies every delivery on the
+    # spot (legacy); k > 0 stages deliveries in a device OlafQueue and every
+    # k-th delivery drains them with one jitted enqueue_burst→dequeue_burst
+    # step, applying the agg_count-weighted mean via ``ps.on_updates``.
+    # ACKs between drains carry the then-current (possibly stale) weights.
+    ps_drain_k: int = 0
 
 
 @dataclasses.dataclass
@@ -83,6 +89,14 @@ class AsyncDRLTrainer:
         self.deliveries_per_worker: Dict[int, int] = {i: 0 for i in range(n_workers)}
         self.reward_curve: List[Tuple[float, float]] = []
         self.time_to_n: Dict[int, float] = {}
+        if cfg.ps_drain_k > 0:
+            from repro.core.olaf_queue import jax_queue_init
+            # clamp to the staging capacity: enqueueing more than
+            # queue_slots distinct clusters per drain would silently drop
+            # staged gradients through the full-queue rule
+            self._drain_k = min(cfg.ps_drain_k, cfg.queue_slots)
+            self._ps_queue = jax_queue_init(cfg.queue_slots, int(flat0.size))
+            self._ps_buf: List[tuple] = []
         rng = np.random.default_rng(cfg.seed)
 
         workers = []
@@ -118,14 +132,47 @@ class AsyncDRLTrainer:
 
     # -- PS side --------------------------------------------------------------
     def _on_deliver(self, now: float, upd):
-        w = self.ps.on_update(now, upd.payload, upd.reward, upd.gen_time)
-        if self.ps.reward_log and self.ps.reward_log[-1][2]:
-            self.reward_curve.append((now, upd.reward))
         self.deliveries_per_worker[upd.worker_id] += 1
         n_done = min(self.deliveries_per_worker.values())
         if n_done not in self.time_to_n:
             self.time_to_n[n_done] = now
-        return np.asarray(w, np.float32)
+        if self.cfg.ps_drain_k <= 0:  # legacy: apply every delivery directly
+            w = self.ps.on_update(now, upd.payload, upd.reward, upd.gen_time)
+            if self.ps.reward_log and self.ps.reward_log[-1][2]:
+                self.reward_curve.append((now, upd.reward))
+            return np.asarray(w, np.float32)
+        self._ps_buf.append((upd.cluster_id, upd.worker_id, upd.gen_time,
+                             upd.reward, np.asarray(upd.payload, np.float32)))
+        if len(self._ps_buf) >= self._drain_k:
+            self._drain_ps_queue(now)
+        return np.asarray(self.ps.w, np.float32)
+
+    def _drain_ps_queue(self, now: float) -> int:
+        """One jitted enqueue_burst → dequeue_burst(k) step over the staged
+        deliveries; applies the drained block via ``ps.on_updates``. Returns
+        the number of updates popped."""
+        import jax.numpy as jnp
+        from repro.core.olaf_queue import (jax_dequeue_burst_donating,
+                                           jax_enqueue_burst_donating)
+        if self._ps_buf:
+            c, w, t, r, p = zip(*self._ps_buf)
+            self._ps_buf = []
+            self._ps_queue = jax_enqueue_burst_donating(
+                self._ps_queue, jnp.asarray(c, jnp.int32),
+                jnp.asarray(w, jnp.int32), jnp.asarray(t, jnp.float32),
+                jnp.asarray(r, jnp.float32), jnp.asarray(np.stack(p)))
+        self._ps_queue, out = jax_dequeue_burst_donating(
+            self._ps_queue, self._drain_k)
+        valid = np.asarray(out["valid"])
+        if not valid.any():
+            return 0
+        rewards = np.asarray(out["reward"])[valid]
+        self.ps.on_updates(now, np.asarray(out["payload"])[valid], rewards,
+                           np.asarray(out["gen_time"])[valid],
+                           np.asarray(out["agg_count"])[valid])
+        if self.ps.reward_log and self.ps.reward_log[-1][2]:
+            self.reward_curve.append((now, float(rewards.max())))
+        return int(valid.sum())
 
     def _on_ack(self, now: float, worker_id: int, payload):
         if payload is not None:
@@ -136,6 +183,11 @@ class AsyncDRLTrainer:
     def run(self, eval_every: int = 0) -> AsyncTrainResult:
         sim = NetworkSimulator(self.sim_cfg)
         res = sim.run()
+        if self.cfg.ps_drain_k > 0:
+            # flush the partial staging buffer, then keep draining until
+            # the staging queue pops nothing
+            while self._drain_ps_queue(sim.now):
+                pass
         final = unflatten_params(jax.numpy.asarray(self.ps.w, np.float32),
                                  self.spec)
         evals: List[float] = []

@@ -1,0 +1,80 @@
+"""The netsim/JAX hybrid multi-switch data plane vs the payload-carrying
+simulator oracle.
+
+Both runs consume the identical worker-generation payload sequence; the
+oracle moves every payload byte host-side through the PyOlafQueue switches,
+while the hybrid moves them device-side with one ``olaf_combine_multi``
+launch per transmission window (SW1/SW2/SW3 folded into a single kernel
+grid). PS delivery order, metadata and combined payloads must agree.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.hybrid import run_hybrid_multihop
+from repro.core.netsim import NetworkSimulator, multihop_cfg
+
+DIM = 128
+CFG_KW = dict(n_clusters_per_group=2, workers_per_cluster=2, horizon=0.25,
+              interval_s1=0.02, interval_s2=0.025, x1_gbps=0.5e-3,
+              x2_gbps=0.5e-3, sw3_gbps=0.8e-3, size_bits=8192,
+              sw12_slots=4, sw3_slots=4)
+
+
+def _oracle_run(cfg, rows):
+    it = iter(rows)
+    delivered = []
+    oracle_cfg = dataclasses.replace(
+        cfg,
+        payload_fn=lambda now, wid: (next(it).copy(), 0.0),
+        on_deliver=lambda now, upd: delivered.append(
+            (now, upd.cluster_id, upd.agg_count, upd.payload.copy())))
+    res = NetworkSimulator(oracle_cfg).run()
+    return res, delivered
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_hybrid_matches_payload_oracle(seed):
+    cfg = multihop_cfg("olaf", seed=seed, **CFG_KW)
+    rng = np.random.default_rng(seed * 77)
+    rows = rng.normal(size=(4000, DIM)).astype(np.float32)
+    sim_res, delivered = _oracle_run(cfg, rows)
+    hyb, _ = run_hybrid_multihop(DIM, payload_rows=rows, sim_cfg=cfg)
+
+    assert len(delivered) == len(hyb.delivered) > 0
+    for (t0, c0, a0, p0), (t1, u1, p1) in zip(delivered, hyb.delivered):
+        # the hybrid records the dequeue instant; the oracle's on_deliver
+        # fires one uplink propagation delay (1 us) later
+        assert abs(t0 - t1) < 2e-6
+        assert c0 == u1.cluster_id and a0 == u1.agg_count
+        np.testing.assert_allclose(p0, np.asarray(p1), rtol=1e-4, atol=1e-5)
+
+    # the congested run must actually aggregate on device, in batched
+    # windows (fewer launches than window entries)
+    assert hyb.combined_updates > len(hyb.delivered)
+    assert hyb.launches <= hyb.combined_updates
+    # the three switch mirrors replayed the same Algorithm 1 decisions
+    for name, stats in hyb.queue_stats.items():
+        assert stats == sim_res.queue_stats[name], name
+
+
+def test_hybrid_counts_match_mirror_queues():
+    """Residual device slot counts equal the metadata queues' agg_counts —
+    the kernel's fused count output tracks the control plane exactly."""
+    cfg = multihop_cfg("olaf", seed=5, **CFG_KW)
+    hyb, _ = run_hybrid_multihop(DIM, sim_cfg=cfg)
+    names = list(hyb.queue_stats)
+    for s, name in enumerate(names):
+        want = hyb.residual_slot_counts[name]
+        got = {slot: int(c) for slot, c in enumerate(hyb.final_counts[s])
+               if c > 0}
+        assert got == want, (name, got, want)
+
+
+def test_multi_hop_weighted_aggregation_reaches_ps():
+    """SW3 receives pre-combined SW1/SW2 packets; their agg_count weights
+    must survive to the PS (some delivery carries agg_count > 1)."""
+    cfg = multihop_cfg("olaf", seed=3, **CFG_KW)
+    hyb, _ = run_hybrid_multihop(DIM, sim_cfg=cfg)
+    assert any(u.agg_count > 1 for _, u, _ in hyb.delivered)

@@ -94,6 +94,37 @@ class TestOlafCombine:
         np.testing.assert_allclose(np.asarray(got[0]), 3.0, rtol=1e-6)
         assert int(cnt[0]) == 2 and int(cnt[1]) == 0
 
+    def test_weighted_gate(self):
+        """gate > 1 contributes with that aggregation weight: combining a
+        pre-combined packet (the mean of w raws) stays an exact weighted
+        mean of the raw updates — the multi-hop SW1/SW2 -> SW3 case."""
+        rng = np.random.default_rng(21)
+        Q, U, D = 4, 6, 128
+        slots = rand(rng, (Q, D), jnp.float32)
+        counts = jnp.asarray(rng.integers(0, 4, (Q,)), jnp.int32)
+        updates = rand(rng, (U, D), jnp.float32)
+        clusters = jnp.asarray(rng.integers(0, Q, (U,)), jnp.int32)
+        gate = jnp.asarray(rng.integers(0, 5, (U,)), jnp.int32)  # weights
+        got, got_counts = ops.olaf_combine(slots, counts, updates, clusters,
+                                           gate, tile_d=128)
+        want, want_counts = ref.olaf_combine_ref(slots, counts, updates,
+                                                 clusters, gate)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got_counts),
+                                      np.asarray(want_counts))
+        # hand-check one slot: new = (slot*n + sum w_u upd_u) / (n + sum w_u)
+        q = int(clusters[0])
+        sel = np.asarray(clusters) == q
+        w = np.asarray(gate, np.float64)[sel]
+        if w.sum() > 0:
+            n = float(counts[q])
+            manual = ((np.asarray(slots[q], np.float64) * n
+                       + (w[:, None] * np.asarray(updates, np.float64)[sel])
+                       .sum(0)) / (n + w.sum()))
+            np.testing.assert_allclose(np.asarray(got[q]), manual,
+                                       rtol=1e-5, atol=1e-5)
+
     def test_matches_jax_queue_aggregation(self):
         """Kernel burst-combine == sequential JaxQueue aggregation."""
         from repro.core.olaf_queue import jax_enqueue, jax_queue_init
