@@ -1,12 +1,16 @@
 """Device-resident PS drain pipeline benchmarks (BENCH_train.json).
 
-Two measurements of the enqueue→combine→drain→apply cycle:
+Three measurements of the enqueue→combine→drain→apply cycle:
 
   * ``ps_step_micro`` — the PS step in isolation (no gradient compute):
     the PR 1 loop (burst enqueue, then one ``jax_dequeue`` + a host
     validity round trip + a separately-dispatched apply per iteration)
     vs the jitted zero-round-trip step (``jax_enqueue_burst`` →
     ``jax_dequeue_burst`` → weighted apply, donated buffers, one dispatch).
+  * ``olaf_step_vs_two_launch`` — the PR 3 fused single-launch cycle vs
+    the PR 2 two-launch host-coordinated drain pipeline (the
+    ``bench_step.olaf_step_micro`` measurement, recorded here too so the
+    train suite carries the ≥2× acceptance row).
   * ``olaf_async_e2e`` — ``run_olaf_async`` end to end on a tiny LM
     (gradient compute included, so the PS-step win is diluted by the
     model's forward/backward): legacy inline loop vs the restructured
@@ -200,9 +204,18 @@ def main(report):
            f"legacy {micro['legacy_us']:.0f}us vs fused "
            f"{micro['fused_us']:.0f}us = {micro['speedup']:.1f}x "
            f"(burst {micro['burst']}, drain-k {micro['k']})")
+    # the PR 3 cycle: fused single-launch olaf_step vs the PR 2 two-launch
+    # drain pipeline, same run (the ratio is machine-independent)
+    from benchmarks.bench_step import olaf_step_micro
+    cyc = olaf_step_micro()
+    report("olaf_step_vs_two_launch_q8_d64k", cyc["fused_us"],
+           f"two-launch {cyc['two_launch_us']:.0f}us vs fused "
+           f"{cyc['fused_us']:.0f}us = {cyc['speedup']:.1f}x "
+           f"(burst {cyc['burst']}, drain-k {cyc['k']})")
     e2e = olaf_async_e2e()
     report("olaf_async_e2e_steps_per_s", 1e6 / max(e2e["new_steps_per_s"], 1e-9),
            f"legacy {e2e['legacy_steps_per_s']:.2f} vs jitted PS step "
            f"{e2e['new_steps_per_s']:.2f} steps/s = {e2e['speedup']:.2f}x "
            f"(tiny LM, gradient compute included)")
-    return dict(ps_step_micro=micro, olaf_async_e2e=e2e)
+    return dict(ps_step_micro=micro, olaf_step_cycle=cyc,
+                olaf_async_e2e=e2e)

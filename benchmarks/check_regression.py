@@ -34,6 +34,7 @@ EXP = REPO / "experiments"
 STABLE_KEYS = {
     "queue": ["burst_vs_scan_u64_q32_d64k", "drain_vs_seq_k8_q32_d64k"],
     "train": ["ps_step_micro_q32_d64k"],
+    "step": ["olaf_step_fused_q8_d64k"],
     "kernels": [],  # interpret-mode sweeps: tracked in the diff, not gated
 }
 ABS_FLOOR_US = 500.0
@@ -41,10 +42,15 @@ ABS_FLOOR_US = 500.0
 # suite -> benchmark -> minimum same-run speedup. Deliberately below the
 # locally-recorded values (13.5x / 6.3x / 1.9x / 5.3x at the time of
 # writing) so shared-runner noise does not flake, while a fast path that
-# stops being a fast path still fails.
+# stops being a fast path still fails. ``olaf_step_cycle`` is the PR 3
+# acceptance gate: the fused single-launch step must stay >= 2x over the
+# PR 2 two-launch drain pipeline, measured in the same run so the machine
+# factor cancels (recorded from both the train and step suites).
 SPEEDUP_FLOORS = {
     "queue": {"burst_fast_path": 5.0, "drain_fast_path": 3.0},
-    "train": {"ps_step_micro": 1.1, "olaf_async_e2e": 1.5},
+    "train": {"ps_step_micro": 1.1, "olaf_async_e2e": 1.5,
+              "olaf_step_cycle": 2.0},
+    "step": {"olaf_step_cycle": 2.0},
 }
 
 

@@ -18,8 +18,8 @@ OUT_DIR = Path(__file__).resolve().parents[1] / "experiments"
 
 def main() -> None:
     from benchmarks import (bench_kernels, bench_multihop, bench_queue,
-                            bench_roofline, bench_train, bench_training,
-                            bench_verifier)
+                            bench_roofline, bench_step, bench_train,
+                            bench_training, bench_verifier)
     results = {}
     print("name,us_per_call,derived")
 
@@ -32,7 +32,8 @@ def main() -> None:
 
     modules = [
         ("queue", bench_queue), ("multihop", bench_multihop),
-        ("train", bench_train), ("training", bench_training),
+        ("train", bench_train), ("step", bench_step),
+        ("training", bench_training),
         ("verifier", bench_verifier), ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]

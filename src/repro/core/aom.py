@@ -90,3 +90,80 @@ def jain_fairness(values: Iterable[float]) -> float:
 def per_cluster_average_aom(deliveries_by_cluster: Dict[int, Sequence[Tuple[float, float]]],
                             horizon: float) -> Dict[int, float]:
     return {c: average_aom(sorted(d), horizon) for c, d in deliveries_by_cluster.items()}
+
+
+# ===========================================================================
+# Device-resident running AoM accumulator — the sawtooth integral updated
+# inside the jitted PS step, so staleness tracking costs zero host syncs.
+# ===========================================================================
+import dataclasses as _dc  # noqa: E402  (kept below the numpy-only API)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+@jax.tree_util.register_dataclass
+@_dc.dataclass
+class JaxAoMState:
+    """Running sawtooth state: the trapezoid integral accumulated so far,
+    the last delivery time, and the freshest generation time the PS holds.
+    Scalars, so the state rides along in the jitted step's carry for free.
+    """
+
+    last_t: jnp.ndarray  # float32[] — time of the last processed delivery
+    last_gen: jnp.ndarray  # float32[] — freshest generation time at the PS
+    integral: jnp.ndarray  # float32[] — ∫ AoM dt over [0, last_t]
+
+
+def jax_aom_init(t0: float = 0.0) -> JaxAoMState:
+    """Matches :func:`aom_trajectory`'s ``t0`` convention: AoM(0) = -t0."""
+    return JaxAoMState(last_t=jnp.zeros((), jnp.float32),
+                       last_gen=jnp.asarray(t0, jnp.float32),
+                       integral=jnp.zeros((), jnp.float32))
+
+
+def jax_aom_update(state: JaxAoMState, t, gen, valid=True) -> JaxAoMState:
+    """Fold one delivery ``(t, gen)`` into the sawtooth integral.
+
+    Between deliveries the age grows with slope one, so the area from the
+    previous delivery to this one is an exact trapezoid; the post-jump age
+    keeps the *freshest* generation time (an older delivery does not
+    rejuvenate the model). ``valid=False`` is a no-op row, so a fixed-shape
+    drained block can be folded with its validity mask.
+    """
+    t = jnp.asarray(t, jnp.float32)
+    gen = jnp.asarray(gen, jnp.float32)
+    valid = jnp.asarray(valid, bool)
+    dt = t - state.last_t
+    area = dt * ((state.last_t - state.last_gen) + (t - state.last_gen)) / 2.0
+    return JaxAoMState(
+        last_t=jnp.where(valid, t, state.last_t),
+        last_gen=jnp.where(valid, jnp.maximum(state.last_gen, gen),
+                           state.last_gen),
+        integral=jnp.where(valid, state.integral + area, state.integral),
+    )
+
+
+def jax_aom_update_block(state: JaxAoMState, ts, gens, valids) -> JaxAoMState:
+    """Fold a drained block of deliveries (k rows, FIFO order) in one scan —
+    the shape produced by ``olaf_step``'s drain output."""
+    def body(st, xs):
+        t, g, v = xs
+        return jax_aom_update(st, t, g, v), None
+
+    state, _ = jax.lax.scan(
+        body, state, (jnp.asarray(ts, jnp.float32),
+                      jnp.asarray(gens, jnp.float32),
+                      jnp.asarray(valids, bool)))
+    return state
+
+
+def jax_aom_average(state: JaxAoMState, horizon) -> jnp.ndarray:
+    """Time-average AoM over [0, horizon]: the accumulated integral plus the
+    open tail after the last delivery. Matches :func:`average_aom` on the
+    same delivery log (tested in tests/test_aom_txctl.py)."""
+    horizon = jnp.asarray(horizon, jnp.float32)
+    dt = horizon - state.last_t
+    tail = dt * ((state.last_t - state.last_gen)
+                 + (horizon - state.last_gen)) / 2.0
+    return (state.integral + tail) / jnp.maximum(horizon, 1e-9)

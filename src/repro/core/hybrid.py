@@ -99,7 +99,8 @@ class HybridMultiSwitchDataPlane:
     """Replays a netsim queue-event trace with device-resident payloads."""
 
     def __init__(self, switch_cfgs, ingress_switches, dim: int,
-                 payload_rows: np.ndarray, *, interpret: bool = True) -> None:
+                 payload_rows: np.ndarray, *, interpret: bool = True,
+                 sharded: bool = False) -> None:
         self.names = [s.name for s in switch_cfgs]
         self.index = {n: i for i, n in enumerate(self.names)}
         self.next_hop = {s.name: s.next_hop for s in switch_cfgs}
@@ -116,6 +117,11 @@ class HybridMultiSwitchDataPlane:
         self.dim = dim
         self.tile_d = _largest_tile(dim, 512)  # shared divisor-shrink rule
         self.interpret = interpret
+        self.sharded = sharded
+        self._mesh = None
+        if sharded:
+            from repro.distributed.sharding import switch_mesh
+            self._mesh = switch_mesh(S)
         self._rows = payload_rows  # (N, dim) ingress payloads in gen order
         self._next_row = 0
         self._zero_row = jnp.zeros((dim,), jnp.float32)
@@ -207,9 +213,17 @@ class HybridMultiSwitchDataPlane:
             m.pending, m.pending_rows = [], []
         updates = jnp.stack(rows).reshape(S, U, self.dim)
         counts_in = jnp.where(jnp.asarray(reset_mask), 0, self.counts_dev)
-        self.slots_dev, self.counts_dev = ops.olaf_combine_multi(
-            self.slots_dev, counts_in, updates, jnp.asarray(clusters),
-            jnp.asarray(gate), tile_d=self.tile_d, interpret=self.interpret)
+        if self.sharded:
+            from repro.distributed.sharding import olaf_combine_sharded
+            self.slots_dev, self.counts_dev = olaf_combine_sharded(
+                self.slots_dev, counts_in, updates, jnp.asarray(clusters),
+                jnp.asarray(gate), mesh=self._mesh, tile_d=self.tile_d,
+                interpret=self.interpret)
+        else:
+            self.slots_dev, self.counts_dev = ops.olaf_combine_multi(
+                self.slots_dev, counts_in, updates, jnp.asarray(clusters),
+                jnp.asarray(gate), tile_d=self.tile_d,
+                interpret=self.interpret)
         self.launches += 1
 
     def result(self) -> HybridResult:
@@ -235,15 +249,23 @@ class HybridMultiSwitchDataPlane:
 def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
                         interpret: bool = True,
                         payload_rows: Optional[np.ndarray] = None,
+                        payload_source=None,
                         sim_cfg: Optional[SimCfg] = None,
+                        sharded: bool = False,
                         **cfg_kw) -> Tuple[HybridResult, SimCfg]:
     """SW1/SW2/SW3 hybrid run: metadata trace from the event-driven sim,
     payload combining on device in one vmapped/multi-queue kernel launch
-    per transmission window.
+    per transmission window (``sharded=True`` splits the switch axis over
+    the device mesh via ``distributed.sharding.olaf_combine_sharded``).
 
     ``payload_rows`` (N, dim) are consumed in worker-generation order (pass
-    the same array to a payload-carrying oracle sim to cross-check); when
-    omitted they are drawn from ``seed``.
+    the same array to a payload-carrying oracle sim to cross-check).
+    Alternatively ``payload_source(now, worker_id) -> (row, reward)``
+    produces each generated update's payload *and reward* on the fly — the
+    hook real PPO gradients enter through (see
+    ``repro.rl.async_trainer.run_hybrid_ppo``): the rewards feed the
+    trace's Algorithm 1 gating while the rows stay device-resident. When
+    both are omitted, synthetic rows are drawn from ``seed``.
     """
     cfg = sim_cfg if sim_cfg is not None else multihop_cfg(
         "olaf", seed=seed, **cfg_kw)
@@ -251,14 +273,27 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
     trace_cfg = dataclasses.replace(
         cfg, on_queue_event=lambda now, sw, kind, upd: events.append(
             (now, sw, kind, upd)))
-    sim_res = NetworkSimulator(trace_cfg).run()
-    if payload_rows is None:
-        rng = np.random.default_rng(seed + 1)
-        payload_rows = rng.normal(
-            size=(sim_res.sent + 1, dim)).astype(np.float32)
+    if payload_source is not None:
+        assert payload_rows is None, "pass payload_rows or payload_source"
+        rows_acc: List[np.ndarray] = []
+
+        def _collect(now, worker_id):
+            row, reward = payload_source(now, worker_id)
+            rows_acc.append(row)
+            return None, reward  # metadata-only sim; rows stay on device
+
+        trace_cfg = dataclasses.replace(trace_cfg, payload_fn=_collect)
+        NetworkSimulator(trace_cfg).run()
+        payload_rows = rows_acc
+    else:
+        sim_res = NetworkSimulator(trace_cfg).run()
+        if payload_rows is None:
+            rng = np.random.default_rng(seed + 1)
+            payload_rows = rng.normal(
+                size=(sim_res.sent + 1, dim)).astype(np.float32)
     plane = HybridMultiSwitchDataPlane(
         cfg.switches, {w.ingress_switch for w in cfg.workers}, dim,
-        payload_rows, interpret=interpret)
+        payload_rows, interpret=interpret, sharded=sharded)
     for now, sw, kind, meta in events:
         plane.feed(now, sw, kind, meta)
     return plane.result(), cfg

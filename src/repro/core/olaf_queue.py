@@ -392,35 +392,42 @@ _EV_RESET = 2  # slot payload restarts from this update (append / replace)
 
 
 def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
-                   reward_threshold):
+                   reward_threshold, send=None):
     """Scalar half of the burst: Algorithm 1 decisions for U updates.
 
     A ``lax.scan`` over the burst carrying only the ``(Q,)`` metadata columns
     — never the ``(Q, D)`` payload — so it costs O(U·Q) scalar ops total.
     Emits the per-update ``(slot, event)`` assignment consumed by the payload
     pass, plus the fully-updated metadata/counters.
+
+    ``send`` is an optional (U,) gate from worker-side transmission control
+    (§5): a masked-out update is *deferred*, not dropped — it touches neither
+    the queue nor the drop counter (the worker keeps training locally and its
+    next update subsumes this one).
     """
+    if send is None:
+        send = jnp.ones(clusters.shape, bool)
     carry = (state.cluster, state.worker, state.seq, state.gen_time,
              state.reward, state.agg_count, state.replaceable, state.next_seq,
              state.n_dropped, state.n_agg, state.n_repl)
 
     def body(carry, xs):
         cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr = carry
-        c, w, t, r = xs
+        c, w, t, r, snd = xs
         occupied = cl >= 0
         same_cluster = occupied & (cl == c)
         hit = jnp.any(same_cluster)
         slot_hit = jnp.argmax(same_cluster)
 
-        same_worker_replace = hit & rp[slot_hit] & (wk[slot_hit] == w)
+        same_worker_replace = snd & hit & rp[slot_hit] & (wk[slot_hit] == w)
         rdiff = r - rw[slot_hit]
-        do_reward_replace = hit & ~same_worker_replace & (rdiff > reward_threshold)
-        do_reward_drop = hit & ~same_worker_replace & (rdiff < -reward_threshold)
-        do_aggregate = hit & ~same_worker_replace & ~do_reward_replace & ~do_reward_drop
+        do_reward_replace = snd & hit & ~same_worker_replace & (rdiff > reward_threshold)
+        do_reward_drop = snd & hit & ~same_worker_replace & (rdiff < -reward_threshold)
+        do_aggregate = snd & hit & ~same_worker_replace & ~do_reward_replace & ~do_reward_drop
 
         full = jnp.all(occupied)
-        do_append = ~hit & ~full
-        do_drop_full = ~hit & full
+        do_append = snd & ~hit & ~full
+        do_drop_full = snd & ~hit & full
 
         slot = jnp.where(hit, slot_hit, jnp.argmax(~occupied))
         write = same_worker_replace | do_reward_replace | do_aggregate | do_append
@@ -447,12 +454,14 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
         return new_carry, (slot.astype(jnp.int32), event.astype(jnp.int32))
 
     carry, (slots, events) = jax.lax.scan(
-        body, carry, (clusters, workers, gen_times, rewards))
+        body, carry, (clusters, workers, gen_times, rewards,
+                      send.astype(bool)))
     return carry, slots, events
 
 
 def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
-                      rewards, payloads, reward_threshold: float = jnp.inf) -> JaxQueueState:
+                      rewards, payloads, reward_threshold: float = jnp.inf,
+                      send=None) -> JaxQueueState:
     """Fused fast path: resolve a whole U-update incast burst in one pass.
 
     Semantics match ``jax_enqueue_batch`` (sequential Algorithm 1) exactly on
@@ -469,8 +478,10 @@ def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
     """
     Q = state.cluster.shape[0]
     U = clusters.shape[0]
+    if U == 0:  # empty burst (drain-only cycle): nothing to resolve
+        return state
     carry, slots, events = _burst_resolve(
-        state, clusters, workers, gen_times, rewards, reward_threshold)
+        state, clusters, workers, gen_times, rewards, reward_threshold, send)
     (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr) = carry
 
     u_idx = jnp.arange(U, dtype=jnp.int32)
@@ -498,6 +509,23 @@ def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
         cluster=cl, worker=wk, seq=sq, gen_time=gt, reward=rw, agg_count=cnt,
         replaceable=rp, payload=new_payload, next_seq=nseq,
         n_dropped=nd, n_agg=na, n_repl=nr)
+
+
+def jax_olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
+                 payloads, k: int, reward_threshold: float = jnp.inf,
+                 send=None) -> Tuple[JaxQueueState, Dict[str, jnp.ndarray]]:
+    """One full data-plane cycle: burst enqueue then drain-k, in one trace.
+
+    Exactly ``jax_enqueue_burst`` followed by ``jax_dequeue_burst`` — this
+    composition is both the XLA fast path of the fused cycle (one dispatch,
+    one fused executable) and the oracle the Pallas ``olaf_step`` kernel
+    (``repro.kernels.olaf_step``) is proven against. ``send`` optionally
+    gates each burst row (worker-side transmission control, §5): a gated-out
+    update is deferred and never touches the queue.
+    """
+    state = jax_enqueue_burst(state, clusters, workers, gen_times, rewards,
+                              payloads, reward_threshold, send)
+    return jax_dequeue_burst(state, k)
 
 
 # ---------------------------------------------------------------------------

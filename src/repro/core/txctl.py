@@ -72,3 +72,83 @@ class TransmissionController:
     def should_send(self, now: float) -> bool:
         p = self.send_probability(now)
         return bool(self.rng.random() < p)
+
+
+# ===========================================================================
+# Vectorized device-resident transmission control (the §5 feedback loop as
+# part of the jitted PS step — no per-worker host round trips).
+# ===========================================================================
+import dataclasses as _dc  # noqa: E402  (kept below the numpy-only API)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+@jax.tree_util.register_dataclass
+@_dc.dataclass
+class JaxTxState:
+    """Per-worker §5 feedback state as a pytree of (W,) arrays.
+
+    ``last_ack``/``n_active``/``q_max`` hold the most recent ACK's timestamp
+    and piggybacked queue feedback; ``has_fb`` is False until the first ACK
+    (initial transmissions are free).
+    """
+
+    last_ack: jnp.ndarray  # float32[W]
+    has_fb: jnp.ndarray  # bool[W]
+    n_active: jnp.ndarray  # float32[W]
+    q_max: jnp.ndarray  # float32[W]
+
+
+def jax_txctl_init(n_workers: int) -> JaxTxState:
+    return JaxTxState(
+        last_ack=jnp.zeros((n_workers,), jnp.float32),
+        has_fb=jnp.zeros((n_workers,), bool),
+        n_active=jnp.zeros((n_workers,), jnp.float32),
+        q_max=jnp.ones((n_workers,), jnp.float32),
+    )
+
+
+def jax_send_probability(state: JaxTxState, now, delta_threshold: float,
+                         v: float) -> jnp.ndarray:
+    """Vectorized §5 send probability over the (W,) worker axis.
+
+    ``P_s = min(Q_max/N + v·max(Δ̂ − Δ̄_T, 0), 1)`` in the congestion regime
+    (``N > Q_max``); 1 otherwise and before the first ACK. Matches the
+    scalar :meth:`TransmissionController.send_probability` oracle exactly
+    per worker (property-tested in tests/test_aom_txctl.py).
+    """
+    delta_hat = jnp.asarray(now, jnp.float32) - state.last_ack
+    overdue = jnp.maximum(delta_hat - delta_threshold, 0.0)
+    p = jnp.minimum(state.q_max / jnp.maximum(state.n_active, 1.0)
+                    + v * overdue, 1.0)
+    p = jnp.where(state.n_active <= state.q_max, 1.0, p)
+    return jnp.where(state.has_fb, p, 1.0)
+
+
+def jax_txctl_gate(state: JaxTxState, key, now, delta_threshold: float,
+                   v: float, worker_ids=None):
+    """On-device PRNG send gate: ``(send mask, P_s)``.
+
+    ``worker_ids`` optionally selects a (U,) burst of workers (with
+    repeats) out of the (W,) state; omitted, the gate covers every worker.
+    """
+    p = jax_send_probability(state, now, delta_threshold, v)
+    if worker_ids is not None:
+        p = jnp.take(p, worker_ids)
+    return jax.random.uniform(key, p.shape) < p, p
+
+
+def jax_txctl_ack(state: JaxTxState, acked, now, n_active,
+                  q_max) -> JaxTxState:
+    """Multicast ACK: workers in ``acked`` (bool (W,)) receive the current
+    queue feedback ``{N, Q_max}`` and refresh their ``Δ̂`` clock."""
+    nowf = jnp.asarray(now, jnp.float32)
+    return JaxTxState(
+        last_ack=jnp.where(acked, nowf, state.last_ack),
+        has_fb=state.has_fb | acked,
+        n_active=jnp.where(acked, jnp.asarray(n_active, jnp.float32),
+                           state.n_active),
+        q_max=jnp.where(acked, jnp.asarray(q_max, jnp.float32),
+                        state.q_max),
+    )

@@ -249,3 +249,86 @@ def out_pspecs_for(kind: str, mesh: Mesh, cfg: ArchConfig, in_specs, data_specs)
 def to_named(tree, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Multi-switch (S-axis) sharding for the OLAF data plane.
+#
+# The fused kernels batch independent queues on a leading S axis (one per
+# switch — SW1/SW2/SW3 in the §8.3 topology). On a single device the axis
+# folds into the Pallas grid (one launch covers every switch); with several
+# devices the axis is split over a dedicated "switch" mesh with shard_map,
+# so each device runs its slice of the same single launch.
+# ---------------------------------------------------------------------------
+def switch_mesh(n_switches: int) -> Mesh:
+    """1-D mesh on axis ``"switch"`` sized to the largest divisor of
+    ``n_switches`` that the available devices support (1 on this CPU
+    container, up to ``n_switches`` on a pod slice)."""
+    devs = jax.devices()
+    n = 1
+    for d in range(min(n_switches, len(devs)), 0, -1):
+        if n_switches % d == 0:
+            n = d
+            break
+    return Mesh(np.asarray(devs[:n]).reshape(n), ("switch",))
+
+
+def _shard_switch_axis(fn, mesh: Mesh, n_in: int, n_out: int):
+    """shard_map ``fn`` (every operand/result leading-S) over ``"switch"``."""
+    from jax.experimental.shard_map import shard_map
+    spec = P("switch")
+    return shard_map(fn, mesh=mesh, in_specs=(spec,) * n_in,
+                     out_specs=(spec,) * n_out if n_out > 1 else spec,
+                     check_rep=False)
+
+
+def olaf_combine_sharded(slots, counts, updates, clusters, gate, *,
+                         mesh: Optional[Mesh] = None, **kw):
+    """``ops.olaf_combine_multi`` with the S axis split over the switch mesh.
+
+    Falls back to the single-launch folded-grid path when the mesh has one
+    device, so callers can use this unconditionally.
+    """
+    from repro.kernels import ops
+    if mesh is None:
+        mesh = switch_mesh(slots.shape[0])
+    fn = lambda *a: ops.olaf_combine_multi(*a, **kw)  # noqa: E731
+    if mesh.devices.size <= 1:
+        return fn(slots, counts, updates, clusters, gate)
+    return _shard_switch_axis(fn, mesh, 5, 2)(
+        slots, counts, updates, clusters, gate)
+
+
+def olaf_step_sharded(states, clusters, workers, gen_times, rewards,
+                      payloads, reward_threshold=float("inf"), send=None, *,
+                      k: int, mesh: Optional[Mesh] = None, **kw):
+    """``ops.olaf_step_multi`` with the S axis split over the switch mesh:
+    the full enqueue→drain cycle for every switch in one sharded launch."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    if mesh is None:
+        mesh = switch_mesh(states.cluster.shape[0])
+    if send is None:
+        send = jnp.ones(clusters.shape, bool)
+    thr = jnp.broadcast_to(jnp.asarray(reward_threshold, jnp.float32),
+                           (clusters.shape[0], 1))
+
+    def fn(st, c, w, t, r, p, th, sn):
+        return ops.olaf_step_multi(st, c, w, t, r, p, th[0, 0], sn, k=k,
+                                   **kw)
+
+    if mesh.devices.size <= 1:
+        return fn(states, clusters, workers, gen_times, rewards, payloads,
+                  thr, send)
+    from jax.experimental.shard_map import shard_map
+    spec = P("switch")
+    state_specs = jax.tree.map(lambda _: spec, states)
+    out_specs = (state_specs,
+                 dict(valid=spec, n_valid=spec, cluster=spec, worker=spec,
+                      gen_time=spec, reward=spec, agg_count=spec,
+                      payload=spec))
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(state_specs,) + (spec,) * 7,
+                     out_specs=out_specs, check_rep=False)(
+        states, clusters, workers, gen_times, rewards, payloads, thr, send)

@@ -8,6 +8,12 @@
                      in-kernel scalar resolve over SMEM prefetch operands
                      plus the telescoped-mean payload matmul, one launch
                      per burst (oracle: olaf_queue.jax_enqueue_burst)
+  olaf_step        — the fused full-cycle data plane: burst resolve (with
+                     a per-update transmission-control send gate), drain-k
+                     oldest-valid selection, payload combine + drained-row
+                     gather on one (S × D-tile × Q-tile) grid — one launch
+                     per PS step; leading S axis batches switches (oracle:
+                     olaf_queue.jax_olaf_step)
   flash_attention  — online-softmax attention, (BH, q_blocks, kv_blocks)
                      grid with VMEM scratch accumulators
   decode_attention — single-token GQA attention streaming a (possibly

@@ -158,11 +158,106 @@ _EV_AGG = 1
 _EV_RESET = 2
 
 
+def alg1_resolve(cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
+                 thr, U, read_update, qidx, uidx):
+    """In-kernel Algorithm 1 scalar resolve over a U-update burst.
+
+    The same sequential walk as ``olaf_queue._burst_resolve``, written to
+    lower on the TPU VPU: a ``fori_loop`` over U carrying only (Q,) metadata
+    vectors, with masked sums in place of dynamic gathers and min-index in
+    place of argmax. Shared by the fused ``olaf_enqueue`` and the full-cycle
+    ``olaf_step`` kernels (``repro.kernels.olaf_step``), which differ only
+    in where the burst scalars come from and what runs after the resolve.
+
+    ``read_update(u) -> (cluster, worker, gen_time, reward, send)`` reads
+    one update's scalars (typically from SMEM scalar-prefetch refs);
+    ``send`` is the transmission-control gate — a masked-out update is
+    deferred: no queue writes, no counter changes, event ``_EV_DROP``.
+
+    Returns ``(cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, slots_v,
+    events_v, contributes, last_reset)``: the post-burst metadata columns
+    and counters, the per-update slot/event assignment, and the
+    telescoped-mean bookkeeping consumed by the payload pass.
+    """
+    Q = qidx.shape[0]
+
+    def body(u, carry):
+        (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+         slots_v, events_v) = carry
+        c, w, t, r, snd = read_update(u)
+        occupied = cl >= 0
+        same = occupied & (cl == c)
+        hit = jnp.any(same)
+        # scalar extraction from the (at most one) matching slot — a
+        # masked sum instead of a dynamic gather
+        w_worker = jnp.sum(jnp.where(same, wk, 0))
+        w_seq = jnp.sum(jnp.where(same, sq, 0))
+        w_cnt = jnp.sum(jnp.where(same, cnt, 0))
+        w_repl = jnp.any(same & (rp != 0))
+        w_reward = jnp.sum(jnp.where(same, rw, 0.0))
+        w_gt = jnp.sum(jnp.where(same, gt, 0.0))
+
+        swr = snd & hit & w_repl & (w_worker == w)
+        rdiff = r - w_reward
+        do_rr = snd & hit & ~swr & (rdiff > thr)
+        do_rd = snd & hit & ~swr & (rdiff < -thr)
+        do_agg = snd & hit & ~swr & ~do_rr & ~do_rd
+        full = jnp.all(occupied)
+        do_append = snd & ~hit & ~full
+        do_dropf = snd & ~hit & full
+
+        # min-index in place of argmax (lowers without gather support)
+        slot_hit = jnp.min(jnp.where(same, qidx, Q))
+        slot_append = jnp.min(jnp.where(~occupied, qidx, Q))
+        slot = jnp.minimum(jnp.where(hit, slot_hit, slot_append), Q - 1)
+        write = swr | do_rr | do_agg | do_append
+        onehot = (qidx == slot) & write
+
+        def put(old, new):
+            return jnp.where(onehot, new, old)
+
+        event = jnp.where(do_agg, _EV_AGG,
+                          jnp.where(write, _EV_RESET, _EV_DROP))
+        return (
+            put(cl, c),
+            put(wk, w),
+            put(sq, jnp.where(hit, w_seq, nseq)),
+            put(gt, jnp.where(do_agg, jnp.maximum(t, w_gt), t)),
+            put(rw, jnp.where(do_agg, jnp.maximum(r, w_reward), r)),
+            put(cnt, jnp.where(do_agg, w_cnt + 1, 1)),
+            put(rp, (swr | do_append).astype(jnp.int32)),
+            nseq + do_append.astype(jnp.int32),
+            nd + (do_dropf | do_rd).astype(jnp.int32),
+            na + do_agg.astype(jnp.int32),
+            nr + (swr | do_rr).astype(jnp.int32),
+            jnp.where(uidx == u, slot, slots_v),
+            jnp.where(uidx == u, event.astype(jnp.int32), events_v),
+        )
+
+    carry0 = (cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
+              jnp.zeros((U,), jnp.int32), jnp.zeros((U,), jnp.int32))
+    (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+     slots_v, events_v) = jax.lax.fori_loop(0, U, body, carry0)
+
+    # telescoped-mean bookkeeping: which updates survive into the slot
+    onehot_uq = slots_v[:, None] == qidx[None, :]  # (U, Q)
+    is_reset = events_v == _EV_RESET
+    is_agg = events_v == _EV_AGG
+    last_reset = jnp.max(
+        jnp.where(is_reset[:, None] & onehot_uq, uidx[:, None], -1),
+        axis=0)  # (Q,)
+    lr_u = jnp.sum(jnp.where(onehot_uq, last_reset[None, :], 0), axis=1)
+    contributes = ((is_agg & (uidx > lr_u))
+                   | (is_reset & (uidx == lr_u)))
+    return (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+            slots_v, events_v, contributes, last_reset)
+
+
 def _enqueue_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
                     updates_ref, slotpay_ref,
                     out_ref, meta_i_ref, meta_f_ref,
                     slots_scr, contrib_scr, lastreset_scr, *, tile_q: int):
-    """One (Q-tile i, D-tile j) grid step of the fused burst enqueue.
+    """One (D-tile j, Q-tile i) grid step of the fused burst enqueue.
 
     Scalar-prefetch SMEM operands:
       qi_ref: (5, Q) int32 — queue [cluster, worker, seq, agg_count, replaceable]
@@ -175,16 +270,17 @@ def _enqueue_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
     columns, rows 5-8 the counters broadcast across Q); meta_f (2, Q) f32.
     SMEM scratch: per-update slot / contributes (1, U) and per-slot
     last-reset index (1, Q), written once at the first grid step and reused
-    by every later (i, j) step — TPU grid steps run sequentially on one
-    core, so scratch persists across the whole grid.
+    by every later (j, i) step — TPU grid steps run sequentially on one
+    core, so scratch persists across the whole grid. The grid iterates
+    D-tiles outermost (Q-tiles innermost), the shared order of the
+    ``olaf_step`` full-cycle kernel, whose drained-row accumulator needs
+    every Q-tile of one D-tile visited consecutively.
 
-    The scalar resolve is the same sequential Algorithm 1 walk as
-    ``olaf_queue._burst_resolve`` (a fori_loop over U carrying only (Q,)
-    metadata vectors, all decisions on the VPU from SMEM reads); the payload
+    The scalar resolve is the shared :func:`alg1_resolve` walk; the payload
     movement is the telescoped weighted mean of ``jax_enqueue_burst``: one
     one-hot (Qt, U) × (U, Dt) segment-sum on the MXU plus one blend.
     """
-    i, j = pl.program_id(0), pl.program_id(1)
+    j, i = pl.program_id(0), pl.program_id(1)
     Q = qi_ref.shape[1]
     U = ui_ref.shape[1]
     qidx = jax.lax.broadcasted_iota(jnp.int32, (1, Q), 1)[0]
@@ -192,87 +288,17 @@ def _enqueue_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
 
     @pl.when((i == 0) & (j == 0))
     def _resolve():
-        cl0 = qi_ref[0, :]
-        wk0 = qi_ref[1, :]
-        sq0 = qi_ref[2, :]
-        cnt0 = qi_ref[3, :]
-        rp0 = qi_ref[4, :]
-        gt0 = qf_ref[0, :]
-        rw0 = qf_ref[1, :]
-        thr = uf_ref[2, 0]
+        def read_update(u):
+            return (ui_ref[0, u], ui_ref[1, u], uf_ref[0, u], uf_ref[1, u],
+                    jnp.bool_(True))
 
-        def body(u, carry):
-            (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
-             slots_v, events_v) = carry
-            c = ui_ref[0, u]
-            w = ui_ref[1, u]
-            t = uf_ref[0, u]
-            r = uf_ref[1, u]
-            occupied = cl >= 0
-            same = occupied & (cl == c)
-            hit = jnp.any(same)
-            # scalar extraction from the (at most one) matching slot — a
-            # masked sum instead of a dynamic gather
-            w_worker = jnp.sum(jnp.where(same, wk, 0))
-            w_seq = jnp.sum(jnp.where(same, sq, 0))
-            w_cnt = jnp.sum(jnp.where(same, cnt, 0))
-            w_repl = jnp.any(same & (rp != 0))
-            w_reward = jnp.sum(jnp.where(same, rw, 0.0))
-            w_gt = jnp.sum(jnp.where(same, gt, 0.0))
-
-            swr = hit & w_repl & (w_worker == w)
-            rdiff = r - w_reward
-            do_rr = hit & ~swr & (rdiff > thr)
-            do_rd = hit & ~swr & (rdiff < -thr)
-            do_agg = hit & ~swr & ~do_rr & ~do_rd
-            full = jnp.all(occupied)
-            do_append = ~hit & ~full
-            do_dropf = ~hit & full
-
-            # min-index in place of argmax (lowers without gather support)
-            slot_hit = jnp.min(jnp.where(same, qidx, Q))
-            slot_append = jnp.min(jnp.where(~occupied, qidx, Q))
-            slot = jnp.minimum(jnp.where(hit, slot_hit, slot_append), Q - 1)
-            write = swr | do_rr | do_agg | do_append
-            onehot = (qidx == slot) & write
-
-            def put(old, new):
-                return jnp.where(onehot, new, old)
-
-            event = jnp.where(do_agg, _EV_AGG,
-                              jnp.where(write, _EV_RESET, _EV_DROP))
-            return (
-                put(cl, c),
-                put(wk, w),
-                put(sq, jnp.where(hit, w_seq, nseq)),
-                put(gt, jnp.where(do_agg, jnp.maximum(t, w_gt), t)),
-                put(rw, jnp.where(do_agg, jnp.maximum(r, w_reward), r)),
-                put(cnt, jnp.where(do_agg, w_cnt + 1, 1)),
-                put(rp, (swr | do_append).astype(jnp.int32)),
-                nseq + do_append.astype(jnp.int32),
-                nd + (do_dropf | do_rd).astype(jnp.int32),
-                na + do_agg.astype(jnp.int32),
-                nr + (swr | do_rr).astype(jnp.int32),
-                jnp.where(uidx == u, slot, slots_v),
-                jnp.where(uidx == u, event.astype(jnp.int32), events_v),
-            )
-
-        carry0 = (cl0, wk0, sq0, gt0, rw0, cnt0, rp0,
-                  qc_ref[0, 0], qc_ref[0, 1], qc_ref[0, 2], qc_ref[0, 3],
-                  jnp.zeros((U,), jnp.int32), jnp.zeros((U,), jnp.int32))
         (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
-         slots_v, events_v) = jax.lax.fori_loop(0, U, body, carry0)
+         slots_v, events_v, contributes, last_reset) = alg1_resolve(
+            qi_ref[0, :], qi_ref[1, :], qi_ref[2, :], qf_ref[0, :],
+            qf_ref[1, :], qi_ref[3, :], qi_ref[4, :],
+            qc_ref[0, 0], qc_ref[0, 1], qc_ref[0, 2], qc_ref[0, 3],
+            uf_ref[2, 0], U, read_update, qidx, uidx)
 
-        # telescoped-mean bookkeeping: which updates survive into the slot
-        onehot_uq = slots_v[:, None] == qidx[None, :]  # (U, Q)
-        is_reset = events_v == _EV_RESET
-        is_agg = events_v == _EV_AGG
-        last_reset = jnp.max(
-            jnp.where(is_reset[:, None] & onehot_uq, uidx[:, None], -1),
-            axis=0)  # (Q,)
-        lr_u = jnp.sum(jnp.where(onehot_uq, last_reset[None, :], 0), axis=1)
-        contributes = ((is_agg & (uidx > lr_u))
-                       | (is_reset & (uidx == lr_u)))
         slots_scr[0, :] = slots_v
         contrib_scr[0, :] = contributes.astype(jnp.int32)
         lastreset_scr[0, :] = last_reset
@@ -341,7 +367,7 @@ def olaf_enqueue_pallas(cluster, worker, seq, gen_time, reward, agg_count,
     uf = jnp.stack([gen_times.astype(f32), rewards.astype(f32),
                     jnp.full((U,), reward_threshold, f32)])
 
-    grid = (Q // tile_q, D // tile_d)
+    grid = (D // tile_d, Q // tile_q)  # D-tiles outer, Q-tiles inner
     kernel = functools.partial(_enqueue_kernel, tile_q=tile_q)
     return pl.pallas_call(
         kernel,
@@ -349,13 +375,13 @@ def olaf_enqueue_pallas(cluster, worker, seq, gen_time, reward, agg_count,
             num_scalar_prefetch=5,  # qi, qf, qc, ui, uf -> SMEM
             grid=grid,
             in_specs=[
-                pl.BlockSpec((U, tile_d), lambda i, j, *prefetch: (0, j)),
-                pl.BlockSpec((tile_q, tile_d), lambda i, j, *prefetch: (i, j)),
+                pl.BlockSpec((U, tile_d), lambda j, i, *prefetch: (0, j)),
+                pl.BlockSpec((tile_q, tile_d), lambda j, i, *prefetch: (i, j)),
             ],
             out_specs=[
-                pl.BlockSpec((tile_q, tile_d), lambda i, j, *prefetch: (i, j)),
-                pl.BlockSpec((9, Q), lambda i, j, *prefetch: (0, 0)),
-                pl.BlockSpec((2, Q), lambda i, j, *prefetch: (0, 0)),
+                pl.BlockSpec((tile_q, tile_d), lambda j, i, *prefetch: (i, j)),
+                pl.BlockSpec((9, Q), lambda j, i, *prefetch: (0, 0)),
+                pl.BlockSpec((2, Q), lambda j, i, *prefetch: (0, 0)),
             ],
             scratch_shapes=[
                 pltpu.SMEM((1, U), jnp.int32),

@@ -1,0 +1,301 @@
+"""Pallas TPU kernel: the fused full-cycle OLAF data plane (``olaf_step``).
+
+One launch per PS step performs what previously took two kernels plus a
+top-k pass:
+
+  1. **burst-enqueue scalar resolve** — Algorithm 1 gating for a U-update
+     incast burst, the shared :func:`repro.kernels.olaf_combine.alg1_resolve`
+     fori_loop over SMEM scalar-prefetch operands, run once at the first
+     grid step. An optional per-update ``send`` gate (worker-side
+     transmission control, §5) defers masked-out updates without touching
+     the queue.
+  2. **drain-k oldest-valid selection** — the k slots with the smallest
+     post-enqueue sequence numbers, ties (the empty-slot sentinel) broken by
+     slot index, reproducing ``jax.lax.top_k``'s ordering exactly so the
+     kernel matches the ``jax_enqueue_burst → jax_dequeue_burst`` oracle
+     row for row. A k-step selection loop over (Q,) SMEM vectors, also at
+     the first grid step.
+  3. **payload combine + gather** — on every (Q-tile × D-tile) grid step:
+     the telescoped-mean burst combine (one one-hot (Qt, U) × (U, Dt)
+     segment-sum on the MXU plus a blend), then the drained rows gathered
+     from the *combined* tiles by a one-hot (K, Qt) × (Qt, Dt) matmul
+     accumulated across Q-tiles, and the popped slots zeroed in the new
+     payload output.
+
+SMEM scratch carries the resolved slot/contribute assignment and the drain
+slot/valid selection across grid steps (TPU grid steps run sequentially on
+one core, so scratch written at a switch's first step is visible to all its
+later steps). The grid iterates (S, D-tiles, Q-tiles) with Q-tiles
+innermost: for a fixed D-tile every Q-tile is visited consecutively, so the
+(K, Dt) drained output block stays resident in VMEM while its cross-Q-tile
+accumulation runs.
+
+A leading S axis batches independent queues (the SW1/SW2/SW3 multi-switch
+data plane) in one launch; `repro.distributed.sharding.olaf_step_sharded`
+splits that axis over a device mesh with ``shard_map``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu is importable on CPU too; guard for exotic builds
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+from repro.kernels.olaf_combine import _pick_tile_q, alg1_resolve
+
+_SENTINEL = jnp.iinfo(jnp.int32).max
+_NEG_INF = float("-inf")
+
+
+def _olaf_step_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
+                      updates_ref, slotpay_ref,
+                      out_ref, drained_ref, meta_i_ref, meta_f_ref,
+                      drain_i_ref, drain_f_ref,
+                      slots_scr, contrib_scr, lastreset_scr,
+                      dslot_scr, dvalid_scr, *, tile_q: int, k: int):
+    """One (queue s, D-tile j, Q-tile i) grid step of the fused cycle.
+
+    Scalar-prefetch SMEM operands (leading S axis on all of them):
+      qi_ref: (S, 5, Q) int32 — [cluster, worker, seq, agg_count, replaceable]
+      qf_ref: (S, 2, Q) f32   — [gen_time, reward]
+      qc_ref: (S, 1, 4) int32 — [next_seq, n_dropped, n_agg, n_repl]
+      ui_ref: (S, 3, U) int32 — burst [clusters, workers, send]
+      uf_ref: (S, 3, U) f32   — burst [gen_times, rewards, threshold row]
+    VMEM tiles: updates (1, U, Dt), slotpay (1, Qt, Dt).
+    Outputs:
+      out_ref     (1, Qt, Dt) — post-enqueue, post-drain slot payload tile
+      drained_ref (1, K, Dt)  — drained rows, accumulated across Q-tiles
+      meta_i_ref  (1, 9, Q)   — post-drain metadata (rows 0-4) + counters
+                                broadcast across Q (rows 5-8)
+      meta_f_ref  (1, 2, Q)   — post-drain [gen_time, reward]
+      drain_i_ref (1, 4, K)   — per drained row [cluster, worker,
+                                agg_count, valid], read pre-clear
+      drain_f_ref (1, 2, K)   — per drained row [gen_time, reward]
+    SMEM scratch: enqueue resolve (slots/contrib per update, last-reset per
+    slot) and drain selection (slot/valid per drained row).
+    """
+    s, j, i = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    Q = qi_ref.shape[2]
+    U = ui_ref.shape[2]
+    qidx = jax.lax.broadcasted_iota(jnp.int32, (1, Q), 1)[0]
+    uidx = jax.lax.broadcasted_iota(jnp.int32, (1, U), 1)[0]
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)[0]
+
+    @pl.when((j == 0) & (i == 0))
+    def _resolve_and_select():
+        # ---- 1. burst-enqueue scalar resolve (Algorithm 1) --------------
+        def read_update(u):
+            return (ui_ref[s, 0, u], ui_ref[s, 1, u], uf_ref[s, 0, u],
+                    uf_ref[s, 1, u], ui_ref[s, 2, u] != 0)
+
+        (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+         slots_v, events_v, contributes, last_reset) = alg1_resolve(
+            qi_ref[s, 0, :], qi_ref[s, 1, :], qi_ref[s, 2, :],
+            qf_ref[s, 0, :], qf_ref[s, 1, :], qi_ref[s, 3, :],
+            qi_ref[s, 4, :],
+            qc_ref[s, 0, 0], qc_ref[s, 0, 1], qc_ref[s, 0, 2],
+            qc_ref[s, 0, 3],
+            uf_ref[s, 2, 0], U, read_update, qidx, uidx)
+
+        slots_scr[0, :] = slots_v
+        contrib_scr[0, :] = contributes.astype(jnp.int32)
+        lastreset_scr[0, :] = last_reset
+
+        # ---- 2. drain-k oldest-valid selection --------------------------
+        # k smallest post-enqueue seqs, sentinel ties broken by slot index:
+        # the same (value, index) order lax.top_k(-seq) produces, so the
+        # drained rows match the two-launch oracle exactly — including the
+        # stale metadata invalid rows read from sentinel slots.
+        def select(t, carry):
+            taken, dslots, dvalid = carry
+            seq_m = jnp.where(taken != 0, _SENTINEL, sq)
+            m = jnp.min(seq_m)
+            slot = jnp.min(jnp.where((taken == 0) & (seq_m == m), qidx, Q))
+            c_at = jnp.sum(jnp.where(qidx == slot, cl, 0))
+            return (jnp.where(qidx == slot, 1, taken),
+                    jnp.where(kidx == t, slot, dslots),
+                    jnp.where(kidx == t, (c_at >= 0).astype(jnp.int32),
+                              dvalid))
+
+        taken0 = jnp.zeros((Q,), jnp.int32)
+        _, dslots, dvalid = jax.lax.fori_loop(
+            0, k, select, (taken0, jnp.zeros((k,), jnp.int32),
+                           jnp.zeros((k,), jnp.int32)))
+        dslot_scr[0, :] = dslots
+        dvalid_scr[0, :] = dvalid
+
+        onehot_kq = dslots[:, None] == qidx[None, :]  # (K, Q), unmasked
+        pop_kq = onehot_kq & (dvalid[:, None] != 0)
+        popped = jnp.sum(pop_kq.astype(jnp.int32), axis=0) > 0  # (Q,)
+
+        def gather_i(vec):  # (Q,) int32 -> (K,) rows, pre-clear values
+            return jnp.sum(jnp.where(onehot_kq, vec[None, :], 0), axis=1)
+
+        def gather_f(vec):
+            return jnp.sum(jnp.where(onehot_kq, vec[None, :], 0.0), axis=1)
+
+        drain_i_ref[0, 0, :] = gather_i(cl)
+        drain_i_ref[0, 1, :] = gather_i(wk)
+        drain_i_ref[0, 2, :] = gather_i(cnt)
+        drain_i_ref[0, 3, :] = dvalid
+        drain_f_ref[0, 0, :] = gather_f(gt)
+        drain_f_ref[0, 1, :] = gather_f(rw)
+
+        # ---- post-drain metadata (popped slots cleared; gen_time kept,
+        # matching jax_dequeue_burst) -------------------------------------
+        meta_i_ref[0, 0, :] = jnp.where(popped, -1, cl)
+        meta_i_ref[0, 1, :] = jnp.where(popped, -1, wk)
+        meta_i_ref[0, 2, :] = jnp.where(popped, _SENTINEL, sq)
+        meta_i_ref[0, 3, :] = jnp.where(popped, 0, cnt)
+        meta_i_ref[0, 4, :] = jnp.where(popped, 0, rp)
+        meta_i_ref[0, 5, :] = jnp.zeros((Q,), jnp.int32) + nseq
+        meta_i_ref[0, 6, :] = jnp.zeros((Q,), jnp.int32) + nd
+        meta_i_ref[0, 7, :] = jnp.zeros((Q,), jnp.int32) + na
+        meta_i_ref[0, 8, :] = jnp.zeros((Q,), jnp.int32) + nr
+        meta_f_ref[0, 0, :] = gt
+        meta_f_ref[0, 1, :] = jnp.where(popped, _NEG_INF, rw)
+
+    # ---- 3. payload pass (every grid step, MXU) --------------------------
+    slots_v = slots_scr[0, :]
+    contrib = contrib_scr[0, :]
+    lr_tile = lastreset_scr[0, pl.ds(i * tile_q, tile_q)]
+    counts_tile = qi_ref[s, 3, pl.ds(i * tile_q, tile_q)]  # pre-burst counts
+    U_ = updates_ref.shape[1]
+    qids = i * tile_q + jax.lax.broadcasted_iota(jnp.int32, (tile_q, U_), 0)
+    seg = jnp.where((slots_v[None, :] == qids) & (contrib[None, :] != 0),
+                    1.0, 0.0).astype(jnp.float32)  # (Qt, U)
+    sums = jnp.dot(seg, updates_ref[0].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    n_contrib = seg.sum(axis=1)
+    base_n = jnp.where(lr_tile < 0, counts_tile, 0).astype(jnp.float32)
+    touched = (lr_tile >= 0) | (n_contrib > 0)
+    denom = jnp.maximum(base_n + n_contrib, 1.0)
+    old = slotpay_ref[0].astype(jnp.float32)
+    combined = jnp.where(touched[:, None],
+                         (old * base_n[:, None] + sums) / denom[:, None],
+                         old)  # post-enqueue, pre-drain tile
+
+    # drained-row gather from the combined tile: each row selects exactly
+    # one slot, so the cross-tile accumulation is exact (single-term sums)
+    dslots = dslot_scr[0, :]
+    dvalid = dvalid_scr[0, :]
+    tile_qids = i * tile_q + jax.lax.broadcasted_iota(
+        jnp.int32, (k, tile_q), 1)
+    onehot_k = jnp.where((dslots[:, None] == tile_qids)
+                         & (dvalid[:, None] != 0), 1.0,
+                         0.0).astype(jnp.float32)  # (K, Qt)
+    part = jnp.dot(onehot_k, combined,
+                   preferred_element_type=jnp.float32)  # (K, Dt)
+    popped_tile = onehot_k.sum(axis=0) > 0  # (Qt,)
+
+    out_ref[0] = jnp.where(popped_tile[:, None], 0.0,
+                           combined).astype(out_ref.dtype)
+
+    @pl.when(i == 0)
+    def _init_drained():
+        drained_ref[0] = part.astype(drained_ref.dtype)
+
+    @pl.when(i != 0)
+    def _accum_drained():
+        drained_ref[0] = drained_ref[0] + part.astype(drained_ref.dtype)
+
+
+def olaf_step_pallas(cluster, worker, seq, gen_time, reward, agg_count,
+                     replaceable, next_seq, n_dropped, n_agg, n_repl,
+                     payload, clusters, workers, gen_times, rewards,
+                     payloads, k: int, reward_threshold=float("inf"),
+                     send=None, *, tile_q: int = 8, tile_d: int = 512,
+                     interpret: bool = True):
+    """Single-launch fused enqueue→drain cycle over raw queue-state arrays.
+
+    Rank-2 ``payload (Q, D)`` runs one queue; a leading S axis on every
+    operand (``payload (S, Q, D)``, scalars ``(S,)``) batches S independent
+    queues in one launch with the switch axis folded into the Pallas grid.
+    Returns ``(new_payload, drained_payload (…, K, D), meta_i (…, 9, Q),
+    meta_f (…, 2, Q), drain_i (…, 4, K), drain_f (…, 2, K))`` — see
+    :func:`_olaf_step_kernel` for the packing. The JaxQueueState-typed
+    wrapper lives in ``repro.kernels.ops.olaf_step``.
+    """
+    if pltpu is None:
+        raise ImportError("olaf_step needs jax.experimental.pallas.tpu "
+                          "(PrefetchScalarGridSpec) — unavailable in this "
+                          "jax build")
+    squeeze = payload.ndim == 2
+    if squeeze:
+        (cluster, worker, seq, gen_time, reward, agg_count, replaceable,
+         payload, clusters, workers, gen_times, rewards, payloads) = (
+            x[None] for x in (cluster, worker, seq, gen_time, reward,
+                              agg_count, replaceable, payload, clusters,
+                              workers, gen_times, rewards, payloads))
+        next_seq, n_dropped, n_agg, n_repl = (
+            jnp.asarray(x)[None] for x in (next_seq, n_dropped, n_agg,
+                                           n_repl))
+        if send is not None:
+            send = send[None]
+    S, Q, D = payload.shape
+    U = clusters.shape[1]
+    k = min(int(k), Q)
+    tile_q = _pick_tile_q(Q, tile_q)
+    tile_d = _pick_tile_q(D, tile_d)  # same largest-divisor shrink for D
+    i32, f32 = jnp.int32, jnp.float32
+    if send is None:
+        send = jnp.ones((S, U), i32)
+    qi = jnp.stack([cluster.astype(i32), worker.astype(i32), seq.astype(i32),
+                    agg_count.astype(i32), replaceable.astype(i32)], axis=1)
+    qf = jnp.stack([gen_time.astype(f32), reward.astype(f32)], axis=1)
+    qc = jnp.stack([jnp.asarray(next_seq, i32), jnp.asarray(n_dropped, i32),
+                    jnp.asarray(n_agg, i32), jnp.asarray(n_repl, i32)],
+                   axis=1)[:, None, :]
+    ui = jnp.stack([clusters.astype(i32), workers.astype(i32),
+                    send.astype(i32)], axis=1)
+    uf = jnp.stack([gen_times.astype(f32), rewards.astype(f32),
+                    jnp.full((S, U), reward_threshold, f32)], axis=1)
+
+    grid = (S, D // tile_d, Q // tile_q)  # Q-tiles innermost (see module doc)
+    kernel = functools.partial(_olaf_step_kernel, tile_q=tile_q, k=k)
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,  # qi, qf, qc, ui, uf -> SMEM
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, U, tile_d), lambda s, j, i, *p: (s, 0, j)),
+                pl.BlockSpec((1, tile_q, tile_d),
+                             lambda s, j, i, *p: (s, i, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, tile_q, tile_d),
+                             lambda s, j, i, *p: (s, i, j)),
+                pl.BlockSpec((1, k, tile_d), lambda s, j, i, *p: (s, 0, j)),
+                pl.BlockSpec((1, 9, Q), lambda s, j, i, *p: (s, 0, 0)),
+                pl.BlockSpec((1, 2, Q), lambda s, j, i, *p: (s, 0, 0)),
+                pl.BlockSpec((1, 4, k), lambda s, j, i, *p: (s, 0, 0)),
+                pl.BlockSpec((1, 2, k), lambda s, j, i, *p: (s, 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.SMEM((1, U), jnp.int32),  # resolved slot per update
+                pltpu.SMEM((1, U), jnp.int32),  # contributes per update
+                pltpu.SMEM((1, Q), jnp.int32),  # last reset per slot
+                pltpu.SMEM((1, k), jnp.int32),  # drained slot per row
+                pltpu.SMEM((1, k), jnp.int32),  # drained validity per row
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((S, Q, D), payload.dtype),
+            jax.ShapeDtypeStruct((S, k, D), payload.dtype),
+            jax.ShapeDtypeStruct((S, 9, Q), jnp.int32),
+            jax.ShapeDtypeStruct((S, 2, Q), jnp.float32),
+            jax.ShapeDtypeStruct((S, 4, k), jnp.int32),
+            jax.ShapeDtypeStruct((S, 2, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qi, qf, qc, ui, uf, payloads, payload)
+    if squeeze:
+        outs = [o[0] for o in outs]
+    return tuple(outs)

@@ -12,10 +12,11 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.olaf_queue import JaxQueueState
+from repro.core.olaf_queue import JaxQueueState, jax_olaf_step
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.olaf_combine import olaf_combine_pallas, olaf_enqueue_pallas
+from repro.kernels.olaf_step import olaf_step_pallas
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
 
@@ -79,6 +80,103 @@ def olaf_enqueue(state: JaxQueueState, clusters, workers, gen_times, rewards,
         agg_count=mi[3], replaceable=mi[4].astype(bool), payload=new_payload,
         next_seq=mi[5, 0], n_dropped=mi[6, 0], n_agg=mi[7, 0],
         n_repl=mi[8, 0])
+
+
+def _olaf_step_unpack(new_payload, drained, mi, mf, di, df):
+    """Raw kernel outputs -> (JaxQueueState, drain out dict).
+
+    Works for both the single-queue (no batch axis) and the multi-queue
+    (leading S axis) layouts; ``mi``/``mf``/``di``/``df`` carry the packing
+    documented in :func:`repro.kernels.olaf_step._olaf_step_kernel`.
+    """
+    lead = mi.ndim == 3  # (S, 9, Q) vs (9, Q)
+    row = (lambda a, r: a[:, r]) if lead else (lambda a, r: a[r])
+    ctr = (lambda a, r: a[:, r, 0]) if lead else (lambda a, r: a[r, 0])
+    valid = row(di, 3).astype(bool)
+    state = JaxQueueState(
+        cluster=row(mi, 0), worker=row(mi, 1), seq=row(mi, 2),
+        gen_time=row(mf, 0), reward=row(mf, 1), agg_count=row(mi, 3),
+        replaceable=row(mi, 4).astype(bool),
+        payload=new_payload, next_seq=ctr(mi, 5), n_dropped=ctr(mi, 6),
+        n_agg=ctr(mi, 7), n_repl=ctr(mi, 8))
+    out = dict(valid=valid, n_valid=valid.sum(axis=-1),
+               cluster=row(di, 0), worker=row(di, 1),
+               gen_time=row(df, 0), reward=row(df, 1),
+               agg_count=row(di, 2), payload=drained)
+    return state, out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "tile_q", "tile_d", "interpret", "impl"), donate_argnums=0)
+def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
+              payloads, reward_threshold=jnp.inf, send=None, *, k: int,
+              tile_q: int = 8, tile_d: int = 512,
+              interpret: bool = _INTERPRET, impl: str = "auto"):
+    """Fused full-cycle data-plane step: burst enqueue → drain-k, one launch.
+
+    Drop-in replacement for the composed ``jax_enqueue_burst →
+    jax_dequeue_burst`` pipeline (the oracle it is tested against in
+    tests/test_olaf_step.py); returns the same ``(new_state, out)`` pair.
+    ``send`` optionally gates each burst row (worker-side transmission
+    control). The queue state is donated: treat the passed-in state as
+    consumed.
+
+    ``impl`` selects the execution path: ``"pallas"`` is the single-launch
+    kernel (the TPU fast path — resolve, drain select and payload movement
+    share one grid); ``"xla"`` is the same cycle as one fused XLA
+    executable (the fast path where the interpreter would run the kernel
+    body, i.e. this CPU container); ``"auto"`` picks ``"pallas"`` when
+    compiled (REPRO_PALLAS_COMPILED=1) and ``"xla"`` under interpretation.
+    """
+    if impl == "auto":
+        # an empty burst (drain-only final flush) has no (U, Dt) tile to
+        # grid over — always take the XLA path for it
+        impl = "xla" if (interpret or clusters.shape[0] == 0) else "pallas"
+    if impl == "xla":
+        return jax_olaf_step(state, clusters, workers, gen_times, rewards,
+                             payloads, k, reward_threshold, send)
+    outs = olaf_step_pallas(
+        state.cluster, state.worker, state.seq, state.gen_time, state.reward,
+        state.agg_count, state.replaceable, state.next_seq, state.n_dropped,
+        state.n_agg, state.n_repl, state.payload,
+        clusters, workers, gen_times, rewards, payloads, k, reward_threshold,
+        send, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+    return _olaf_step_unpack(*outs)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "tile_q", "tile_d", "interpret", "impl"), donate_argnums=0)
+def olaf_step_multi(states: JaxQueueState, clusters, workers, gen_times,
+                    rewards, payloads, reward_threshold=jnp.inf, send=None,
+                    *, k: int, tile_q: int = 8, tile_d: int = 512,
+                    interpret: bool = _INTERPRET, impl: str = "auto"):
+    """Multi-queue fused cycle: every operand carries a leading S axis.
+
+    ``states`` is a JaxQueueState of (S, Q)/(S, Q, D)/(S,) arrays; burst
+    operands are (S, U)/(S, U, D). Equivalent to ``jax.vmap(olaf_step)``
+    but the Pallas path runs one kernel launch with the switch axis folded
+    into the grid (the SW1/SW2/SW3 multi-switch cycle); see
+    ``repro.distributed.sharding.olaf_step_sharded`` for the shard_map
+    variant that splits S over a device mesh.
+    """
+    if impl == "auto":
+        impl = "xla" if (interpret or clusters.shape[1] == 0) else "pallas"
+    if impl == "xla":
+        if send is None:
+            send = jnp.ones(clusters.shape, bool)
+        thr = jnp.broadcast_to(jnp.asarray(reward_threshold, jnp.float32),
+                               (clusters.shape[0],))
+        return jax.vmap(
+            lambda st, c, w, t, r, p, th, sn: jax_olaf_step(
+                st, c, w, t, r, p, k, th, sn)
+        )(states, clusters, workers, gen_times, rewards, payloads, thr, send)
+    outs = olaf_step_pallas(
+        states.cluster, states.worker, states.seq, states.gen_time,
+        states.reward, states.agg_count, states.replaceable, states.next_seq,
+        states.n_dropped, states.n_agg, states.n_repl, states.payload,
+        clusters, workers, gen_times, rewards, payloads, k, reward_threshold,
+        send, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+    return _olaf_step_unpack(*outs)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -76,16 +76,23 @@ def run_olaf_async(cfg, args) -> float:
     updates. Workers proceed without a barrier — a straggler's update merges
     or is superseded (the paper's technique applied to LM training).
 
-    The whole enqueue→combine→drain→apply cycle is ONE jitted step with
-    donated queue/params/opt buffers: the burst is pushed through
-    ``jax_enqueue_burst``, the k oldest updates are drained with
-    ``jax_dequeue_burst`` (drain-k), and their agg_count-weighted mean
-    gradient is applied — no per-update ``jax_dequeue`` round trips and no
-    host sync inside the loop. Only buffered scalar logs cross the host
-    boundary, in batches of ``log_every``.
+    The whole feedback loop is device-resident: ONE jitted
+    ``txctl_gate → olaf_step → weighted apply`` step with donated
+    queue/params/opt/feedback buffers. The §5 transmission-control gate
+    (vectorized ``jax_txctl`` with on-device PRNG) decides which burst rows
+    transmit, the fused ``olaf_step`` cycle performs the burst enqueue and
+    drain-k in a single launch, the agg_count-weighted mean gradient is
+    applied, and the running Age-of-Model accumulator and per-worker ACK
+    feedback are folded into the same step — zero per-iteration host
+    syncs. Only buffered scalar logs cross the host boundary, in batches
+    of ``log_every``.
     """
-    from repro.core.olaf_queue import (jax_dequeue_burst, jax_enqueue_burst,
-                                       jax_queue_init)
+    from repro.core.aom import (jax_aom_average, jax_aom_init,
+                                jax_aom_update_block)
+    from repro.core.olaf_queue import jax_queue_init
+    from repro.core.txctl import (TxControlConfig, jax_txctl_ack,
+                                  jax_txctl_gate, jax_txctl_init)
+    from repro.kernels import ops
     from repro.models.module import tree_paths
 
     opt = OptConfig(lr=args.lr, grad_clip=1.0)
@@ -94,8 +101,12 @@ def run_olaf_async(cfg, args) -> float:
     flat_like = tree_paths(params)
     sizes = {k: int(np.prod(v.shape)) for k, v in flat_like.items()}
     dim = sum(sizes.values())
-    queue = jax_queue_init(capacity=max(args.workers, 4), dim=dim)
-    drain_k = max(1, min(args.drain_k, max(args.workers, 4)))
+    # a capacity below the cluster count (--queue-slots) makes the paper's
+    # congestion regime (N active clusters > Q_max) reachable, which is
+    # what arms the transmission-control gate
+    capacity = getattr(args, "queue_slots", 0) or max(args.workers, 4)
+    queue = jax_queue_init(capacity=capacity, dim=dim)
+    drain_k = max(1, min(args.drain_k, capacity))
 
     shards = [SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                      global_batch=args.batch,
@@ -123,33 +134,65 @@ def run_olaf_async(cfg, args) -> float:
             d[parts[-1]] = leaf
         return root
 
-    def ps_step(queue, params, opt_state, clusters, workers, times, rewards,
-                payloads, losses):
-        """enqueue_burst → drain_k → weighted combined-gradient apply.
+    n_clusters = max(args.workers // 2, 2)  # workers grouped into clusters
+    cluster_of = jnp.arange(args.workers, dtype=jnp.int32) % n_clusters
+    tx_cfg = TxControlConfig(
+        delta_threshold=getattr(args, "txctl_threshold", 0.5),
+        slope_mode=getattr(args, "txctl_mode", "fairness"))
+    step_impl = getattr(args, "step_impl", "auto")
+    q_max = float(capacity)
+    active_window = 1.0  # netsim's active-cluster sliding window (virtual)
 
-        After a non-empty burst enqueue the queue always holds at least one
-        update (either something was already waiting or the burst appended),
-        so the drain is guaranteed to pop ≥ 1 valid update and every call is
-        exactly one optimizer step — no validity round trip needed.
+    def ps_step(queue, params, opt_state, tx, aom, last_seen, key, now,
+                clusters, workers, times, rewards, payloads, losses):
+        """txctl_gate → olaf_step → weighted apply, all device-resident.
+
+        The §5 send gate runs first (per-burst-row Bernoulli from the
+        worker's last piggybacked queue feedback); the surviving rows go
+        through the single-launch fused cycle (``ops.olaf_step`` — the
+        Pallas kernel or the fused XLA composition, inlined into this jit);
+        the drained block's agg_count-weighted mean gradient is applied;
+        finally the AoM sawtooth integral and the per-worker ACK feedback
+        (multicast to the drained updates' clusters) are folded in.
+        Nothing in here touches the host.
         """
-        queue = jax_enqueue_burst(queue, clusters, workers, times, rewards,
-                                  payloads)
-        queue, out = jax_dequeue_burst(queue, drain_k)
+        key, sub = jax.random.split(key)
+        send, _ = jax_txctl_gate(tx, sub, now, tx_cfg.delta_threshold,
+                                 tx_cfg.v, worker_ids=workers)
         # each popped payload is the mean of agg_count raw gradients; the
         # applied gradient is their exact weighted mean
+        queue, out = ops.olaf_step(queue, clusters, workers, times, rewards,
+                                   payloads, jnp.inf, send, k=drain_k,
+                                   impl=step_impl)
         wts = out["valid"] * out["agg_count"].astype(jnp.float32)
         g_flat = jnp.einsum("k,kd->d", wts, out["payload"]) \
             / jnp.maximum(wts.sum(), 1.0)
         g = unflatten_like(g_flat, params)
         params, opt_state = apply_updates(params, g, opt_state, opt)
+        # device AoM accumulator: drained rows delivered at virtual `now`
+        aom = jax_aom_update_block(
+            aom, jnp.full(out["valid"].shape, now, jnp.float32),
+            out["gen_time"], out["valid"])
+        # reverse-path feedback: N is the number of clusters active in the
+        # sliding window (netsim's active_clusters — contending flows, NOT
+        # occupancy, which is capped at Q_max and could never congest);
+        # every worker in a drained update's cluster receives {N, Q_max}
+        last_seen = last_seen.at[clusters].max(
+            jnp.where(send, times, -jnp.inf))
+        n_active = ((now - last_seen) <= active_window).sum() \
+            .astype(jnp.float32)
+        acked = jnp.any((cluster_of[:, None] == out["cluster"][None, :])
+                        & out["valid"][None, :], axis=1)
+        tx = jax_txctl_ack(tx, acked, now, n_active, q_max)
         stats = dict(loss=jnp.mean(losses), applied=out["n_valid"],
                      combined=wts.sum(), agg_total=queue.n_agg,
+                     deferred=(~send).sum(),
                      occupancy=(queue.cluster >= 0).sum())
-        return queue, params, opt_state, stats
+        return queue, params, opt_state, tx, aom, last_seen, key, stats
 
-    # donated buffers: the O(Q·D) queue payload and the params/opt trees are
-    # updated in place instead of copied every step
-    ps_step = jax.jit(ps_step, donate_argnums=(0, 1, 2))
+    # donated buffers: the O(Q·D) queue payload, the params/opt trees and
+    # the feedback states are updated in place instead of copied every step
+    ps_step = jax.jit(ps_step, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
 
     grad_fn = jax.jit(jax.value_and_grad(
         lambda p, b: api.loss_fn(p, b, cfg)))
@@ -157,10 +200,14 @@ def run_olaf_async(cfg, args) -> float:
     worker_speed = 1.0 + 0.5 * rng.random(args.workers)
     worker_next = np.zeros(args.workers)
     worker_step = np.zeros(args.workers, int)
-    n_clusters = max(args.workers // 2, 2)  # workers grouped into clusters
     burst_size = max(1, args.burst_size)
+    tx = jax_txctl_init(args.workers)
+    aom = jax_aom_init()
+    last_seen = jnp.full((n_clusters,), -jnp.inf, jnp.float32)
+    step_key = jax.random.key(args.seed + 101)
     pending = []  # device-side per-step stats, drained in batches
     log_rows = []  # host-side (step, loss, combined) after each flush
+    deferred_total = [0]  # txctl-gated (deferred) burst rows
     # logging disabled -> one flush at the end, never a mid-loop sync
     flush_every = args.log_every if args.log_every > 0 else max(args.steps, 1)
 
@@ -169,6 +216,7 @@ def run_olaf_async(cfg, args) -> float:
         for row in jax.device_get(pending):
             step = len(log_rows) + 1
             log_rows.append((step, float(row["loss"]), int(row["combined"])))
+            deferred_total[0] += int(row["deferred"])
         del pending[:]
 
     t0 = time.time()
@@ -191,8 +239,10 @@ def run_olaf_async(cfg, args) -> float:
             burst_losses.append(loss)
             worker_step[w] += 1
             worker_next[w] += worker_speed[w]
-        queue, params, opt_state, stats = ps_step(
-            queue, params, opt_state,
+        queue, params, opt_state, tx, aom, last_seen, step_key, stats = \
+            ps_step(
+            queue, params, opt_state, tx, aom, last_seen, step_key,
+            jnp.float32(max(burst["t"])),
             jnp.asarray(burst["c"], jnp.int32),
             jnp.asarray(burst["w"], jnp.int32),
             jnp.asarray(burst["t"], jnp.float32),
@@ -208,8 +258,11 @@ def run_olaf_async(cfg, args) -> float:
     flush()
     wall = time.time() - t0
     losses = [l for _, l, _ in log_rows]
+    avg_aom = float(jax_aom_average(aom, float(worker_next.max())))
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}); "
           f"queue aggregations {int(queue.n_agg)}; "
+          f"txctl deferred {deferred_total[0]}; "
+          f"avg AoM {avg_aom:.3f} (virtual); "
           f"{args.steps / max(wall, 1e-9):.2f} steps/s")
     return losses[-1]
 
@@ -229,6 +282,19 @@ def main():
                     help="updates arriving per PS drain (olaf-async)")
     ap.add_argument("--drain-k", type=int, default=4,
                     help="queue slots drained per jitted PS step (olaf-async)")
+    ap.add_argument("--queue-slots", type=int, default=0,
+                    help="device OlafQueue capacity Q_max (0: max(workers, "
+                         "4)); below the cluster count arms the txctl "
+                         "congestion gate")
+    ap.add_argument("--step-impl", default="auto",
+                    choices=["auto", "xla", "pallas"],
+                    help="fused olaf_step cycle: Pallas kernel or XLA "
+                         "composition (auto: kernel when compiled)")
+    ap.add_argument("--txctl-threshold", type=float, default=0.5,
+                    help="Δ̄_T for the device txctl gate (virtual time)")
+    ap.add_argument("--txctl-mode", default="fairness",
+                    choices=["fairness", "urgency"],
+                    help="txctl staleness slope: v=Δ̄_T or v=1/Δ̄_T")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)

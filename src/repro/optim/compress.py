@@ -17,14 +17,29 @@ import numpy as np
 # top-k sparsification (+ error feedback residual)
 # ---------------------------------------------------------------------------
 def topk_compress(g: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Flat gradient -> (indices (k,), values (k,)) of the largest-|.| entries."""
+    """Flat gradient -> (indices (k,), values (k,)) of the largest-|.| entries.
+
+    ``jnp.take`` instead of ``g[idx]`` fancy indexing: the latter lowers
+    through the full gather machinery (bounds bookkeeping + an intermediate
+    copy of the flat gradient under jit), while ``take`` emits the direct
+    (k,)-row gather, so compression composes with the jitted PS step without
+    re-materializing the O(D) gradient.
+    """
     mag = jnp.abs(g)
     vals, idx = jax.lax.top_k(mag, k)
-    return idx.astype(jnp.int32), g[idx]
+    return idx.astype(jnp.int32), jnp.take(g, idx)
 
 
 def topk_decompress(idx: jnp.ndarray, vals: jnp.ndarray, dim: int) -> jnp.ndarray:
     return jnp.zeros((dim,), vals.dtype).at[idx].set(vals)
+
+
+# Donating jitted entry point for the update hot path: the O(D) flat
+# gradient buffer is consumed (reused in place where the backend supports
+# donation) — by the time the (k,)-row compression leaves this call the
+# dense gradient is dead, so no copy of it survives the step.
+topk_compress_jit = jax.jit(topk_compress, static_argnums=1,
+                            donate_argnums=0)
 
 
 class ErrorFeedback:

@@ -47,12 +47,15 @@ class AsyncTrainConfig:
     local_lr: float = 5e-3  # worker-side local step while awaiting ACK
     seed: int = 0
     horizon: float = 1e9
-    # Device-resident PS drain pipeline: 0 applies every delivery on the
-    # spot (legacy); k > 0 stages deliveries in a device OlafQueue and every
-    # k-th delivery drains them with one jitted enqueue_burst→dequeue_burst
-    # step, applying the agg_count-weighted mean via ``ps.on_updates``.
-    # ACKs between drains carry the then-current (possibly stale) weights.
-    ps_drain_k: int = 0
+    # Device-resident PS drain pipeline: every delivery is staged in a
+    # device OlafQueue and every k-th delivery drains the staging queue
+    # with ONE fused ``olaf_step`` launch (burst enqueue + drain-k in a
+    # single dispatch), applying the agg_count-weighted mean via
+    # ``ps.on_updates``. k <= 1 drains on every delivery (the former
+    # per-delivery cadence, now through the same fused path — the legacy
+    # per-pop host-sync apply was removed); ACKs between drains carry the
+    # then-current (possibly stale) weights.
+    ps_drain_k: int = 1
 
 
 @dataclasses.dataclass
@@ -89,14 +92,13 @@ class AsyncDRLTrainer:
         self.deliveries_per_worker: Dict[int, int] = {i: 0 for i in range(n_workers)}
         self.reward_curve: List[Tuple[float, float]] = []
         self.time_to_n: Dict[int, float] = {}
-        if cfg.ps_drain_k > 0:
-            from repro.core.olaf_queue import jax_queue_init
-            # clamp to the staging capacity: enqueueing more than
-            # queue_slots distinct clusters per drain would silently drop
-            # staged gradients through the full-queue rule
-            self._drain_k = min(cfg.ps_drain_k, cfg.queue_slots)
-            self._ps_queue = jax_queue_init(cfg.queue_slots, int(flat0.size))
-            self._ps_buf: List[tuple] = []
+        from repro.core.olaf_queue import jax_queue_init
+        # clamp to the staging capacity: enqueueing more than queue_slots
+        # distinct clusters per drain would silently drop staged gradients
+        # through the full-queue rule
+        self._drain_k = min(max(cfg.ps_drain_k, 1), cfg.queue_slots)
+        self._ps_queue = jax_queue_init(cfg.queue_slots, int(flat0.size))
+        self._ps_buf: List[tuple] = []
         rng = np.random.default_rng(cfg.seed)
 
         workers = []
@@ -136,11 +138,6 @@ class AsyncDRLTrainer:
         n_done = min(self.deliveries_per_worker.values())
         if n_done not in self.time_to_n:
             self.time_to_n[n_done] = now
-        if self.cfg.ps_drain_k <= 0:  # legacy: apply every delivery directly
-            w = self.ps.on_update(now, upd.payload, upd.reward, upd.gen_time)
-            if self.ps.reward_log and self.ps.reward_log[-1][2]:
-                self.reward_curve.append((now, upd.reward))
-            return np.asarray(w, np.float32)
         self._ps_buf.append((upd.cluster_id, upd.worker_id, upd.gen_time,
                              upd.reward, np.asarray(upd.payload, np.float32)))
         if len(self._ps_buf) >= self._drain_k:
@@ -148,21 +145,25 @@ class AsyncDRLTrainer:
         return np.asarray(self.ps.w, np.float32)
 
     def _drain_ps_queue(self, now: float) -> int:
-        """One jitted enqueue_burst → dequeue_burst(k) step over the staged
-        deliveries; applies the drained block via ``ps.on_updates``. Returns
-        the number of updates popped."""
+        """One fused ``olaf_step`` launch (burst enqueue + drain-k in a
+        single dispatch) over the staged deliveries; applies the drained
+        block via ``ps.on_updates``. Returns the number of updates popped."""
         import jax.numpy as jnp
-        from repro.core.olaf_queue import (jax_dequeue_burst_donating,
-                                           jax_enqueue_burst_donating)
+        from repro.kernels import ops
         if self._ps_buf:
             c, w, t, r, p = zip(*self._ps_buf)
             self._ps_buf = []
-            self._ps_queue = jax_enqueue_burst_donating(
-                self._ps_queue, jnp.asarray(c, jnp.int32),
-                jnp.asarray(w, jnp.int32), jnp.asarray(t, jnp.float32),
-                jnp.asarray(r, jnp.float32), jnp.asarray(np.stack(p)))
-        self._ps_queue, out = jax_dequeue_burst_donating(
-            self._ps_queue, self._drain_k)
+            burst = (jnp.asarray(c, jnp.int32), jnp.asarray(w, jnp.int32),
+                     jnp.asarray(t, jnp.float32), jnp.asarray(r, jnp.float32),
+                     jnp.asarray(np.stack(p)))
+        else:  # final flush: drain-only cycle with an empty burst
+            dim = self._ps_queue.payload.shape[1]
+            burst = (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                     jnp.zeros((0,), jnp.float32),
+                     jnp.zeros((0,), jnp.float32),
+                     jnp.zeros((0, dim), jnp.float32))
+        self._ps_queue, out = ops.olaf_step(self._ps_queue, *burst,
+                                            k=self._drain_k)
         valid = np.asarray(out["valid"])
         if not valid.any():
             return 0
@@ -183,11 +184,10 @@ class AsyncDRLTrainer:
     def run(self, eval_every: int = 0) -> AsyncTrainResult:
         sim = NetworkSimulator(self.sim_cfg)
         res = sim.run()
-        if self.cfg.ps_drain_k > 0:
-            # flush the partial staging buffer, then keep draining until
-            # the staging queue pops nothing
-            while self._drain_ps_queue(sim.now):
-                pass
+        # flush the partial staging buffer, then keep draining until the
+        # staging queue pops nothing
+        while self._drain_ps_queue(sim.now):
+            pass
         final = unflatten_params(jax.numpy.asarray(self.ps.w, np.float32),
                                  self.spec)
         evals: List[float] = []
@@ -197,6 +197,62 @@ class AsyncDRLTrainer:
             sim_result=res, ps=self.ps, final_params=final,
             reward_curve=self.reward_curve, eval_rewards=evals,
             time_to_n_updates=self.time_to_n)
+
+
+def run_hybrid_ppo(*, env: str = "cartpole", ppo_cfg: Optional[PPOConfig] = None,
+                   ps_cfg: Optional[PSConfig] = None, n_envs: int = 2,
+                   local_lr: float = 5e-3, seed: int = 0,
+                   interpret: bool = True, sharded: bool = True,
+                   **multihop_kw):
+    """§8.3 multi-switch hybrid run fed by **real PPO gradients** end to end.
+
+    Every generated update's payload is a real flattened PPO gradient (and
+    its reward the episode mean) from the owning worker's current local
+    params — no synthetic payload rows. The rows stay device-resident: the
+    netsim trace carries metadata only, the SW1/SW2/SW3 payload combining
+    runs as one sharded multi-queue launch per transmission window
+    (``repro.core.hybrid``), and every PS delivery is applied through
+    ``ParameterServer.on_updates`` with its combined packet's agg_count
+    weight, reward and generation time.
+
+    Returns ``(HybridResult, ParameterServer, SimCfg)``.
+    """
+    from repro.core.hybrid import run_hybrid_multihop
+    from repro.core.netsim import multihop_cfg
+
+    env_obj = make_env(env)
+    pcfg = dataclasses.replace(ppo_cfg or PPOConfig(),
+                               obs_dim=env_obj.obs_dim,
+                               n_actions=env_obj.n_actions)
+    params0 = init_actor_critic(jax.random.key(seed), pcfg)
+    flat0, _ = flatten_params(params0)
+    dim = int(np.asarray(flat0).size)
+
+    cfg = multihop_cfg("olaf", seed=seed, **multihop_kw)
+    worker_params = {w.worker_id: params0 for w in cfg.workers}
+    worker_keys = {w.worker_id: jax.random.key(seed * 7919 + w.worker_id)
+                   for w in cfg.workers}
+
+    def payload_source(now: float, worker_id: int):
+        worker_keys[worker_id], sub = jax.random.split(
+            worker_keys[worker_id])
+        params = worker_params[worker_id]
+        grads, mean_reward, _ = ppo.worker_iteration(
+            params, sub, env=env_obj, cfg=pcfg, n_envs=n_envs)
+        # worker keeps training locally while its update is in flight
+        worker_params[worker_id] = ppo.local_update(params, grads, local_lr)
+        flat, _ = flatten_params(grads)
+        return np.asarray(flat, np.float32), float(mean_reward)
+
+    hyb, cfg = run_hybrid_multihop(dim, seed=seed, interpret=interpret,
+                                   payload_source=payload_source,
+                                   sim_cfg=cfg, sharded=sharded)
+    ps = ParameterServer(np.asarray(flat0), ps_cfg or PSConfig())
+    for t, upd, row in hyb.delivered:  # deliveries -> reward-gated PS apply
+        ps.on_updates(t, np.asarray(row, np.float32)[None],
+                      np.asarray([upd.reward]), np.asarray([upd.gen_time]),
+                      np.asarray([upd.agg_count]))
+    return hyb, ps, cfg
 
 
 def time_to_reward_speedup(cfg_base: AsyncTrainConfig, n_target: int

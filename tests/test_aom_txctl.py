@@ -1,9 +1,18 @@
-"""Tests for the Age-of-Model metric and the transmission controller."""
+"""Tests for the Age-of-Model metric and the transmission controller —
+including the device-resident (jax) variants against the numpy oracles."""
 import numpy as np
 import pytest
 
-from repro.core.aom import aom_trajectory, average_aom, jain_fairness, peak_aom
-from repro.core.txctl import QueueFeedback, TransmissionController, TxControlConfig
+import jax
+import jax.numpy as jnp
+
+from repro.core.aom import (aom_trajectory, average_aom, jain_fairness,
+                            jax_aom_average, jax_aom_init,
+                            jax_aom_update_block, peak_aom)
+from repro.core.txctl import (JaxTxState, QueueFeedback,
+                              TransmissionController, TxControlConfig,
+                              jax_send_probability, jax_txctl_ack,
+                              jax_txctl_gate, jax_txctl_init)
 
 
 class TestAoM:
@@ -78,3 +87,129 @@ class TestTxControl:
         c = self.mk(mode="fairness", thresh=0.1)
         c.on_ack(0.0, QueueFeedback(n_active_clusters=100, q_max=1, q_occupancy=1))
         assert 0.0 < c.send_probability(0.11) <= 1.0
+
+
+class TestJaxTxCtl:
+    """The (W,)-batched device gate vs the scalar numpy oracle, per worker,
+    across congested and uncongested regimes and both slope modes."""
+
+    @pytest.mark.parametrize("mode", ["fairness", "urgency"])
+    def test_batched_probability_matches_scalar_oracle(self, mode):
+        rng = np.random.default_rng(42 if mode == "fairness" else 43)
+        cfg = TxControlConfig(delta_threshold=0.4, slope_mode=mode)
+        W = 64
+        for trial in range(20):
+            # random per-worker histories: some never ACKed, some fresh,
+            # some stale; N spans both N <= Q_max and N > Q_max regimes
+            has_fb = rng.random(W) < 0.8
+            last_ack = rng.uniform(0.0, 2.0, W).astype(np.float32)
+            n_active = rng.integers(0, 24, W).astype(np.float32)
+            q_max = rng.integers(1, 12, W).astype(np.float32)
+            now = float(2.0 + rng.uniform(0, 1.5))
+            state = JaxTxState(last_ack=jnp.asarray(last_ack),
+                               has_fb=jnp.asarray(has_fb),
+                               n_active=jnp.asarray(n_active),
+                               q_max=jnp.asarray(q_max))
+            p_dev = np.asarray(jax_send_probability(state, now,
+                                                    cfg.delta_threshold,
+                                                    cfg.v))
+            for w in range(W):
+                ctl = TransmissionController(cfg, rng)
+                if has_fb[w]:
+                    ctl.on_ack(float(last_ack[w]), QueueFeedback(
+                        n_active_clusters=int(n_active[w]),
+                        q_max=int(q_max[w]), q_occupancy=0))
+                np.testing.assert_allclose(
+                    p_dev[w], ctl.send_probability(now), rtol=1e-5,
+                    err_msg=f"{mode}[{trial}] worker {w}")  # f32 vs f64
+
+    def test_gate_respects_probability(self):
+        """P_s = 1 rows always send; P_s ~ 0 rows almost never do."""
+        W = 512
+        state = JaxTxState(
+            last_ack=jnp.full((W,), 10.0, jnp.float32),  # fresh ACKs
+            has_fb=jnp.ones((W,), bool),
+            n_active=jnp.where(jnp.arange(W) < W // 2, 4.0, 4000.0),
+            q_max=jnp.full((W,), 4.0, jnp.float32))
+        send, p = jax_txctl_gate(state, jax.random.key(0), 10.0, 0.4, 0.4)
+        send = np.asarray(send)
+        assert send[:W // 2].all()  # uncongested: transmit at will
+        assert send[W // 2:].mean() < 0.05  # base rate 1/1000
+
+    def test_ack_updates_only_acked_rows(self):
+        state = jax_txctl_init(4)
+        acked = jnp.asarray([True, False, True, False])
+        state = jax_txctl_ack(state, acked, 3.0, 16.0, 8.0)
+        np.testing.assert_array_equal(np.asarray(state.has_fb),
+                                      [True, False, True, False])
+        np.testing.assert_allclose(np.asarray(state.last_ack),
+                                   [3.0, 0.0, 3.0, 0.0])
+        np.testing.assert_allclose(np.asarray(state.n_active),
+                                   [16.0, 0.0, 16.0, 0.0])
+
+    def test_gate_worker_ids_selects_burst_rows(self):
+        state = jax_txctl_init(8)
+        state = jax_txctl_ack(state, jnp.arange(8) == 5, 1.0, 100.0, 2.0)
+        _, p = jax_txctl_gate(state, jax.random.key(1), 1.0, 0.4, 0.4,
+                              worker_ids=jnp.asarray([5, 0, 5]))
+        np.testing.assert_allclose(np.asarray(p), [0.02, 1.0, 0.02])
+
+
+class TestJaxAoM:
+    """The device AoM accumulator vs the ``aom_trajectory`` integrals on
+    replayed delivery logs."""
+
+    def _replay(self, deliveries, horizon, t0=0.0):
+        st = jax_aom_init(t0)
+        if deliveries:
+            ts, gens = zip(*deliveries)
+            st = jax_aom_update_block(
+                st, jnp.asarray(ts, jnp.float32),
+                jnp.asarray(gens, jnp.float32),
+                jnp.ones((len(ts),), bool))
+        return float(jax_aom_average(st, horizon))
+
+    def test_matches_average_aom_on_example(self):
+        deliveries = [(2.0, 0.0), (4.0, 3.0)]
+        assert self._replay(deliveries, 5.0) == pytest.approx(
+            average_aom(deliveries, 5.0), rel=1e-6)
+
+    def test_matches_average_aom_on_random_logs(self):
+        rng = np.random.default_rng(9)
+        for trial in range(25):
+            n = int(rng.integers(1, 40))
+            d_times = np.sort(rng.uniform(0.1, 10.0, n))
+            gens = d_times - rng.uniform(0.01, 3.0, n)  # gen before delivery
+            deliveries = list(zip(d_times.tolist(), gens.tolist()))
+            horizon = float(d_times[-1] + rng.uniform(0.0, 2.0))
+            want = average_aom(deliveries, horizon)
+            got = self._replay(deliveries, horizon)
+            assert got == pytest.approx(want, rel=1e-4, abs=1e-4), trial
+
+    def test_matches_on_simulated_delivery_log(self):
+        """Replaying a real netsim run's delivery log through the device
+        accumulator reproduces the simulator's per-cluster AoM."""
+        from repro.core.netsim import NetworkSimulator, microbench_cfg
+        cfg = microbench_cfg("olaf", out_gbps=0.5, n_clusters=4,
+                             workers_per_cluster=2, n_updates=20,
+                             horizon=5.0)
+        res = NetworkSimulator(cfg).run()
+        per = res.per_cluster_aom()
+        for c, deliveries in res.deliveries.items():
+            got = self._replay(sorted(deliveries), res.busy_end)
+            assert got == pytest.approx(per[c], rel=1e-3, abs=1e-4), c
+
+    def test_invalid_rows_are_noops(self):
+        """A fixed-shape drained block folds with its validity mask: the
+        invalid tail must not move the integral."""
+        st = jax_aom_update_block(
+            jax_aom_init(), jnp.asarray([1.0, 9.0, 9.0], jnp.float32),
+            jnp.asarray([0.5, 0.0, 0.0], jnp.float32),
+            jnp.asarray([True, False, False]))
+        assert float(jax_aom_average(st, 2.0)) == pytest.approx(
+            average_aom([(1.0, 0.5)], 2.0), rel=1e-6)
+
+    def test_stale_delivery_does_not_rejuvenate(self):
+        fresh_then_old = [(2.0, 1.5), (3.0, 0.2)]
+        assert self._replay(fresh_then_old, 5.0) == pytest.approx(
+            average_aom(fresh_then_old, 5.0), rel=1e-6)

@@ -10,12 +10,19 @@ float-association tolerance, across 100+ randomized bursts covering the
 full-queue, same-worker-replace and reward-gated paths, and across grid
 tilings (multi-tile grids exercise the SMEM scratch reuse between steps).
 """
+import os
 import zlib
 
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
+
+if (os.environ.get("REPRO_PALLAS_COMPILED") == "1"
+        and jax.default_backend() != "tpu"):
+    pytest.skip("compiled Pallas kernels need a TPU backend",
+                allow_module_level=True)
 
 from repro.core.olaf_queue import (jax_dequeue_burst, jax_enqueue_burst,
                                    jax_queue_init)

@@ -1,11 +1,18 @@
 """Per-kernel allclose sweeps: Pallas (interpret=True) vs the pure-jnp
 oracles in ``repro.kernels.ref``, over shapes and dtypes."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+
+if (os.environ.get("REPRO_PALLAS_COMPILED") == "1"
+        and jax.default_backend() != "tpu"):
+    pytest.skip("compiled Pallas kernels need a TPU backend",
+                allow_module_level=True)
 
 
 def rand(rng, shape, dtype):

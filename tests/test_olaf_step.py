@@ -1,0 +1,228 @@
+"""Oracle-equivalence of the fused full-cycle Pallas ``olaf_step`` kernel.
+
+The kernel performs the burst-enqueue scalar resolve, the drain-k
+oldest-valid selection and the payload combine/gather in one launch; it
+must match the composed ``jax_enqueue_burst → jax_dequeue_burst`` oracle
+(each half itself proven against the sequential scan / repeated-dequeue
+references) on metadata, counters and drain rows exactly, and on payloads
+within float-association tolerance — across 100+ randomized bursts covering
+empty, partially-full and full queues, every drain regime (k popping less,
+exactly, and more than the occupancy), transmission-control send masks,
+grid tilings, and the multi-queue S axis.
+"""
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.olaf_queue import jax_olaf_step, jax_queue_init
+from repro.kernels import ops
+
+if (os.environ.get("REPRO_PALLAS_COMPILED") == "1"
+        and jax.default_backend() != "tpu"):
+    pytest.skip("compiled Pallas kernels need a TPU backend",
+                allow_module_level=True)
+
+D = 16
+META_FIELDS = ("cluster", "worker", "seq", "agg_count", "replaceable",
+               "next_seq", "n_dropped", "n_agg", "n_repl")
+OUT_EXACT = ("valid", "n_valid", "cluster", "worker", "agg_count",
+             "gen_time", "reward")
+
+# name, Q, U, k, n_clusters, n_workers, reward_threshold, n_bursts
+SCENARIOS = [
+    ("general", 8, 24, 4, 12, 8, np.inf, 30),
+    ("full_queue", 4, 32, 2, 16, 8, np.inf, 30),
+    ("drain_all", 8, 6, 8, 20, 8, np.inf, 25),  # k == Q pops past occupancy
+    ("reward_gated", 6, 16, 3, 8, 4, 0.75, 30),
+]
+
+
+def _copy(state):
+    return jax.tree_util.tree_map(jnp.copy, state)
+
+
+def _rand_burst(rng, U, n_clusters, n_workers, t0):
+    return (jnp.asarray(rng.integers(0, n_clusters, U), jnp.int32),
+            jnp.asarray(rng.integers(0, n_workers, U), jnp.int32),
+            jnp.asarray(t0 + rng.random(U), jnp.float32),
+            jnp.asarray(rng.normal(size=U), jnp.float32),
+            jnp.asarray(rng.normal(size=(U, D)), jnp.float32))
+
+
+def _assert_cycle_match(oracle, kernel, name):
+    st_o, out_o = oracle
+    st_k, out_k = kernel
+    for f in META_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(st_o, f)),
+                                      np.asarray(getattr(st_k, f)),
+                                      err_msg=f"{name}: state {f}")
+    for f in ("gen_time", "reward"):
+        np.testing.assert_array_equal(np.asarray(getattr(st_o, f)),
+                                      np.asarray(getattr(st_k, f)),
+                                      err_msg=f"{name}: state {f}")
+    np.testing.assert_allclose(np.asarray(st_o.payload),
+                               np.asarray(st_k.payload),
+                               rtol=1e-4, atol=1e-5,
+                               err_msg=f"{name}: state payload")
+    for f in OUT_EXACT:
+        np.testing.assert_array_equal(np.asarray(out_o[f]),
+                                      np.asarray(out_k[f]),
+                                      err_msg=f"{name}: out {f}")
+    np.testing.assert_allclose(np.asarray(out_o["payload"]),
+                               np.asarray(out_k["payload"]),
+                               rtol=1e-4, atol=1e-5,
+                               err_msg=f"{name}: out payload")
+
+
+@pytest.mark.parametrize(
+    "name,Q,U,k,n_clusters,n_workers,thr,n_bursts",
+    SCENARIOS, ids=[s[0] for s in SCENARIOS])
+def test_fused_cycle_equals_composed_oracle(name, Q, U, k, n_clusters,
+                                            n_workers, thr, n_bursts):
+    """4 scenarios × 25-30 bursts = 115 randomized full cycles through the
+    kernel, starting from the empty queue and evolving through partial and
+    full occupancies (the drain leaves residue between bursts)."""
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
+    st_oracle = st_kernel = jax_queue_init(Q, D)
+    saw_empty, saw_partial = False, False
+    for trial in range(n_bursts):
+        occ = int(np.asarray((st_oracle.cluster >= 0).sum()))
+        saw_empty |= occ == 0
+        saw_partial |= 0 < occ < Q
+        args = _rand_burst(rng, U, n_clusters, n_workers, float(trial))
+        oracle = jax_olaf_step(_copy(st_oracle), *args, k, thr)
+        kernel = ops.olaf_step(_copy(st_kernel), *args, thr, k=k,
+                               impl="pallas", tile_q=4, tile_d=D)
+        _assert_cycle_match(oracle, kernel, f"{name}[{trial}]")
+        st_oracle, st_kernel = oracle[0], kernel[0]
+    assert saw_empty  # cycles start from (and drain back through) empty
+    if name != "drain_all":  # drain_all pops the whole queue every cycle
+        assert saw_partial
+    if name == "full_queue":
+        # drops prove the full-queue state was reached inside the cycle
+        # (between the enqueue resolve and the drain)
+        assert int(st_kernel.n_dropped) > 0
+    if name == "reward_gated":
+        assert int(st_kernel.n_dropped) > 0 and int(st_kernel.n_repl) > 0
+    assert int(st_kernel.n_agg) > 0
+
+
+def test_empty_queue_drain_only():
+    """Draining an empty queue through an empty-ish burst: all rows invalid,
+    nothing popped, state unchanged."""
+    st = jax_queue_init(8, D)
+    args = (jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+            jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.float32),
+            jnp.zeros((1, D), jnp.float32))
+    send = jnp.zeros((1,), bool)  # gate the lone update out too
+    oracle = jax_olaf_step(_copy(st), *args, 4, jnp.inf, send)
+    kernel = ops.olaf_step(_copy(st), *args, send=send, k=4, impl="pallas",
+                           tile_q=4, tile_d=D)
+    _assert_cycle_match(oracle, kernel, "empty-drain")
+    assert int(kernel[1]["n_valid"]) == 0
+    assert int(np.asarray((kernel[0].cluster >= 0).sum())) == 0
+
+
+@pytest.mark.parametrize("tile_q,tile_d", [(8, 32), (4, 32), (2, 16), (8, 8)])
+def test_grid_tilings_agree(tile_q, tile_d):
+    """Multi-tile grids reuse the first step's SMEM resolve + drain-select
+    scratch and accumulate the drained rows across Q-tiles; every tiling
+    must produce the identical cycle."""
+    rng = np.random.default_rng(0)
+    Q, U, Dd, k = 8, 20, 32, 5
+    st = jax_queue_init(Q, Dd)
+    args = (jnp.asarray(rng.integers(0, 12, U), jnp.int32),
+            jnp.asarray(rng.integers(0, 5, U), jnp.int32),
+            jnp.asarray(rng.random(U), jnp.float32),
+            jnp.asarray(rng.normal(size=U), jnp.float32),
+            jnp.asarray(rng.normal(size=(U, Dd)), jnp.float32))
+    want = jax_olaf_step(_copy(st), *args, k)
+    got = ops.olaf_step(_copy(st), *args, k=k, impl="pallas",
+                        tile_q=tile_q, tile_d=tile_d)
+    _assert_cycle_match(want, got, f"tiling({tile_q},{tile_d})")
+
+
+def test_send_mask_defers_without_dropping():
+    """Gated-out rows (worker-side txctl) must neither enter the queue nor
+    count as drops, in kernel and oracle alike."""
+    rng = np.random.default_rng(3)
+    Q, U, k = 8, 16, 3
+    st = jax_queue_init(Q, D)
+    for trial in range(6):
+        args = _rand_burst(rng, U, 10, 5, float(trial))
+        send = jnp.asarray(rng.integers(0, 2, U).astype(bool))
+        oracle = jax_olaf_step(_copy(st), *args, k, jnp.inf, send)
+        kernel = ops.olaf_step(_copy(st), *args, send=send, k=k,
+                               impl="pallas", tile_q=4, tile_d=D)
+        _assert_cycle_match(oracle, kernel, f"send[{trial}]")
+        st = oracle[0]
+    # a fully-gated burst is a no-op enqueue: counters must not move
+    before = int(st.n_dropped)
+    args = _rand_burst(rng, U, 10, 5, 99.0)
+    st2 = jax_olaf_step(_copy(st), *args, 0, jnp.inf,
+                        jnp.zeros((U,), bool))[0]
+    assert int(st2.n_dropped) == before
+    assert int(st2.next_seq) == int(st.next_seq)
+
+
+def test_multi_queue_axis_one_launch():
+    """The leading S axis (SW1/SW2/SW3) folds into the kernel grid; the
+    result must equal per-switch oracle cycles."""
+    rng = np.random.default_rng(7)
+    S, Q, U, k = 3, 8, 12, 4
+    states = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[jax_queue_init(Q, D) for _ in range(S)])
+    args = (jnp.asarray(rng.integers(0, 10, (S, U)), jnp.int32),
+            jnp.asarray(rng.integers(0, 5, (S, U)), jnp.int32),
+            jnp.asarray(rng.random((S, U)), jnp.float32),
+            jnp.asarray(rng.normal(size=(S, U)), jnp.float32),
+            jnp.asarray(rng.normal(size=(S, U, D)), jnp.float32))
+    st_k, out_k = ops.olaf_step_multi(_copy(states), *args, k=k,
+                                      impl="pallas", tile_q=4, tile_d=D)
+    for s in range(S):
+        st_s = jax.tree_util.tree_map(lambda a: a[s], states)
+        st_o, out_o = jax_olaf_step(st_s, *(a[s] for a in args), k)
+        _assert_cycle_match(
+            (st_o, out_o),
+            (jax.tree_util.tree_map(lambda a: a[s], st_k),
+             {f: v[s] for f, v in out_k.items()}), f"S[{s}]")
+
+
+def test_sharded_wrapper_matches_single_launch():
+    """``olaf_step_sharded`` (shard_map over the switch mesh; a plain
+    single launch on this 1-device container) equals the folded-grid
+    multi-queue cycle."""
+    from repro.distributed.sharding import olaf_step_sharded, switch_mesh
+    rng = np.random.default_rng(11)
+    S, Q, U, k = 3, 4, 8, 2
+    states = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[jax_queue_init(Q, D) for _ in range(S)])
+    args = (jnp.asarray(rng.integers(0, 6, (S, U)), jnp.int32),
+            jnp.asarray(rng.integers(0, 3, (S, U)), jnp.int32),
+            jnp.asarray(rng.random((S, U)), jnp.float32),
+            jnp.asarray(rng.normal(size=(S, U)), jnp.float32),
+            jnp.asarray(rng.normal(size=(S, U, D)), jnp.float32))
+    mesh = switch_mesh(S)
+    st_s, out_s = olaf_step_sharded(_copy(states), *args, k=k, mesh=mesh,
+                                    tile_q=4, tile_d=D)
+    st_m, out_m = ops.olaf_step_multi(_copy(states), *args, k=k,
+                                      tile_q=4, tile_d=D)
+    _assert_cycle_match((st_m, out_m), (st_s, out_s), "sharded")
+
+
+def test_xla_impl_equals_pallas_impl():
+    """The two ``ops.olaf_step`` execution paths (fused XLA composition vs
+    the Pallas kernel) are interchangeable."""
+    rng = np.random.default_rng(5)
+    Q, U, k = 8, 16, 4
+    st = jax_queue_init(Q, D)
+    args = _rand_burst(rng, U, 10, 4, 0.0)
+    a = ops.olaf_step(_copy(st), *args, k=k, impl="xla")
+    b = ops.olaf_step(_copy(st), *args, k=k, impl="pallas", tile_q=4,
+                      tile_d=D)
+    _assert_cycle_match(a, b, "impl")

@@ -67,6 +67,27 @@ class TestCompression:
         np.testing.assert_allclose(np.asarray(back)[np.asarray(idx)],
                                    np.asarray(vals))
 
+    def test_topk_donating_jit_matches_and_composes(self):
+        """The donating jitted wrapper computes the same compression, and
+        composes under an outer jit (the PS-step use) without retracing
+        fancy-indexing gathers."""
+        from repro.optim.compress import topk_compress_jit
+        rng = np.random.default_rng(3)
+        g = rng.normal(size=512).astype(np.float32)
+        idx0, vals0 = topk_compress(jnp.asarray(g), 32)
+        idx1, vals1 = topk_compress_jit(jnp.asarray(g), 32)  # donates g
+        np.testing.assert_array_equal(np.asarray(idx0), np.asarray(idx1))
+        np.testing.assert_array_equal(np.asarray(vals0), np.asarray(vals1))
+
+        @jax.jit
+        def step(g):  # compression inside a jitted step: no copy of g
+            idx, vals = topk_compress(g, 32)
+            return topk_decompress(idx, vals, g.shape[0])
+
+        back = step(jnp.asarray(g))
+        np.testing.assert_allclose(np.asarray(back)[np.asarray(idx0)],
+                                   np.asarray(vals0))
+
     @given(st.integers(0, 2 ** 31 - 1))
     @settings(max_examples=25, deadline=None)
     def test_int8_error_bound(self, seed):
