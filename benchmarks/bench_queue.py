@@ -162,8 +162,9 @@ def drain_fast_path(k: int = 8, Q: int = 32, D: int = 65536,
 
 
 def hybrid_multiswitch(dim: int = 4096, seed: int = 0) -> dict:
-    """SW1/SW2/SW3 hybrid run: netsim control plane + device payload
-    combining in one olaf_combine_multi launch per transmission window."""
+    """SW1/SW2/SW3 hybrid run: netsim control plane (windowed batch
+    replay) + device payload combining in one olaf_combine_window launch
+    per transmission window."""
     from repro.core.hybrid import run_hybrid_multihop
 
     t0 = time.time()

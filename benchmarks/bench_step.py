@@ -176,6 +176,51 @@ def olaf_step_kernel_micro(Q: int = 32, D: int = 4096, burst: int = 8,
                 gbps=bytes_moved / (best * 1e-6) / 1e9)
 
 
+def hybrid_replay_micro(dim: int = 512, reps: int = 3) -> dict:
+    """The §8.3 hybrid control-plane replay: per-event vs windowed batch.
+
+    Runs the identical congested SW1/SW2/SW3 trace through both consumers
+    (``HybridMultiSwitchDataPlane.feed`` one Python call per queue event
+    with one device put per ingress row, vs ``feed_window`` with one
+    host-batched classify pass and one staged ``(S, U, D)`` block put per
+    transmission window) and reports host→device transfers per delivered
+    update — the host-share metric the windowed replay exists to cut — and
+    the hybrid wall clock. The transfer ratio is structural (a property of
+    the trace, not the machine), so ``check_regression.py --floors`` gates
+    it at ≥ 2×.
+    """
+    from repro.core.hybrid import run_hybrid_multihop
+    from repro.core.netsim import multihop_cfg
+
+    kw = dict(n_clusters_per_group=3, workers_per_cluster=6, horizon=0.3,
+              interval_s1=0.008, interval_s2=0.009, x1_gbps=0.4e-3,
+              x2_gbps=0.4e-3, sw3_gbps=0.6e-3, size_bits=8192,
+              sw12_slots=6, sw3_slots=6)
+
+    def run(batched):
+        best, res = float("inf"), None
+        for _ in range(reps):
+            cfg = multihop_cfg("olaf", seed=7, **kw)
+            t0 = time.time()
+            res, _ = run_hybrid_multihop(dim, sim_cfg=cfg, batched=batched)
+            best = min(best, time.time() - t0)
+        return best, res
+
+    ev_s, ev = run(batched=False)  # warm-compiles the combine variants
+    win_s, win = run(batched=True)
+    n = max(len(win.delivered), 1)
+    assert len(ev.delivered) == len(win.delivered)
+    return dict(
+        dim=dim, delivered=len(win.delivered),
+        combined_updates=win.combined_updates, launches=win.launches,
+        per_event_s=ev_s, windowed_s=win_s,
+        per_event_h2d=ev.h2d_transfers, windowed_h2d=win.h2d_transfers,
+        per_event_h2d_per_delivery=ev.h2d_transfers / n,
+        windowed_h2d_per_delivery=win.h2d_transfers / n,
+        wall_speedup=ev_s / win_s,
+        speedup=ev.h2d_transfers / max(win.h2d_transfers, 1))
+
+
 def main(report):
     micro = olaf_step_micro()
     report("olaf_step_fused_q8_d64k", micro["fused_us"],
@@ -187,4 +232,13 @@ def main(report):
            f"pallas cycle {kern['kernel_us']:.0f}us, "
            f"{kern['gbps']:.3f} GB/s vs HBM roofline (interpret mode "
            f"unless REPRO_PALLAS_COMPILED=1)")
-    return dict(olaf_step_cycle=micro, olaf_step_kernel=kern)
+    hyb = hybrid_replay_micro()
+    report("hybrid_window_replay_d512", hyb["windowed_s"] * 1e6,
+           f"windowed {hyb['windowed_s'] * 1e3:.0f}ms vs per-event "
+           f"{hyb['per_event_s'] * 1e3:.0f}ms "
+           f"({hyb['wall_speedup']:.2f}x wall); h2d/delivery "
+           f"{hyb['per_event_h2d_per_delivery']:.1f} -> "
+           f"{hyb['windowed_h2d_per_delivery']:.1f} = "
+           f"{hyb['speedup']:.1f}x fewer transfers")
+    return dict(olaf_step_cycle=micro, olaf_step_kernel=kern,
+                hybrid_replay=hyb)

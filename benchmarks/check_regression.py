@@ -34,7 +34,7 @@ EXP = REPO / "experiments"
 STABLE_KEYS = {
     "queue": ["burst_vs_scan_u64_q32_d64k", "drain_vs_seq_k8_q32_d64k"],
     "train": ["ps_step_micro_q32_d64k"],
-    "step": ["olaf_step_fused_q8_d64k"],
+    "step": ["olaf_step_fused_q8_d64k", "hybrid_window_replay_d512"],
     "kernels": [],  # interpret-mode sweeps: tracked in the diff, not gated
 }
 ABS_FLOOR_US = 500.0
@@ -50,7 +50,11 @@ SPEEDUP_FLOORS = {
     "queue": {"burst_fast_path": 5.0, "drain_fast_path": 3.0},
     "train": {"ps_step_micro": 1.1, "olaf_async_e2e": 1.5,
               "olaf_step_cycle": 2.0},
-    "step": {"olaf_step_cycle": 2.0},
+    # ``hybrid_replay``'s speedup is host->device transfers per delivered
+    # update, per-event vs windowed batch replay — structural (a property
+    # of the congested trace, not the machine), so the PR 4 acceptance
+    # floor of 2x is gated as-is.
+    "step": {"olaf_step_cycle": 2.0, "hybrid_replay": 2.0},
 }
 
 

@@ -130,10 +130,17 @@ def jax_aom_update(state: JaxAoMState, t, gen, valid=True) -> JaxAoMState:
     keeps the *freshest* generation time (an older delivery does not
     rejuvenate the model). ``valid=False`` is a no-op row, so a fixed-shape
     drained block can be folded with its validity mask.
+
+    ``last_t`` is kept monotone: a delivery whose timestamp regresses below
+    the last processed one (possible across a folded multi-switch drain
+    block, where per-switch FIFO blocks interleave out of global time
+    order) is folded at ``last_t`` with a zero-width trapezoid instead of
+    integrating a *negative* area that would silently corrupt the integral.
     """
     t = jnp.asarray(t, jnp.float32)
     gen = jnp.asarray(gen, jnp.float32)
     valid = jnp.asarray(valid, bool)
+    t = jnp.maximum(t, state.last_t)
     dt = t - state.last_t
     area = dt * ((state.last_t - state.last_gen) + (t - state.last_gen)) / 2.0
     return JaxAoMState(

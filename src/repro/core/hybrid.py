@@ -12,22 +12,36 @@ boundary for the SW1/SW2/SW3 multi-hop topology:
     which re-derive every aggregate/replace/append/drop decision.
   * data plane — all payload bytes live in one device-resident
     ``(S, Q, D)`` slot buffer. Pending combines accumulate per switch and
-    are flushed with a single :func:`repro.kernels.ops.olaf_combine_multi`
+    are flushed with a single :func:`repro.kernels.ops.olaf_combine_window`
     launch covering SW1, SW2 and SW3 at once (the switch axis is folded
     into the Pallas grid); forwarded SW1/SW2→SW3 packets and PS deliveries
     are one-row device gathers. The kernel's ``gate`` carries each packet's
     ``agg_count`` as its aggregation weight, so multi-hop combining stays
     an exact weighted mean of the raw worker gradients.
 
-Windows close exactly when a transmission completes (a slot payload must be
-materialized before it leaves the switch), so under congestion — the OLAF
-operating point — many updates amortize each kernel launch.
+The trace is consumed per **transmission window** (the simulator marks the
+boundaries with ``kind="window"`` events — a window closes exactly when a
+transmission completes, since a slot payload must be materialized before it
+leaves the switch). :meth:`HybridMultiSwitchDataPlane.feed_window` is the
+batched consumer: each window's enqueue events are classified in one
+host-batched Algorithm 1 stats-delta pass per switch
+(:meth:`~repro.core.olaf_queue.PyOlafQueue.classify_batch`), the window's
+payload rows are staged as ONE ``(S, U, D)`` host block put on device in a
+single transfer (forwarded rows are already device-resident and splice in
+as device-side gathers), and lock/dequeue events fold into the same window
+cursor. The per-event :meth:`~HybridMultiSwitchDataPlane.feed` replay is
+kept as the reference the batched path is property-tested against
+(``tests/test_hybrid_window.py``); under congestion — the OLAF operating
+point — many updates amortize each kernel launch *and* each host→device
+transfer (``HybridResult.h2d_transfers`` tracks the latter,
+``bench_step.hybrid_replay`` gates the reduction).
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,7 +49,7 @@ import jax.numpy as jnp
 
 from repro.core.aggregation import Update
 from repro.core.netsim import NetworkSimulator, SimCfg, multihop_cfg
-from repro.core.olaf_queue import PyOlafQueue
+from repro.core.olaf_queue import PyOlafQueue, burst_contribution_mask
 from repro.kernels.olaf_combine import _pick_tile_q as _largest_tile
 
 
@@ -52,26 +66,35 @@ class _SwitchMirror:
         self.free_slots: List[int] = list(range(capacity))[::-1]
         self.slot_of_cluster: Dict[int, Deque[int]] = {}
         # pending window entries: (slot, event, weight) with event in
-        # {"agg", "reset"}; payload rows ride in the parallel list
+        # {"agg", "reset"}; payload rows ride in the parallel list (host
+        # numpy rows from the batched window path, device rows for
+        # forwarded packets and the per-event reference path)
         self.pending: List[Tuple[int, str, int]] = []
-        self.pending_rows: List[jnp.ndarray] = []
+        self.pending_rows: List[object] = []
+
+    def classify_window(self, upds: List[Update]
+                        ) -> List[Tuple[Optional[int], str]]:
+        """Replay Algorithm 1 for a window run of enqueues in ONE batched
+        stats-delta resolve (:meth:`PyOlafQueue.classify_batch`), mapping
+        each classification to its ``(device_slot, event)`` assignment."""
+        out: List[Tuple[Optional[int], str]] = []
+        for cls, upd in zip(self.queue.classify_batch(upds), upds):
+            if cls == "drop":
+                out.append((None, "drop"))
+            elif cls == "append":  # fresh append -> allocate a slot
+                slot = self.free_slots.pop()
+                self.slot_of_cluster.setdefault(upd.cluster_id,
+                                                deque()).append(slot)
+                out.append((slot, "reset"))
+            else:
+                # combine into the *unlocked* waiting update = newest slot
+                slot = self.slot_of_cluster[upd.cluster_id][-1]
+                out.append((slot, "reset" if cls == "replace" else "agg"))
+        return out
 
     def classify(self, upd: Update) -> Tuple[Optional[int], str]:
-        """Replay Algorithm 1 on the metadata queue; classify the enqueue
-        by the stats delta and return ``(device_slot, event)``."""
-        st = self.queue.stats
-        before = (st.aggregations, st.replacements, st.enqueued, st.dropped)
-        self.queue.enqueue(upd)
-        if st.dropped != before[3]:
-            return None, "drop"
-        if st.enqueued != before[2]:  # fresh append -> allocate a slot
-            slot = self.free_slots.pop()
-            self.slot_of_cluster.setdefault(upd.cluster_id,
-                                            deque()).append(slot)
-            return slot, "reset"
-        # combine into the *unlocked* waiting update = the newest slot
-        slot = self.slot_of_cluster[upd.cluster_id][-1]
-        return slot, ("reset" if st.replacements != before[1] else "agg")
+        """Single-event classify (the per-event reference path)."""
+        return self.classify_window([upd])[0]
 
     def pop_slot(self, cluster_id: int) -> int:
         slots = self.slot_of_cluster[cluster_id]
@@ -85,7 +108,7 @@ class _SwitchMirror:
 @dataclasses.dataclass
 class HybridResult:
     delivered: List[Tuple[float, Update, jnp.ndarray]]  # (time, meta, payload)
-    launches: int  # olaf_combine_multi kernel launches
+    launches: int  # combine kernel launches
     combined_updates: int  # window entries that went through the kernel
     queue_stats: Dict[str, Dict[str, int]]
     final_counts: np.ndarray  # (S, Q) residual device slot counts
@@ -93,14 +116,19 @@ class HybridResult:
     # (must agree with final_counts — the kernel's fused count output)
     residual_slot_counts: Dict[str, Dict[int, int]] = dataclasses.field(
         default_factory=dict)
+    # host->device transfers issued by the replay (row/metadata puts); the
+    # batched window path stages each window as one block instead of one
+    # put per row, which bench_step.hybrid_replay gates at >= 2x fewer
+    # transfers per delivered update
+    h2d_transfers: int = 0
 
 
 class HybridMultiSwitchDataPlane:
     """Replays a netsim queue-event trace with device-resident payloads."""
 
     def __init__(self, switch_cfgs, ingress_switches, dim: int,
-                 payload_rows: np.ndarray, *, interpret: bool = True,
-                 sharded: bool = False) -> None:
+                 payload_rows: Sequence[np.ndarray], *,
+                 interpret: bool = True, sharded: bool = False) -> None:
         self.names = [s.name for s in switch_cfgs]
         self.index = {n: i for i, n in enumerate(self.names)}
         self.next_hop = {s.name: s.next_hop for s in switch_cfgs}
@@ -125,31 +153,85 @@ class HybridMultiSwitchDataPlane:
         self._rows = payload_rows  # (N, dim) ingress payloads in gen order
         self._next_row = 0
         self._zero_row = jnp.zeros((dim,), jnp.float32)
-        # per upstream switch: drained (meta, device row) awaiting next hop
-        self._forward: Dict[str, Deque[Tuple[Update, jnp.ndarray]]] = {
+        # per upstream switch: drained (order, meta, device row) awaiting
+        # its next hop; ``order`` is the global dequeue sequence used to
+        # break full-metadata ties (same-link FIFO + constant propagation
+        # delay => the earlier departure arrives first)
+        self._forward: Dict[str, Deque[Tuple[int, Update, jnp.ndarray]]] = {
             n: deque() for n in self.names}
+        self._fwd_order = itertools.count()
         self.delivered: List[Tuple[float, Update, jnp.ndarray]] = []
         self.launches = 0
         self.combined_updates = 0
+        self.h2d_transfers = 0
 
-    # -- trace feed --------------------------------------------------------
+    # -- incoming packet resolution ---------------------------------------
+    def _resolve_incoming(self, sw_name: str, meta: Update, *,
+                          batched: bool) -> Tuple[Update, object]:
+        """An enqueue event is either a fresh worker update (consumes the
+        next ingress payload row) or a packet forwarded from the upstream
+        switch that drained it. The two are distinguished by the metadata
+        snapshot's ``seq``: any dequeued update carries the departure
+        sequence its upstream queue assigned (>= 0), while a fresh update
+        is snapshotted *before* its first enqueue (seq == -1) — so a mixed
+        ingress/transit switch never mistakes a forwarded packet for a
+        fresh one (and never over-consumes the ingress row budget)."""
+        if meta.seq >= 0:
+            return self._match_forward(sw_name, meta)
+        assert sw_name in self.ingress, \
+            f"fresh update at non-ingress switch {sw_name}"
+        row_host = np.asarray(self._rows[self._next_row], np.float32)
+        self._next_row += 1
+        upd = Update(cluster_id=meta.cluster_id, worker_id=meta.worker_id,
+                     gen_time=meta.gen_time, reward=meta.reward,
+                     size_bits=meta.size_bits)
+        if batched:  # stays host-side until the window's single block put
+            return upd, row_host
+        self.h2d_transfers += 1  # per-event reference path: one put per row
+        return upd, jnp.asarray(row_host)
+
+    def _match_forward(self, sw_name: str, meta: Update
+                       ) -> Tuple[Update, jnp.ndarray]:
+        """Match a forwarded enqueue against the upstream drain queues.
+
+        Per-link FIFO with a constant propagation delay preserves departure
+        order, so only deque *heads* are candidates. ``(cluster_id,
+        worker_id)`` alone is ambiguous when two upstream switches hold
+        same-flow heads — disambiguate on the replayed ``gen_time``/``seq``
+        (which mirror the simulator's exactly), then on dequeue order.
+        """
+        cands = []
+        for n, q in self._forward.items():
+            if not q or self.next_hop[n] != sw_name:
+                continue
+            order, u, _row = q[0]
+            if (u.cluster_id == meta.cluster_id
+                    and u.worker_id == meta.worker_id):
+                cands.append((order, u, n))
+        assert cands, f"no forward match for {meta} at {sw_name}"
+        if len(cands) > 1:
+            exact = [c for c in cands
+                     if c[1].gen_time == meta.gen_time
+                     and c[1].seq == meta.seq]
+            cands = exact or cands
+        src = min(cands)[2]  # earliest departure arrives first
+        _order, upd, row = self._forward[src].popleft()
+        return upd, row
+
+    # -- per-event reference replay ----------------------------------------
     def feed(self, now: float, sw_name: str, kind: str,
              meta: Optional[Update]) -> None:
-        s = self.index[sw_name]
-        mirror = self.mirrors[s]
+        """One-event-per-call replay — the reference the batched
+        :meth:`feed_window` is property-tested against."""
+        if kind == "window":  # boundary marker: the flush point
+            self.flush()
+            return
+        mirror = self.mirrors[self.index[sw_name]]
         if kind == "lock":
             mirror.queue.lock_head()
             return
         if kind == "enqueue":
-            if sw_name in self.ingress:  # fresh worker update
-                row = jnp.asarray(self._rows[self._next_row], jnp.float32)
-                self._next_row += 1
-                upd = Update(cluster_id=meta.cluster_id,
-                             worker_id=meta.worker_id,
-                             gen_time=meta.gen_time, reward=meta.reward,
-                             size_bits=meta.size_bits)
-            else:  # forwarded from the upstream switch that drained it
-                upd, row = self._match_forward(meta)
+            upd, row = self._resolve_incoming(sw_name, meta, batched=False)
             weight = upd.agg_count
             slot, event = mirror.classify(upd)
             if event != "drop":
@@ -158,7 +240,73 @@ class HybridMultiSwitchDataPlane:
             return
         assert kind == "dequeue", kind
         # a payload leaves the switch: land every pending combine first
+        # (no-op when the window marker already flushed)
         self.flush()
+        self._pop_departure(now, sw_name, meta)
+
+    # -- batched window replay ---------------------------------------------
+    def feed_window(self, events) -> None:
+        """Window-accumulating trace consumer (the fast path).
+
+        Takes any slice of the control-plane trace — typically the whole
+        thing — and maintains a window cursor: enqueue metadata buffers per
+        switch, a ``lock`` resolves its own switch's buffered run (a locked
+        head changes subsequent gating), and a ``window``/``dequeue``
+        boundary resolves every buffered run with one
+        :meth:`_SwitchMirror.classify_window` batch per switch and lands
+        the window in one staged flush.
+        """
+        pend: Dict[str, List[Tuple[Update, object]]] = {}
+
+        def resolve(name: str) -> None:
+            run = pend.pop(name, None)
+            if run:
+                self._classify_run(name, run)
+
+        def resolve_all() -> None:
+            for name in list(pend):
+                resolve(name)
+
+        for now, sw_name, kind, meta in events:
+            if kind == "enqueue":
+                # resolve the packet (ingress row consumption / upstream
+                # forward match) eagerly so rows and forward pops stay in
+                # event order; only the classify is deferred to the batch
+                pend.setdefault(sw_name, []).append(
+                    self._resolve_incoming(sw_name, meta, batched=True))
+            elif kind == "lock":
+                resolve(sw_name)
+                self.mirrors[self.index[sw_name]].queue.lock_head()
+            elif kind == "window":
+                resolve_all()
+                self.flush()
+            else:
+                assert kind == "dequeue", kind
+                resolve_all()
+                self.flush()
+                self._pop_departure(now, sw_name, meta)
+        resolve_all()  # trailing partial window: staged, flushed by result()
+
+    def _classify_run(self, sw_name: str,
+                      run: List[Tuple[Update, object]]) -> None:
+        """One batched Algorithm 1 stats-delta resolve for a window run."""
+        mirror = self.mirrors[self.index[sw_name]]
+        upds = [u for u, _ in run]
+        rows = [r for _, r in run]
+        # snapshot the aggregation weights BEFORE the batch resolve: a
+        # later update in the run may aggregate into an earlier one's
+        # queue entry, mutating its agg_count in place
+        weights = [u.agg_count for u in upds]
+        for (slot, event), weight, row in zip(
+                mirror.classify_window(upds), weights, rows):
+            if event != "drop":
+                mirror.pending.append((slot, event, weight))
+                mirror.pending_rows.append(row)
+
+    def _pop_departure(self, now: float, sw_name: str,
+                       meta: Update) -> None:
+        s = self.index[sw_name]
+        mirror = self.mirrors[s]
         upd = mirror.queue.dequeue()
         assert upd is not None and upd.cluster_id == meta.cluster_id
         slot = mirror.pop_slot(upd.cluster_id)
@@ -168,19 +316,13 @@ class HybridMultiSwitchDataPlane:
         if self.next_hop[sw_name] is None:
             self.delivered.append((now, upd, row))
         else:
-            self._forward[sw_name].append((upd, row))
-
-    def _match_forward(self, meta: Update) -> Tuple[Update, jnp.ndarray]:
-        srcs = [n for n, q in self._forward.items()
-                if q and q[0][0].cluster_id == meta.cluster_id
-                and q[0][0].worker_id == meta.worker_id]
-        assert len(srcs) == 1, f"ambiguous forward match: {srcs}"
-        return self._forward[srcs[0]].popleft()
+            self._forward[sw_name].append((next(self._fwd_order), upd, row))
 
     # -- the single-launch data plane --------------------------------------
     def flush(self) -> None:
-        """One ``olaf_combine_multi`` launch landing every switch's pending
-        window into the (S, Q, D) slot buffer."""
+        """One combine launch landing every switch's pending window into
+        the (S, Q, D) slot buffer, with the window's host rows staged as a
+        single ``(S, U, D)`` block put."""
         if not any(m.pending for m in self.mirrors):
             return
         from repro.kernels import ops  # deferred: keeps netsim jax-light
@@ -192,38 +334,65 @@ class HybridMultiSwitchDataPlane:
         clusters = np.zeros((S, U), np.int32)
         gate = np.zeros((S, U), np.int32)
         reset_mask = np.zeros((S, Q), bool)
-        rows: List[jnp.ndarray] = []
+        row_grid: List[List[object]] = []
+        any_host = False
         for s, m in enumerate(self.mirrors):
-            # telescoped-mean bookkeeping (same rule as jax_enqueue_burst):
-            # only the last reset per slot and the aggs after it contribute
-            last_reset = {}
-            for u, (slot, event, _) in enumerate(m.pending):
-                if event == "reset":
-                    last_reset[slot] = u
-            for u, (slot, event, weight) in enumerate(m.pending):
-                lr = last_reset.get(slot, -1)
-                contributes = (u > lr) if event == "agg" else (u == lr)
+            # telescoped-mean bookkeeping (the same contribution rule as
+            # ``_burst_resolve``): only the last reset per slot and the
+            # aggs after it contribute
+            contrib, last_reset = burst_contribution_mask(
+                [p[0] for p in m.pending], [p[1] for p in m.pending])
+            for u, ((slot, _event, weight), c) in enumerate(
+                    zip(m.pending, contrib)):
                 clusters[s, u] = slot
-                gate[s, u] = weight if contributes else 0
+                gate[s, u] = weight if c else 0
             for slot in last_reset:
                 reset_mask[s, slot] = True  # slot restarts from the window
-            rows.extend(m.pending_rows)
-            rows.extend([self._zero_row] * (U - len(m.pending)))
+            any_host = any_host or any(
+                isinstance(r, np.ndarray) for r in m.pending_rows)
+            row_grid.append(m.pending_rows)
             self.combined_updates += len(m.pending)
             m.pending, m.pending_rows = [], []
-        updates = jnp.stack(rows).reshape(S, U, self.dim)
-        counts_in = jnp.where(jnp.asarray(reset_mask), 0, self.counts_dev)
+        if any_host:
+            # the batched window path: every host row lands in one (S,U,D)
+            # stack + one device put; already-device rows (forwarded
+            # packets) splice in as device-side writes
+            block = np.zeros((S, U, self.dim), np.float32)
+            dev_fixups = []
+            for s, rows in enumerate(row_grid):
+                for u, row in enumerate(rows):
+                    if isinstance(row, np.ndarray):
+                        block[s, u] = row
+                    else:
+                        dev_fixups.append((s, u, row))
+            updates = jnp.asarray(block)
+            self.h2d_transfers += 1
+            if dev_fixups:
+                # one batched scatter: per-row .at[].set() would copy the
+                # whole (S, U, D) block once per forwarded packet
+                ss, uu, dev_rows = zip(*dev_fixups)
+                updates = updates.at[np.asarray(ss), np.asarray(uu)].set(
+                    jnp.stack(dev_rows))
+        else:
+            # per-event reference path: rows were put on device one by one
+            flat: List[jnp.ndarray] = []
+            for rows in row_grid:
+                flat.extend(rows)
+                flat.extend([self._zero_row] * (U - len(rows)))
+            updates = jnp.stack(flat).reshape(S, U, self.dim)
+        self.h2d_transfers += 3  # clusters + gate + reset-mask window puts
         if self.sharded:
             from repro.distributed.sharding import olaf_combine_sharded
+            counts_in = jnp.where(jnp.asarray(reset_mask), 0,
+                                  self.counts_dev)
             self.slots_dev, self.counts_dev = olaf_combine_sharded(
                 self.slots_dev, counts_in, updates, jnp.asarray(clusters),
                 jnp.asarray(gate), mesh=self._mesh, tile_d=self.tile_d,
                 interpret=self.interpret)
         else:
-            self.slots_dev, self.counts_dev = ops.olaf_combine_multi(
-                self.slots_dev, counts_in, updates, jnp.asarray(clusters),
-                jnp.asarray(gate), tile_d=self.tile_d,
-                interpret=self.interpret)
+            self.slots_dev, self.counts_dev = ops.olaf_combine_window(
+                self.slots_dev, self.counts_dev, updates, clusters, gate,
+                reset_mask, tile_d=self.tile_d, interpret=self.interpret)
         self.launches += 1
 
     def result(self) -> HybridResult:
@@ -243,20 +412,29 @@ class HybridMultiSwitchDataPlane:
             queue_stats={m.name: m.queue.stats.as_dict()
                          for m in self.mirrors},
             final_counts=np.asarray(self.counts_dev),
-            residual_slot_counts=residual)
+            residual_slot_counts=residual,
+            h2d_transfers=self.h2d_transfers)
 
 
 def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
                         interpret: bool = True,
-                        payload_rows: Optional[np.ndarray] = None,
+                        payload_rows: Optional[Sequence[np.ndarray]] = None,
                         payload_source=None,
                         sim_cfg: Optional[SimCfg] = None,
                         sharded: bool = False,
+                        batched: bool = True,
                         **cfg_kw) -> Tuple[HybridResult, SimCfg]:
     """SW1/SW2/SW3 hybrid run: metadata trace from the event-driven sim,
-    payload combining on device in one vmapped/multi-queue kernel launch
-    per transmission window (``sharded=True`` splits the switch axis over
-    the device mesh via ``distributed.sharding.olaf_combine_sharded``).
+    payload combining on device in one multi-queue kernel launch per
+    transmission window (``sharded=True`` splits the switch axis over the
+    device mesh via ``distributed.sharding.olaf_combine_sharded``).
+
+    ``batched=True`` (the default) consumes the trace through the windowed
+    batch replay (:meth:`HybridMultiSwitchDataPlane.feed_window`): one
+    host-batched Algorithm 1 classify pass and one staged ``(S, U, D)``
+    device put per window. ``batched=False`` replays one Python call per
+    queue event — the reference path the batched one is property-tested
+    against.
 
     ``payload_rows`` (N, dim) are consumed in worker-generation order (pass
     the same array to a payload-carrying oracle sim to cross-check).
@@ -264,8 +442,12 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
     produces each generated update's payload *and reward* on the fly — the
     hook real PPO gradients enter through (see
     ``repro.rl.async_trainer.run_hybrid_ppo``): the rewards feed the
-    trace's Algorithm 1 gating while the rows stay device-resident. When
-    both are omitted, synthetic rows are drawn from ``seed``.
+    trace's Algorithm 1 gating while the rows stay host-side until their
+    window's single block put. When both are omitted, synthetic rows are
+    drawn from ``seed``, sized by the number of fresh updates that actually
+    entered the fabric (counted from the trace, so a mixed ingress/transit
+    switch or a deferred-heavy transmission-control run can never overrun
+    the row budget).
     """
     cfg = sim_cfg if sim_cfg is not None else multihop_cfg(
         "olaf", seed=seed, **cfg_kw)
@@ -280,20 +462,28 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
         def _collect(now, worker_id):
             row, reward = payload_source(now, worker_id)
             rows_acc.append(row)
-            return None, reward  # metadata-only sim; rows stay on device
+            return None, reward  # metadata-only sim; rows stay host-side
 
         trace_cfg = dataclasses.replace(trace_cfg, payload_fn=_collect)
         NetworkSimulator(trace_cfg).run()
         payload_rows = rows_acc
     else:
-        sim_res = NetworkSimulator(trace_cfg).run()
+        NetworkSimulator(trace_cfg).run()
         if payload_rows is None:
+            # exactly one row per fresh ingress enqueue in the trace (a
+            # fresh update's metadata snapshot carries seq == -1; see
+            # HybridMultiSwitchDataPlane._resolve_incoming)
+            n_fresh = sum(1 for _, _, kind, m in events
+                          if kind == "enqueue" and m.seq < 0)
             rng = np.random.default_rng(seed + 1)
             payload_rows = rng.normal(
-                size=(sim_res.sent + 1, dim)).astype(np.float32)
+                size=(n_fresh, dim)).astype(np.float32)
     plane = HybridMultiSwitchDataPlane(
         cfg.switches, {w.ingress_switch for w in cfg.workers}, dim,
         payload_rows, interpret=interpret, sharded=sharded)
-    for now, sw, kind, meta in events:
-        plane.feed(now, sw, kind, meta)
+    if batched:
+        plane.feed_window(events)
+    else:
+        for now, sw, kind, meta in events:
+            plane.feed(now, sw, kind, meta)
     return plane.result(), cfg

@@ -80,10 +80,15 @@ class SimCfg:
     on_deliver: Optional[Callable[[float, Update], object]] = None
     on_ack: Optional[Callable[[float, int, object], None]] = None
     # on_queue_event(now, switch_name, kind, update) with kind in
-    # {"enqueue", "lock", "dequeue"}: fires on every queue transition in
-    # event order. This is the control-plane trace consumed by the hybrid
-    # device data plane (``repro.core.hybrid``), which replays the switch
-    # decisions host-side while all payload bytes move on the accelerator.
+    # {"enqueue", "lock", "window", "dequeue"}: fires on every queue
+    # transition in event order. This is the control-plane trace consumed
+    # by the hybrid device data plane (``repro.core.hybrid``), which
+    # replays the switch decisions host-side while all payload bytes move
+    # on the accelerator. "window" marks a transmission-window boundary —
+    # it fires when a transmission completes, immediately before the
+    # departing "dequeue" (the payload must be materialized before it
+    # leaves the switch), so a windowed consumer can flush its batched
+    # combines there without trace lookahead.
     on_queue_event: Optional[Callable[[float, str, str, Optional[Update]], None]] = None
 
 
@@ -299,6 +304,9 @@ class NetworkSimulator:
         self._at(self.now + tx_time, lambda: self._finish_transmission(sw))
 
     def _finish_transmission(self, sw: _Switch) -> None:
+        # the transmission window closes here: everything enqueued since
+        # the previous departure must be combined before the head leaves
+        self._queue_event(sw.cfg.name, "window", None)
         upd = sw.queue.dequeue()
         self._queue_event(sw.cfg.name, "dequeue", upd)
         sw.busy = False

@@ -159,6 +159,36 @@ class PyOlafQueue:
         self.stats.enqueued += 1
         return True
 
+    def classify_batch(self, updates: List[Update]) -> List[str]:
+        """Replay Algorithm 1 for a whole window of updates in one call.
+
+        Returns the per-update stats-delta classification — ``"append"`` /
+        ``"agg"`` / ``"replace"`` / ``"drop"`` — resolved from the counter
+        deltas of each :meth:`enqueue`, so a window consumer (the hybrid
+        control-plane replay) pays one Python call per transmission window
+        instead of one per queue event.
+        """
+        out: List[str] = []
+        st = self.stats
+        for upd in updates:
+            before = (st.aggregations, st.replacements, st.enqueued,
+                      st.dropped)
+            self.enqueue(upd)
+            if st.dropped != before[3]:
+                out.append("drop")
+            elif st.enqueued != before[2]:
+                out.append("append")
+            elif st.replacements != before[1]:
+                out.append("replace")
+            else:
+                out.append("agg")
+        return out
+
+    def enqueue_batch(self, updates: List[Update]) -> List[bool]:
+        """Batched :meth:`enqueue`; True per update whose information is
+        retained (anything but a drop)."""
+        return [ev != "drop" for ev in self.classify_batch(updates)]
+
     def peek(self) -> Optional[Update]:
         return self._q[0] if self._q else None
 
@@ -172,6 +202,29 @@ class PyOlafQueue:
         if self._by_cluster.get(head.cluster_id) is head:
             del self._by_cluster[head.cluster_id]
         return head
+
+
+def burst_contribution_mask(slots: List[int], events: List[str]
+                            ) -> Tuple[List[bool], Dict[int, int]]:
+    """Host-side telescoped-mean contribution rule shared with
+    :func:`_burst_resolve`.
+
+    For a window of ``(slot, event)`` assignments with ``event`` in
+    ``{"agg", "reset"}``, only the *last* reset per slot and the aggregates
+    after it contribute to the slot's combined payload — everything written
+    before that reset was overwritten. Returns ``(contributes, last_reset)``
+    where ``last_reset`` maps each reset slot to the window index of its
+    final reset (the slot restarts from that update).
+    """
+    last_reset: Dict[int, int] = {}
+    for u, (slot, event) in enumerate(zip(slots, events)):
+        if event == "reset":
+            last_reset[slot] = u
+    contributes = []
+    for u, (slot, event) in enumerate(zip(slots, events)):
+        lr = last_reset.get(slot, -1)
+        contributes.append((u > lr) if event == "agg" else (u == lr))
+    return contributes, last_reset
 
 
 # ===========================================================================
@@ -398,7 +451,10 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
     A ``lax.scan`` over the burst carrying only the ``(Q,)`` metadata columns
     — never the ``(Q, D)`` payload — so it costs O(U·Q) scalar ops total.
     Emits the per-update ``(slot, event)`` assignment consumed by the payload
-    pass, plus the fully-updated metadata/counters.
+    pass, plus the fully-updated metadata/counters. The payload pass keeps
+    only the last reset per slot and the aggs after it —
+    :func:`burst_contribution_mask` is the host-side mirror of that rule
+    (used by the hybrid window replay).
 
     ``send`` is an optional (U,) gate from worker-side transmission control
     (§5): a masked-out update is *deferred*, not dropped — it touches neither

@@ -55,6 +55,27 @@ def olaf_combine_multi(slots, counts, updates, clusters, gate, *,
                         tile_q=tile_q, tile_d=tile_d, interpret=interpret)
 
 
+def olaf_combine_window(slots, counts, updates, clusters, gate, reset_slots,
+                        *, tile_q: int = 8, tile_d: int = 512,
+                        interpret: bool = _INTERPRET):
+    """Window-batched gate entry for the hybrid control-plane replay.
+
+    Lands one whole transmission window — ``updates`` (S, U, D) staged as a
+    single block, ``clusters``/``gate`` (S, U) and ``reset_slots`` (S, Q)
+    arriving as host (numpy) window buffers, one device put each — in one
+    :func:`olaf_combine_multi` launch. ``gate`` carries each entry's
+    aggregation weight with non-contributing entries already zeroed (the
+    ``burst_contribution_mask`` telescoped-mean rule), and ``reset_slots``
+    masks the slots whose payload restarts from this window: their running
+    count re-enters the combine at zero.
+    """
+    counts_in = jnp.where(jnp.asarray(reset_slots), 0, counts)
+    return olaf_combine_multi(slots, counts_in, updates,
+                              jnp.asarray(clusters), jnp.asarray(gate),
+                              tile_q=tile_q, tile_d=tile_d,
+                              interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_q", "tile_d", "interpret"))
 def olaf_enqueue(state: JaxQueueState, clusters, workers, gen_times, rewards,
                  payloads, reward_threshold=jnp.inf, *, tile_q: int = 8,

@@ -203,17 +203,19 @@ def run_hybrid_ppo(*, env: str = "cartpole", ppo_cfg: Optional[PPOConfig] = None
                    ps_cfg: Optional[PSConfig] = None, n_envs: int = 2,
                    local_lr: float = 5e-3, seed: int = 0,
                    interpret: bool = True, sharded: bool = True,
-                   **multihop_kw):
+                   batched: bool = True, **multihop_kw):
     """§8.3 multi-switch hybrid run fed by **real PPO gradients** end to end.
 
     Every generated update's payload is a real flattened PPO gradient (and
     its reward the episode mean) from the owning worker's current local
-    params — no synthetic payload rows. The rows stay device-resident: the
-    netsim trace carries metadata only, the SW1/SW2/SW3 payload combining
-    runs as one sharded multi-queue launch per transmission window
-    (``repro.core.hybrid``), and every PS delivery is applied through
-    ``ParameterServer.on_updates`` with its combined packet's agg_count
-    weight, reward and generation time.
+    params — no synthetic payload rows. The netsim trace carries metadata
+    only and is consumed per transmission window (``batched=True`` routes
+    through ``HybridMultiSwitchDataPlane.feed_window``: one host-batched
+    Algorithm 1 classify pass and one staged gradient-block put per
+    window); the SW1/SW2/SW3 payload combining runs as one sharded
+    multi-queue launch per window (``repro.core.hybrid``), and every PS
+    delivery is applied through ``ParameterServer.on_updates`` with its
+    combined packet's agg_count weight, reward and generation time.
 
     Returns ``(HybridResult, ParameterServer, SimCfg)``.
     """
@@ -246,7 +248,8 @@ def run_hybrid_ppo(*, env: str = "cartpole", ppo_cfg: Optional[PPOConfig] = None
 
     hyb, cfg = run_hybrid_multihop(dim, seed=seed, interpret=interpret,
                                    payload_source=payload_source,
-                                   sim_cfg=cfg, sharded=sharded)
+                                   sim_cfg=cfg, sharded=sharded,
+                                   batched=batched)
     ps = ParameterServer(np.asarray(flat0), ps_cfg or PSConfig())
     for t, upd, row in hyb.delivered:  # deliveries -> reward-gated PS apply
         ps.on_updates(t, np.asarray(row, np.float32)[None],

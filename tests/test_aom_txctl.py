@@ -213,3 +213,43 @@ class TestJaxAoM:
         fresh_then_old = [(2.0, 1.5), (3.0, 0.2)]
         assert self._replay(fresh_then_old, 5.0) == pytest.approx(
             average_aom(fresh_then_old, 5.0), rel=1e-6)
+
+    def test_regressed_timestamp_folds_as_zero_width_trapezoid(self):
+        """Regression: a delivery whose timestamp regresses below the last
+        processed one (possible across a folded multi-switch drain block)
+        must NOT integrate a negative trapezoid — ``last_t`` stays monotone
+        and the row folds with dt = 0, exactly as if it arrived at
+        ``last_t``."""
+        st = jax_aom_update_block(
+            jax_aom_init(), jnp.asarray([5.0, 2.0], jnp.float32),
+            jnp.asarray([4.0, 1.0], jnp.float32), jnp.ones((2,), bool))
+        # pre-fix the second row integrated dt = 2 - 5 = -3 into the
+        # accumulator (a signed trapezoid corrupting the integral); the
+        # correct fold is the sawtooth over [0, 5] with the stale row
+        # landing at t = 5 with zero width
+        assert float(st.last_t) == 5.0
+        assert float(st.integral) == pytest.approx(
+            average_aom([(5.0, 4.0), (5.0, 1.0)], 5.0) * 5.0, rel=1e-6)
+
+    def test_shuffled_log_matches_clamped_average_aom(self):
+        """Folding a shuffled delivery log equals ``average_aom`` over the
+        same log with every timestamp clamped to its running maximum (the
+        monotone-fold semantics of the drain block), and the integral never
+        goes negative."""
+        rng = np.random.default_rng(17)
+        for trial in range(20):
+            n = int(rng.integers(2, 30))
+            d_times = rng.uniform(0.1, 10.0, n)
+            gens = d_times - rng.uniform(0.01, 3.0, n)
+            order = rng.permutation(n)  # out-of-order drain interleaving
+            t_sh, g_sh = d_times[order], gens[order]
+            st = jax_aom_update_block(
+                jax_aom_init(), jnp.asarray(t_sh, jnp.float32),
+                jnp.asarray(g_sh, jnp.float32), jnp.ones((n,), bool))
+            assert float(st.integral) >= 0.0, trial
+            horizon = float(d_times.max() + 1.0)
+            t_clamped = np.maximum.accumulate(t_sh)
+            want = average_aom(list(zip(t_clamped.tolist(), g_sh.tolist())),
+                               horizon)
+            got = float(jax_aom_average(st, horizon))
+            assert got == pytest.approx(want, rel=1e-3, abs=1e-4), trial

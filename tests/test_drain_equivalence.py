@@ -102,6 +102,7 @@ def test_fifo_order_and_agg_count_preserved():
     assert int(out["n_valid"]) == 4
 
 
+@pytest.mark.slow  # 200-op randomized sweep; fast lane skips it
 def test_randomized_interleaved_lifecycle():
     """Randomized enqueue bursts interleaved with random-k drains stay
     equivalent to the sequential path at every step."""

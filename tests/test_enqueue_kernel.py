@@ -28,6 +28,11 @@ from repro.core.olaf_queue import (jax_dequeue_burst, jax_enqueue_burst,
                                    jax_queue_init)
 from repro.kernels import ops
 
+# the randomized oracle sweeps are long; the CI fast lane skips them
+# (-m "not slow") — the dedicated pallas-kernels matrix job and the
+# full-suite job still run this module
+pytestmark = pytest.mark.slow
+
 # name, Q, U, n_clusters, n_workers, reward_threshold, n_bursts
 SCENARIOS = [
     ("general", 8, 24, 12, 8, np.inf, 30),

@@ -15,6 +15,9 @@ import pytest
 from repro.core.hybrid import run_hybrid_multihop
 from repro.core.netsim import NetworkSimulator, multihop_cfg
 
+# hybrid end-to-end suites are long; the CI fast lane skips them
+pytestmark = pytest.mark.slow
+
 DIM = 128
 CFG_KW = dict(n_clusters_per_group=2, workers_per_cluster=2, horizon=0.25,
               interval_s1=0.02, interval_s2=0.025, x1_gbps=0.5e-3,

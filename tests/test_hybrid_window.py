@@ -1,0 +1,264 @@
+"""The windowed batch replay vs the per-event reference replay.
+
+``HybridMultiSwitchDataPlane.feed_window`` consumes the control-plane trace
+per transmission window (one batched Algorithm 1 classify pass per switch
+run, one staged ``(S, U, D)`` block put per window); ``feed`` replays one
+Python call per queue event. The two must be *event-for-event equivalent*:
+identical delivered payloads (bitwise — both paths land the same update
+tensor in the same combine launches), queue stats, residual slot counts and
+final device counts, across randomized seeds, topologies and reward
+thresholds.
+
+Also covers the forwarded-packet matching fixes the batched replay leans
+on: ``gen_time``/``seq`` disambiguation when two upstream switches hold
+same-flow heads, and the fresh-vs-forwarded ``seq`` discriminator that
+keeps a mixed ingress/transit switch from over-consuming the ingress
+payload-row budget (the old ``sent + 1`` sizing overflowed there).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import Update
+from repro.core.hybrid import HybridMultiSwitchDataPlane, run_hybrid_multihop
+from repro.core.netsim import (Link, NetworkSimulator, SimCfg, SwitchCfg,
+                               WorkerCfg, multihop_cfg)
+
+DIM = 24
+
+
+def _assert_results_equal(a, b):
+    assert len(a.delivered) == len(b.delivered)
+    for (t0, u0, p0), (t1, u1, p1) in zip(a.delivered, b.delivered):
+        assert t0 == t1
+        assert (u0.cluster_id, u0.worker_id, u0.gen_time, u0.reward,
+                u0.agg_count, u0.seq) == \
+               (u1.cluster_id, u1.worker_id, u1.gen_time, u1.reward,
+                u1.agg_count, u1.seq)
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+    assert a.queue_stats == b.queue_stats
+    np.testing.assert_array_equal(a.final_counts, b.final_counts)
+    assert a.residual_slot_counts == b.residual_slot_counts
+    assert a.launches == b.launches
+    assert a.combined_updates == b.combined_updates
+
+
+def _payload_source(seed, dim):
+    """Deterministic per-call rows + rewards (rewards feed reward gating)."""
+    r = np.random.default_rng(seed)
+
+    def src(now, worker_id):
+        return r.normal(size=dim).astype(np.float32), float(r.normal())
+
+    return src
+
+
+def _random_cfg_kw(rng):
+    slots = int(rng.integers(3, 7))
+    threshold = [None, 0.3, 1.0][int(rng.integers(3))]
+    return dict(
+        n_clusters_per_group=int(rng.integers(1, 4)),
+        workers_per_cluster=int(rng.integers(1, 4)),
+        horizon=float(rng.uniform(0.08, 0.16)),
+        interval_s1=float(rng.uniform(0.01, 0.04)),
+        interval_s2=float(rng.uniform(0.012, 0.045)),
+        x1_gbps=float(rng.uniform(0.3e-3, 1.0e-3)),
+        x2_gbps=float(rng.uniform(0.3e-3, 1.0e-3)),
+        sw3_gbps=float(rng.uniform(0.4e-3, 1.2e-3)),
+        size_bits=8192, sw12_slots=slots, sw3_slots=slots,
+        reward_threshold=threshold, seed=int(rng.integers(0, 100000)))
+
+
+@pytest.mark.slow
+def test_windowed_replay_equivalent_to_per_event_replay():
+    """Property: >= 50 randomized traces (topology, load, slots, reward
+    thresholds, real reward-gated payload sources) replayed both ways must
+    produce identical ``HybridResult``s."""
+    rng = np.random.default_rng(2024)
+    n_nonempty = 0
+    for trial in range(52):
+        kw = _random_cfg_kw(rng)
+        cfg = multihop_cfg("olaf", **kw)
+        src_seed = int(rng.integers(0, 100000))
+        per_event, _ = run_hybrid_multihop(
+            DIM, sim_cfg=cfg, batched=False,
+            payload_source=_payload_source(src_seed, DIM))
+        batched, _ = run_hybrid_multihop(
+            DIM, sim_cfg=cfg, batched=True,
+            payload_source=_payload_source(src_seed, DIM))
+        _assert_results_equal(per_event, batched)
+        # the batched path can only ever issue fewer host->device transfers
+        assert batched.h2d_transfers <= per_event.h2d_transfers, trial
+        n_nonempty += bool(batched.delivered)
+    assert n_nonempty >= 40  # the traces actually exercised the data plane
+
+
+def test_windowed_replay_equivalent_on_synthetic_rows():
+    """The synthetic-fallback path (no payload source) replays identically
+    too, and stays bitwise equal on the delivered rows."""
+    for seed in (3, 11):
+        cfg = multihop_cfg(
+            "olaf", seed=seed, n_clusters_per_group=2, workers_per_cluster=2,
+            horizon=0.25, interval_s1=0.02, interval_s2=0.025,
+            x1_gbps=0.5e-3, x2_gbps=0.5e-3, sw3_gbps=0.8e-3, size_bits=8192,
+            sw12_slots=4, sw3_slots=4)
+        per_event, _ = run_hybrid_multihop(DIM, sim_cfg=cfg, batched=False,
+                                           seed=seed)
+        batched, _ = run_hybrid_multihop(DIM, sim_cfg=cfg, batched=True,
+                                         seed=seed)
+        assert len(batched.delivered) > 0
+        _assert_results_equal(per_event, batched)
+
+
+# ---------------------------------------------------------------------------
+# Forward matching
+# ---------------------------------------------------------------------------
+def _two_upstream_plane():
+    switches = [
+        SwitchCfg("SWA", queue_slots=4, next_hop="SWC"),
+        SwitchCfg("SWB", queue_slots=4, next_hop="SWC"),
+        SwitchCfg("SWC", queue_slots=4, next_hop=None),
+    ]
+    rows = np.eye(2, DIM, dtype=np.float32)  # distinguishable payloads
+    return switches, rows
+
+
+def _mk(gen_time, seq=-1):
+    return Update(cluster_id=0, worker_id=7, gen_time=gen_time, reward=0.0,
+                  size_bits=64, seq=seq)
+
+
+def _two_upstream_events():
+    """Crafted trace: two upstream switches dequeue same-flow packets
+    (same cluster AND worker id) before either reaches SW C — the
+    ``(cluster_id, worker_id)`` match alone is ambiguous, and the later
+    departure (B) arrives *first*, so dequeue order alone picks wrongly
+    too; only ``gen_time``/``seq`` resolve it."""
+    a, b = _mk(0.010), _mk(0.012)
+    return [
+        (0.010, "SWA", "enqueue", a),
+        (0.010, "SWA", "lock", a),
+        (0.011, "SWA", "window", None),
+        (0.011, "SWA", "dequeue", _mk(0.010)),
+        (0.012, "SWB", "enqueue", b),
+        (0.012, "SWB", "lock", b),
+        (0.013, "SWB", "window", None),
+        (0.013, "SWB", "dequeue", _mk(0.012)),
+        # forwarded snapshots carry the upstream departure seq (>= 0)
+        (0.020, "SWC", "enqueue", _mk(0.012, seq=0)),  # B first
+        (0.020, "SWC", "lock", _mk(0.012, seq=0)),
+        (0.021, "SWC", "window", None),
+        (0.021, "SWC", "dequeue", _mk(0.012)),
+        (0.022, "SWC", "enqueue", _mk(0.010, seq=0)),
+        (0.022, "SWC", "lock", _mk(0.010, seq=0)),
+        (0.023, "SWC", "window", None),
+        (0.023, "SWC", "dequeue", _mk(0.010)),
+    ]
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_two_upstream_same_flow_heads_disambiguate(batched):
+    switches, rows = _two_upstream_plane()
+    plane = HybridMultiSwitchDataPlane(switches, {"SWA", "SWB"}, DIM, rows)
+    events = _two_upstream_events()
+    # feed up to the first SW C arrival and confirm the trace really puts
+    # the ambiguous same-flow heads in both upstream forward queues
+    if batched:
+        plane.feed_window(events[:8])
+    else:
+        for ev in events[:8]:
+            plane.feed(*ev)
+    assert len(plane._forward["SWA"]) == len(plane._forward["SWB"]) == 1
+    ua, ub = plane._forward["SWA"][0][1], plane._forward["SWB"][0][1]
+    assert (ua.cluster_id, ua.worker_id) == (ub.cluster_id, ub.worker_id)
+    if batched:
+        plane.feed_window(events[8:])
+    else:
+        for ev in events[8:]:
+            plane.feed(*ev)
+    res = plane.result()
+    assert len(res.delivered) == 2
+    # B's packet (row 1) was delivered first, A's (row 0) second — matched
+    # on gen_time/seq, not on arrival-vs-departure order
+    assert res.delivered[0][1].gen_time == 0.012
+    assert res.delivered[1][1].gen_time == 0.010
+    np.testing.assert_array_equal(np.asarray(res.delivered[0][2]), rows[1])
+    np.testing.assert_array_equal(np.asarray(res.delivered[1][2]), rows[0])
+
+
+# ---------------------------------------------------------------------------
+# Mixed ingress/transit switch (the payload-row sizing regression)
+# ---------------------------------------------------------------------------
+def _mixed_ingress_cfg(seed=0):
+    """SW1 -> SW3 -> PS with workers on BOTH SW1 and SW3: SW3 sees fresh
+    *and* forwarded enqueues. The old ``sim_res.sent + 1`` synthetic-row
+    sizing (with every SW3 enqueue treated as fresh) overran the row budget
+    here."""
+    workers = []
+    wid = 0
+    for sw, cluster in (("SW1", 0), ("SW1", 1), ("SW3", 2), ("SW3", 3)):
+        for _ in range(2):
+            workers.append(WorkerCfg(
+                worker_id=wid, cluster_id=cluster, ingress_switch=sw,
+                gen_interval=0.02, gen_jitter=0.3, size_bits=8192))
+            wid += 1
+    switches = [
+        SwitchCfg("SW1", queue_slots=4, uplink=Link(0.5e6), next_hop="SW3"),
+        SwitchCfg("SW3", queue_slots=4, uplink=Link(0.8e6), next_hop=None),
+    ]
+    return SimCfg(switches=switches, workers=workers, horizon=0.3, seed=seed)
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_mixed_ingress_transit_switch_synthetic_rows(batched):
+    """Regression: the synthetic fallback must size by the fresh-update
+    count from the trace, so the forwarded SW1->SW3 enqueues don't blow
+    past the row budget."""
+    hyb, cfg = run_hybrid_multihop(DIM, sim_cfg=_mixed_ingress_cfg(),
+                                   batched=batched)
+    assert len(hyb.delivered) > 0
+    # the mixed switch really saw both kinds of traffic: forwarded packets
+    # carry pre-combined weight
+    sim = NetworkSimulator(_mixed_ingress_cfg()).run()
+    assert hyb.queue_stats == sim.queue_stats
+    assert sim.queue_stats["SW3"]["enqueued"] > 0
+
+
+def test_mixed_ingress_transit_matches_payload_oracle():
+    """Full payload cross-check on the mixed topology: the hybrid delivers
+    the same combined payloads as the payload-carrying simulator."""
+    cfg = _mixed_ingress_cfg(seed=5)
+    rng = np.random.default_rng(55)
+    rows = rng.normal(size=(4000, DIM)).astype(np.float32)
+    it = iter(rows)
+    delivered = []
+    oracle_cfg = dataclasses.replace(
+        cfg,
+        payload_fn=lambda now, wid: (next(it).copy(), 0.0),
+        on_deliver=lambda now, upd: delivered.append(
+            (now, upd.cluster_id, upd.agg_count, upd.payload.copy())))
+    NetworkSimulator(oracle_cfg).run()
+    hyb, _ = run_hybrid_multihop(DIM, payload_rows=rows, sim_cfg=cfg)
+    assert len(delivered) == len(hyb.delivered) > 0
+    for (t0, c0, a0, p0), (t1, u1, p1) in zip(delivered, hyb.delivered):
+        assert abs(t0 - t1) < 2e-6  # oracle logs one prop delay later
+        assert c0 == u1.cluster_id and a0 == u1.agg_count
+        np.testing.assert_allclose(p0, np.asarray(p1), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.slow  # congested 3-switch trace, both replay modes
+def test_batched_replay_reduces_host_transfers():
+    """Under congestion the windowed replay must cut host->device
+    transfers per delivered update by >= 2x (the bench_step.hybrid_replay
+    gate, asserted here at test scale)."""
+    cfg = multihop_cfg(
+        "olaf", seed=7, n_clusters_per_group=3, workers_per_cluster=6,
+        horizon=0.3, interval_s1=0.008, interval_s2=0.009, x1_gbps=0.4e-3,
+        x2_gbps=0.4e-3, sw3_gbps=0.6e-3, size_bits=8192, sw12_slots=6,
+        sw3_slots=6)
+    per_event, _ = run_hybrid_multihop(DIM, sim_cfg=cfg, batched=False)
+    batched, _ = run_hybrid_multihop(DIM, sim_cfg=cfg, batched=True)
+    _assert_results_equal(per_event, batched)
+    assert len(batched.delivered) > 0
+    assert per_event.h2d_transfers >= 2 * batched.h2d_transfers

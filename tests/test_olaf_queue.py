@@ -107,6 +107,38 @@ class TestPyOlafQueue:
         assert out.agg_count == 2
 
 
+class TestBatchedClassify:
+    """The windowed control-plane API: ``classify_batch`` / ``enqueue_batch``
+    must equal a per-event replay, classification included."""
+
+    def _events(self):
+        return [mk(0, 0, reward=0.0), mk(0, 1, reward=0.1),  # append, agg
+                mk(1, 2), mk(2, 3), mk(3, 4),  # appends -> queue full
+                mk(4, 5),  # drop (full, no same-cluster waiting)
+                mk(1, 2, reward=5.0),  # same-worker un-aggregated replace
+                mk(0, 9, reward=9.0)]  # reward-replace over the threshold
+
+    def test_classify_batch_matches_per_event_stats_deltas(self):
+        batch = PyOlafQueue(capacity=4, reward_threshold=1.0)
+        got = batch.classify_batch(self._events())
+        assert got == ["append", "agg", "append", "append", "append",
+                       "drop", "replace", "replace"]
+        # the batch resolve is a pure replay: queue state and counters
+        # equal a one-by-one replay
+        ref = PyOlafQueue(capacity=4, reward_threshold=1.0)
+        for upd in self._events():
+            ref.enqueue(upd)
+        assert batch.stats.as_dict() == ref.stats.as_dict()
+        assert batch.clusters() == ref.clusters()
+
+    def test_enqueue_batch_retention_flags(self):
+        q = PyOlafQueue(capacity=4, reward_threshold=1.0)
+        kept = q.enqueue_batch(self._events())
+        assert kept == [True, True, True, True, True, False, True, True]
+        ref = PyOlafQueue(capacity=4, reward_threshold=1.0)
+        assert kept == [ref.enqueue(u) for u in self._events()]
+
+
 class TestPyFifoQueue:
     def test_tail_drop(self):
         q = PyFifoQueue(capacity=2)

@@ -22,6 +22,11 @@ import jax.numpy as jnp
 from repro.core.olaf_queue import jax_olaf_step, jax_queue_init
 from repro.kernels import ops
 
+# the randomized oracle sweeps are long; the CI fast lane skips them
+# (-m "not slow") — the dedicated pallas-kernels matrix job and the
+# full-suite job still run this module
+pytestmark = pytest.mark.slow
+
 if (os.environ.get("REPRO_PALLAS_COMPILED") == "1"
         and jax.default_backend() != "tpu"):
     pytest.skip("compiled Pallas kernels need a TPU backend",

@@ -16,6 +16,9 @@ pytest.importorskip("hypothesis", reason="hypothesis not installed "
                     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
+# long hypothesis suites: CI fast lane skips them (-m "not slow")
+pytestmark = pytest.mark.slow
+
 from repro.core.aggregation import Update
 from repro.core.aom import aom_trajectory, average_aom, jain_fairness
 from repro.core.olaf_queue import (PyOlafQueue, jax_dequeue, jax_enqueue,
