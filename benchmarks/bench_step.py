@@ -221,6 +221,62 @@ def hybrid_replay_micro(dim: int = 512, reps: int = 3) -> dict:
         speedup=ev.h2d_transfers / max(win.h2d_transfers, 1))
 
 
+def topology_sweep(dim: int = 256, reps: int = 2) -> dict:
+    """The declarative-topology hybrid data plane across spec presets.
+
+    Runs one congested trace per named topology (chain-3, wide fan-in-4,
+    fat-tree k=2, multi-rack) through both trace consumers and records, per
+    topology: hybrid wall clock, host→device transfers per delivered
+    update, combine launches (per-switch flush cadence) and fused
+    combine+forward dispatches. ``speedup`` is the per-event vs windowed
+    h2d-transfer ratio — structural, like ``hybrid_replay``'s — and the
+    fat-tree row is gated in ``check_regression.py --floors``
+    (``topology_fattree``).
+    """
+    from repro.core.hybrid import run_hybrid_multihop
+    from repro.core.topology import (chain_cfg, fanin_cfg, fattree_cfg,
+                                     multirack_cfg)
+
+    load = dict(gen_interval=0.006, horizon=0.3, seed=7)
+    topos = {
+        "chain3": lambda: chain_cfg(3, clusters_per_ingress=3,
+                                    workers_per_cluster=4, **load),
+        "fanin4": lambda: fanin_cfg(4, clusters_per_ingress=2,
+                                    workers_per_cluster=3, **load),
+        "fattree_k2": lambda: fattree_cfg(2, clusters_per_ingress=2,
+                                          workers_per_cluster=5, **load),
+        "multirack": lambda: multirack_cfg(6, clusters_per_ingress=1,
+                                           workers_per_cluster=4, **load),
+    }
+    out = {}
+    for name, mk in topos.items():
+        def run(batched):
+            best, res = float("inf"), None
+            for _ in range(reps):
+                cfg = mk()
+                t0 = time.time()
+                res, _ = run_hybrid_multihop(dim, sim_cfg=cfg,
+                                             batched=batched)
+                best = min(best, time.time() - t0)
+            return best, res
+
+        ev_s, ev = run(batched=False)
+        win_s, win = run(batched=True)
+        n = max(len(win.delivered), 1)
+        assert len(ev.delivered) == len(win.delivered)
+        out[name] = dict(
+            switches=len(win.switch_launches), dim=dim,
+            delivered=len(win.delivered), forwarded=win.forwarded,
+            launches=win.launches, forward_launches=win.forward_launches,
+            switch_window_landings=sum(win.switch_launches.values()),
+            per_event_s=ev_s, windowed_s=win_s,
+            per_event_h2d_per_delivery=ev.h2d_transfers / n,
+            windowed_h2d_per_delivery=win.h2d_transfers / n,
+            wall_speedup=ev_s / win_s,
+            speedup=ev.h2d_transfers / max(win.h2d_transfers, 1))
+    return out
+
+
 def main(report):
     micro = olaf_step_micro()
     report("olaf_step_fused_q8_d64k", micro["fused_us"],
@@ -240,5 +296,15 @@ def main(report):
            f"{hyb['per_event_h2d_per_delivery']:.1f} -> "
            f"{hyb['windowed_h2d_per_delivery']:.1f} = "
            f"{hyb['speedup']:.1f}x fewer transfers")
+    topo = topology_sweep()
+    for name, row in topo.items():
+        report(f"topology_{name}", row["windowed_s"] * 1e6,
+               f"{row['switches']} switches, {row['delivered']} delivered, "
+               f"{row['forwarded']} forwarded; h2d/delivery "
+               f"{row['per_event_h2d_per_delivery']:.1f} -> "
+               f"{row['windowed_h2d_per_delivery']:.1f} = "
+               f"{row['speedup']:.1f}x; {row['launches']} combine + "
+               f"{row['forward_launches']} fused forward launches")
     return dict(olaf_step_cycle=micro, olaf_step_kernel=kern,
-                hybrid_replay=hyb)
+                hybrid_replay=hyb, topology_sweep=topo,
+                topology_fattree=topo["fattree_k2"])

@@ -1,9 +1,12 @@
-"""Netsim/JAX hybrid multi-switch data plane (§8.3 topology on device).
+"""Netsim/JAX hybrid multi-switch data plane (arbitrary topologies on device).
 
 The paper splits each OLAF switch into a control plane (Algorithm 1 gating
 decisions on packet metadata) and a data plane (payload combining at line
 rate). This module makes the same split across the host/accelerator
-boundary for the SW1/SW2/SW3 multi-hop topology:
+boundary for any switch DAG described by a
+:class:`~repro.core.topology.TopologySpec` (the §8.3 SW1/SW2→SW3 fan-in is
+one preset; chains, wide fan-in, fat-tree, multi-rack and multi-PS egress
+are others):
 
   * control plane — the discrete-event :class:`~repro.core.netsim.
     NetworkSimulator` runs metadata-only and emits its queue transitions
@@ -11,34 +14,52 @@ boundary for the SW1/SW2/SW3 multi-hop topology:
     against per-switch :class:`~repro.core.olaf_queue.PyOlafQueue` mirrors,
     which re-derive every aggregate/replace/append/drop decision.
   * data plane — all payload bytes live in one device-resident
-    ``(S, Q, D)`` slot buffer. Pending combines accumulate per switch and
-    are flushed with a single :func:`repro.kernels.ops.olaf_combine_window`
-    launch covering SW1, SW2 and SW3 at once (the switch axis is folded
-    into the Pallas grid); forwarded SW1/SW2→SW3 packets and PS deliveries
-    are one-row device gathers. The kernel's ``gate`` carries each packet's
-    ``agg_count`` as its aggregation weight, so multi-hop combining stays
-    an exact weighted mean of the raw worker gradients.
+    ``(S, Q, D)`` slot buffer (Q = the widest switch; heterogeneous
+    per-switch slot counts ride padded). Pending combines accumulate per
+    switch; at each departure ONE fused :func:`repro.kernels.ops.
+    olaf_forward` dispatch lands the flush set's pending window *and*
+    gathers/clears the departing row, which is then routed to its next hop
+    straight off the compiled spec's next-hop vector — transit hops never
+    round-trip payload bytes through the host. The kernel's ``gate``
+    carries each packet's ``agg_count`` as its aggregation weight, so
+    multi-hop combining stays an exact weighted mean of the raw worker
+    gradients.
 
-The trace is consumed per **transmission window** (the simulator marks the
-boundaries with ``kind="window"`` events — a window closes exactly when a
-transmission completes, since a slot payload must be materialized before it
-leaves the switch). :meth:`HybridMultiSwitchDataPlane.feed_window` is the
-batched consumer: each window's enqueue events are classified in one
-host-batched Algorithm 1 stats-delta pass per switch
-(:meth:`~repro.core.olaf_queue.PyOlafQueue.classify_batch`), the window's
-payload rows are staged as ONE ``(S, U, D)`` host block put on device in a
-single transfer (forwarded rows are already device-resident and splice in
-as device-side gathers), and lock/dequeue events fold into the same window
-cursor. The per-event :meth:`~HybridMultiSwitchDataPlane.feed` replay is
-kept as the reference the batched path is property-tested against
-(``tests/test_hybrid_window.py``); under congestion — the OLAF operating
-point — many updates amortize each kernel launch *and* each host→device
-transfer (``HybridResult.h2d_transfers`` tracks the latter,
-``bench_step.hybrid_replay`` gates the reduction).
+**Per-switch flush cadence** — a transmission boundary at switch ``s`` no
+longer flushes every switch: only ``s`` plus its upstream frontier
+(``TopologySpec.flush_set``) land their pending windows; everyone else
+keeps buffering until a boundary of their own frontier arrives. On wide or
+deep topologies this cuts per-switch combine landings (tracked per switch
+in ``HybridResult.switch_launches``) without changing what is delivered —
+a switch's pending is always landed before its own head departs. Pass
+``flush_cadence=False`` for the legacy every-switch flush.
+
+**Forwarding** — the per-event reference replay (:meth:`feed`) keeps the
+head-matching :meth:`_match_forward` splice, now consulting the compiled
+spec's next-hop vector (so reference and batched paths cannot diverge on
+multi-PS topologies). The batched consumer (:meth:`feed_window`) does *no
+host-side forward matching at all*: per-link FIFO plus a constant
+propagation delay make arrival order deterministic, so each in-flight
+packet is pushed into a per-destination transit queue keyed by its arrival
+time (departure time + the source switch's ``prop_delay`` from the spec)
+and the next forwarded enqueue at that switch simply pops the head.
+
+The trace is consumed per **transmission window**: each window's enqueue
+runs are classified in one host-batched Algorithm 1 stats-delta pass per
+switch (:meth:`~repro.core.olaf_queue.PyOlafQueue.classify_batch`), the
+window's payload rows are staged as ONE ``(S, U, D)`` host block put per
+flush (forwarded rows are already device-resident and splice in as
+device-side scatters), and lock/window/dequeue events fold into the same
+window cursor. The per-event :meth:`feed` replay is the reference the
+batched path is property-tested against (``tests/test_hybrid_window.py``,
+including randomized DAG topologies); under congestion — the OLAF
+operating point — many updates amortize each kernel launch *and* each
+host→device transfer (``HybridResult.h2d_transfers``).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
@@ -50,6 +71,8 @@ import jax.numpy as jnp
 from repro.core.aggregation import Update
 from repro.core.netsim import NetworkSimulator, SimCfg, multihop_cfg
 from repro.core.olaf_queue import PyOlafQueue, burst_contribution_mask
+from repro.core.topology import TopologySpec, resolve_sim_cfg, \
+    spec_from_switch_cfgs
 from repro.kernels.olaf_combine import _pick_tile_q as _largest_tile
 
 
@@ -108,7 +131,7 @@ class _SwitchMirror:
 @dataclasses.dataclass
 class HybridResult:
     delivered: List[Tuple[float, Update, jnp.ndarray]]  # (time, meta, payload)
-    launches: int  # combine kernel launches
+    launches: int  # combine kernel launches (window landings)
     combined_updates: int  # window entries that went through the kernel
     queue_stats: Dict[str, Dict[str, int]]
     final_counts: np.ndarray  # (S, Q) residual device slot counts
@@ -121,25 +144,39 @@ class HybridResult:
     # put per row, which bench_step.hybrid_replay gates at >= 2x fewer
     # transfers per delivered update
     h2d_transfers: int = 0
+    # fused combine+forward dispatches (one per departure: the window
+    # landing and the departing-row gather share the launch)
+    forward_launches: int = 0
+    # per switch: how many combine launches landed that switch's pending
+    # window — the per-switch flush cadence only lands the departing
+    # switch plus its upstream frontier, so these counts drop vs the
+    # legacy every-switch flush on wide/deep topologies
+    switch_launches: Dict[str, int] = dataclasses.field(default_factory=dict)
+    forwarded: int = 0  # packets routed switch->switch (transit hops)
 
 
 class HybridMultiSwitchDataPlane:
     """Replays a netsim queue-event trace with device-resident payloads."""
 
-    def __init__(self, switch_cfgs, ingress_switches, dim: int,
-                 payload_rows: Sequence[np.ndarray], *,
-                 interpret: bool = True, sharded: bool = False) -> None:
-        self.names = [s.name for s in switch_cfgs]
-        self.index = {n: i for i, n in enumerate(self.names)}
-        self.next_hop = {s.name: s.next_hop for s in switch_cfgs}
+    def __init__(self, switch_cfgs=None, ingress_switches=(), dim: int = 0,
+                 payload_rows: Sequence[np.ndarray] = (), *,
+                 topology: Optional[TopologySpec] = None,
+                 interpret: bool = True, sharded: bool = False,
+                 flush_cadence: bool = True) -> None:
+        assert topology is not None or switch_cfgs is not None
+        self.spec = topology if topology is not None \
+            else spec_from_switch_cfgs(switch_cfgs)
+        self.names = list(self.spec.names)
+        self.index = self.spec.index
         self.ingress = set(ingress_switches)
-        self.mirrors = [_SwitchMirror(s.name, s.queue_slots,
-                                      s.reward_threshold)
-                        for s in switch_cfgs]
-        S = len(self.names)
-        Q = max(s.queue_slots for s in switch_cfgs)
-        assert all(s.queue_slots == Q for s in switch_cfgs), \
-            "one (S, Q, D) buffer => equal queue_slots per switch"
+        self.flush_cadence = flush_cadence
+        self.mirrors = [_SwitchMirror(sp.name, sp.queue_slots,
+                                      sp.reward_threshold)
+                        for sp in self.spec.switches]
+        S = self.spec.num_switches
+        # one padded (S, Q, D) buffer hosts heterogeneous per-switch slot
+        # counts: a mirror never allocates a slot beyond its own capacity
+        Q = int(self.spec.queue_slots.max())
         self.slots_dev = jnp.zeros((S, Q, dim), jnp.float32)
         self.counts_dev = jnp.zeros((S, Q), jnp.int32)
         self.dim = dim
@@ -153,17 +190,34 @@ class HybridMultiSwitchDataPlane:
         self._rows = payload_rows  # (N, dim) ingress payloads in gen order
         self._next_row = 0
         self._zero_row = jnp.zeros((dim,), jnp.float32)
-        # per upstream switch: drained (order, meta, device row) awaiting
-        # its next hop; ``order`` is the global dequeue sequence used to
-        # break full-metadata ties (same-link FIFO + constant propagation
-        # delay => the earlier departure arrives first)
+        # per-event reference path: per upstream switch, drained
+        # (order, meta, device row) awaiting its next hop, matched by
+        # _match_forward; ``order`` is the global dequeue sequence
         self._forward: Dict[str, Deque[Tuple[int, Update, jnp.ndarray]]] = {
             n: deque() for n in self.names}
+        # batched path: per *destination* switch, in-flight transit rows
+        # keyed by (arrival_time, departure order) — the deterministic
+        # per-link FIFO order, so forwarded enqueues pop with ZERO
+        # host-side matching
+        self._transit: List[List[Tuple[float, int, Update, jnp.ndarray]]] = [
+            [] for _ in range(S)]
         self._fwd_order = itertools.count()
         self.delivered: List[Tuple[float, Update, jnp.ndarray]] = []
         self.launches = 0
+        self.forward_launches = 0
+        self.switch_launches: Dict[str, int] = {n: 0 for n in self.names}
+        self.forwarded = 0
         self.combined_updates = 0
         self.h2d_transfers = 0
+
+    # -- flush cadence ------------------------------------------------------
+    def _flush_names(self, sw_name: str) -> Tuple[str, ...]:
+        """Which switches land their pending window at a boundary of
+        ``sw_name``: the departing switch plus its upstream frontier
+        (``flush_cadence=True``), or every switch (the legacy cadence)."""
+        if self.flush_cadence:
+            return self.spec.flush_set(sw_name)
+        return tuple(self.names)
 
     # -- incoming packet resolution ---------------------------------------
     def _resolve_incoming(self, sw_name: str, meta: Update, *,
@@ -177,6 +231,8 @@ class HybridMultiSwitchDataPlane:
         ingress/transit switch never mistakes a forwarded packet for a
         fresh one (and never over-consumes the ingress row budget)."""
         if meta.seq >= 0:
+            if batched:
+                return self._pop_transit(sw_name, meta)
             return self._match_forward(sw_name, meta)
         assert sw_name in self.ingress, \
             f"fresh update at non-ingress switch {sw_name}"
@@ -190,19 +246,40 @@ class HybridMultiSwitchDataPlane:
         self.h2d_transfers += 1  # per-event reference path: one put per row
         return upd, jnp.asarray(row_host)
 
+    def _pop_transit(self, sw_name: str, meta: Update
+                     ) -> Tuple[Update, jnp.ndarray]:
+        """Zero-matching transit pop (the batched path): the next forwarded
+        enqueue at a switch IS the head of its arrival-ordered transit
+        queue — per-link FIFO and the spec's constant per-link propagation
+        delay make the arrival order deterministic, mirroring the
+        simulator's event heap exactly. ``meta`` is only used for a
+        consistency assertion."""
+        q = self._transit[self.index[sw_name]]
+        assert q, f"no in-flight transit packet for {meta} at {sw_name}"
+        _arrival, _order, upd, row = heapq.heappop(q)
+        assert (upd.cluster_id, upd.worker_id, upd.seq) == \
+               (meta.cluster_id, meta.worker_id, meta.seq), \
+            (upd, meta, sw_name)
+        return upd, row
+
     def _match_forward(self, sw_name: str, meta: Update
                        ) -> Tuple[Update, jnp.ndarray]:
-        """Match a forwarded enqueue against the upstream drain queues.
+        """Match a forwarded enqueue against the upstream drain queues
+        (the per-event reference path).
 
         Per-link FIFO with a constant propagation delay preserves departure
         order, so only deque *heads* are candidates. ``(cluster_id,
         worker_id)`` alone is ambiguous when two upstream switches hold
         same-flow heads — disambiguate on the replayed ``gen_time``/``seq``
         (which mirror the simulator's exactly), then on dequeue order.
+        Candidate sources are read off the compiled spec's next-hop vector
+        — the same array the batched transit router uses — so the two
+        paths cannot diverge on multi-PS topologies.
         """
+        dst = self.index[sw_name]
         cands = []
         for n, q in self._forward.items():
-            if not q or self.next_hop[n] != sw_name:
+            if not q or int(self.spec.next_hop[self.index[n]]) != dst:
                 continue
             order, u, _row = q[0]
             if (u.cluster_id == meta.cluster_id
@@ -223,9 +300,8 @@ class HybridMultiSwitchDataPlane:
              meta: Optional[Update]) -> None:
         """One-event-per-call replay — the reference the batched
         :meth:`feed_window` is property-tested against."""
-        if kind == "window":  # boundary marker: the flush point
-            self.flush()
-            return
+        if kind == "window":  # boundary marker: folded into the dequeue
+            return             # that immediately follows it in the trace
         mirror = self.mirrors[self.index[sw_name]]
         if kind == "lock":
             mirror.queue.lock_head()
@@ -239,10 +315,7 @@ class HybridMultiSwitchDataPlane:
                 mirror.pending_rows.append(row)
             return
         assert kind == "dequeue", kind
-        # a payload leaves the switch: land every pending combine first
-        # (no-op when the window marker already flushed)
-        self.flush()
-        self._pop_departure(now, sw_name, meta)
+        self._depart(now, sw_name, meta, batched=False)
 
     # -- batched window replay ---------------------------------------------
     def feed_window(self, events) -> None:
@@ -251,10 +324,11 @@ class HybridMultiSwitchDataPlane:
         Takes any slice of the control-plane trace — typically the whole
         thing — and maintains a window cursor: enqueue metadata buffers per
         switch, a ``lock`` resolves its own switch's buffered run (a locked
-        head changes subsequent gating), and a ``window``/``dequeue``
-        boundary resolves every buffered run with one
-        :meth:`_SwitchMirror.classify_window` batch per switch and lands
-        the window in one staged flush.
+        head changes subsequent gating), and a ``dequeue`` boundary
+        resolves the flush set's buffered runs with one
+        :meth:`_SwitchMirror.classify_window` batch per switch, then lands
+        them fused with the departing-row gather in one
+        :func:`~repro.kernels.ops.olaf_forward` dispatch.
         """
         pend: Dict[str, List[Tuple[Update, object]]] = {}
 
@@ -263,29 +337,25 @@ class HybridMultiSwitchDataPlane:
             if run:
                 self._classify_run(name, run)
 
-        def resolve_all() -> None:
-            for name in list(pend):
-                resolve(name)
-
         for now, sw_name, kind, meta in events:
             if kind == "enqueue":
-                # resolve the packet (ingress row consumption / upstream
-                # forward match) eagerly so rows and forward pops stay in
-                # event order; only the classify is deferred to the batch
+                # resolve the packet (ingress row consumption / transit
+                # pop) eagerly so rows and transit pops stay in event
+                # order; only the classify is deferred to the batch
                 pend.setdefault(sw_name, []).append(
                     self._resolve_incoming(sw_name, meta, batched=True))
             elif kind == "lock":
                 resolve(sw_name)
                 self.mirrors[self.index[sw_name]].queue.lock_head()
             elif kind == "window":
-                resolve_all()
-                self.flush()
+                pass  # folded into the dequeue that follows
             else:
                 assert kind == "dequeue", kind
-                resolve_all()
-                self.flush()
-                self._pop_departure(now, sw_name, meta)
-        resolve_all()  # trailing partial window: staged, flushed by result()
+                for name in self._flush_names(sw_name):
+                    resolve(name)
+                self._depart(now, sw_name, meta, batched=True)
+        for name in list(pend):  # trailing partial window: staged,
+            resolve(name)        # flushed by result()
 
     def _classify_run(self, sw_name: str,
                       run: List[Tuple[Update, object]]) -> None:
@@ -303,40 +373,59 @@ class HybridMultiSwitchDataPlane:
                 mirror.pending.append((slot, event, weight))
                 mirror.pending_rows.append(row)
 
-    def _pop_departure(self, now: float, sw_name: str,
-                       meta: Update) -> None:
+    def _depart(self, now: float, sw_name: str, meta: Update, *,
+                batched: bool) -> None:
+        """A transmission completes at ``sw_name``: land the flush set's
+        pending windows and gather+clear the departing row in ONE fused
+        dispatch, then route the row by the spec's next-hop vector."""
         s = self.index[sw_name]
         mirror = self.mirrors[s]
         upd = mirror.queue.dequeue()
         assert upd is not None and upd.cluster_id == meta.cluster_id
         slot = mirror.pop_slot(upd.cluster_id)
-        row = self.slots_dev[s, slot]
-        self.slots_dev = self.slots_dev.at[s, slot].set(0.0)
-        self.counts_dev = self.counts_dev.at[s, slot].set(0)
-        if self.next_hop[sw_name] is None:
+        row = self.flush(self._flush_names(sw_name), drain=(s, slot))
+        nh = int(self.spec.next_hop[s])
+        if nh < 0:
             self.delivered.append((now, upd, row))
+            return
+        self.forwarded += 1
+        if batched:
+            heapq.heappush(self._transit[nh],
+                           (now + float(self.spec.prop_delay[s]),
+                            next(self._fwd_order), upd, row))
         else:
             self._forward[sw_name].append((next(self._fwd_order), upd, row))
 
     # -- the single-launch data plane --------------------------------------
-    def flush(self) -> None:
-        """One combine launch landing every switch's pending window into
-        the (S, Q, D) slot buffer, with the window's host rows staged as a
-        single ``(S, U, D)`` block put."""
-        if not any(m.pending for m in self.mirrors):
-            return
+    def flush(self, names: Optional[Sequence[str]] = None,
+              drain: Optional[Tuple[int, int]] = None
+              ) -> Optional[jnp.ndarray]:
+        """One dispatch landing the selected switches' pending windows into
+        the (S, Q, D) slot buffer — the window's host rows staged as a
+        single ``(S, U, D)`` block put — optionally fused with the
+        departing-row gather/clear (``drain=(switch, slot)``), whose
+        device-resident row is returned."""
+        sel = self.mirrors if names is None else \
+            [self.mirrors[self.index[n]] for n in names]
+        if not any(m.pending for m in sel):
+            if drain is None:
+                return None
+            return self._drain_only(*drain)
         from repro.kernels import ops  # deferred: keeps netsim jax-light
         S, Q, _ = self.slots_dev.shape
-        U = max(len(m.pending) for m in self.mirrors)
+        U = max(len(m.pending) for m in sel)
         # bucket the window size to the next power of two so the jitted
         # kernel compiles O(log U) variants instead of one per distinct U
         U = max(4, 1 << (U - 1).bit_length())
         clusters = np.zeros((S, U), np.int32)
         gate = np.zeros((S, U), np.int32)
         reset_mask = np.zeros((S, Q), bool)
-        row_grid: List[List[object]] = []
+        row_grid: List[List[object]] = [[] for _ in range(S)]
         any_host = False
-        for s, m in enumerate(self.mirrors):
+        for m in sel:
+            if not m.pending:
+                continue  # in the flush set but nothing buffered
+            s = self.index[m.name]
             # telescoped-mean bookkeeping (the same contribution rule as
             # ``_burst_resolve``): only the last reset per slot and the
             # aggs after it contribute
@@ -350,23 +439,33 @@ class HybridMultiSwitchDataPlane:
                 reset_mask[s, slot] = True  # slot restarts from the window
             any_host = any_host or any(
                 isinstance(r, np.ndarray) for r in m.pending_rows)
-            row_grid.append(m.pending_rows)
+            row_grid[s] = m.pending_rows
             self.combined_updates += len(m.pending)
+            self.switch_launches[m.name] += 1
             m.pending, m.pending_rows = [], []
+        # only the flush set's switches carry window rows; stage their
+        # compact (Ssel, U, D) block and scatter it into a device-side
+        # zeros (S, U, D) — the host->device put (and the host zero-fill)
+        # scale with the flush set, not the whole fabric
+        sel_idx = sorted(s for s, rows in enumerate(row_grid) if rows)
+        sub = {s: i for i, s in enumerate(sel_idx)}
         if any_host:
-            # the batched window path: every host row lands in one (S,U,D)
-            # stack + one device put; already-device rows (forwarded
+            # the batched window path: every host row lands in one compact
+            # block + one device put; already-device rows (forwarded
             # packets) splice in as device-side writes
-            block = np.zeros((S, U, self.dim), np.float32)
+            block = np.zeros((len(sel_idx), U, self.dim), np.float32)
             dev_fixups = []
-            for s, rows in enumerate(row_grid):
-                for u, row in enumerate(rows):
+            for s in sel_idx:
+                for u, row in enumerate(row_grid[s]):
                     if isinstance(row, np.ndarray):
-                        block[s, u] = row
+                        block[sub[s], u] = row
                     else:
                         dev_fixups.append((s, u, row))
-            updates = jnp.asarray(block)
+            staged = jnp.asarray(block)
             self.h2d_transfers += 1
+            updates = staged if len(sel_idx) == S else \
+                jnp.zeros((S, U, self.dim), jnp.float32).at[
+                    np.asarray(sel_idx)].set(staged)
             if dev_fixups:
                 # one batched scatter: per-row .at[].set() would copy the
                 # whole (S, U, D) block once per forwarded packet
@@ -376,11 +475,17 @@ class HybridMultiSwitchDataPlane:
         else:
             # per-event reference path: rows were put on device one by one
             flat: List[jnp.ndarray] = []
-            for rows in row_grid:
+            for s in sel_idx:
+                rows = row_grid[s]
                 flat.extend(rows)
                 flat.extend([self._zero_row] * (U - len(rows)))
-            updates = jnp.stack(flat).reshape(S, U, self.dim)
+            staged = jnp.stack(flat).reshape(len(sel_idx), U, self.dim)
+            updates = staged if len(sel_idx) == S else \
+                jnp.zeros((S, U, self.dim), jnp.float32).at[
+                    np.asarray(sel_idx)].set(staged)
         self.h2d_transfers += 3  # clusters + gate + reset-mask window puts
+        self.launches += 1
+        drained: Optional[jnp.ndarray] = None
         if self.sharded:
             from repro.distributed.sharding import olaf_combine_sharded
             counts_in = jnp.where(jnp.asarray(reset_mask), 0,
@@ -389,11 +494,32 @@ class HybridMultiSwitchDataPlane:
                 self.slots_dev, counts_in, updates, jnp.asarray(clusters),
                 jnp.asarray(gate), mesh=self._mesh, tile_d=self.tile_d,
                 interpret=self.interpret)
+            if drain is not None:
+                drained = self._drain_only(*drain)
+        elif drain is not None:
+            s, slot = drain
+            self.h2d_transfers += 1  # drain (switch, slot) index put
+            self.forward_launches += 1
+            self.slots_dev, self.counts_dev, rows = ops.olaf_forward(
+                self.slots_dev, self.counts_dev, updates, clusters, gate,
+                reset_mask, np.asarray([s], np.int32),
+                np.asarray([slot], np.int32), tile_d=self.tile_d,
+                interpret=self.interpret)
+            drained = rows[0]
         else:
             self.slots_dev, self.counts_dev = ops.olaf_combine_window(
                 self.slots_dev, self.counts_dev, updates, clusters, gate,
                 reset_mask, tile_d=self.tile_d, interpret=self.interpret)
-        self.launches += 1
+        return drained
+
+    def _drain_only(self, s: int, slot: int) -> jnp.ndarray:
+        """Departing-row gather+clear with no pending window to land (the
+        indices are static Python ints here — no host->device put)."""
+        self.forward_launches += 1
+        row = self.slots_dev[s, slot]
+        self.slots_dev = self.slots_dev.at[s, slot].set(0.0)
+        self.counts_dev = self.counts_dev.at[s, slot].set(0)
+        return row
 
     def result(self) -> HybridResult:
         self.flush()
@@ -413,7 +539,10 @@ class HybridMultiSwitchDataPlane:
                          for m in self.mirrors},
             final_counts=np.asarray(self.counts_dev),
             residual_slot_counts=residual,
-            h2d_transfers=self.h2d_transfers)
+            h2d_transfers=self.h2d_transfers,
+            forward_launches=self.forward_launches,
+            switch_launches=dict(self.switch_launches),
+            forwarded=self.forwarded)
 
 
 def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
@@ -421,20 +550,32 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
                         payload_rows: Optional[Sequence[np.ndarray]] = None,
                         payload_source=None,
                         sim_cfg: Optional[SimCfg] = None,
+                        topology=None,  # TopologySpec | SimCfg preset
                         sharded: bool = False,
                         batched: bool = True,
+                        flush_cadence: bool = True,
                         **cfg_kw) -> Tuple[HybridResult, SimCfg]:
-    """SW1/SW2/SW3 hybrid run: metadata trace from the event-driven sim,
-    payload combining on device in one multi-queue kernel launch per
-    transmission window (``sharded=True`` splits the switch axis over the
+    """Hybrid run over any topology: metadata trace from the event-driven
+    sim, payload combining + forwarding on device in one fused dispatch per
+    transmission boundary (``sharded=True`` splits the switch axis over the
     device mesh via ``distributed.sharding.olaf_combine_sharded``).
+
+    The topology comes from (first match wins): ``sim_cfg`` (explicit
+    wiring), ``topology`` (a :class:`~repro.core.topology.TopologySpec` —
+    worker clusters are spread over its source switches via
+    :func:`~repro.core.topology.build_sim_cfg`, or a prebuilt ``SimCfg``
+    from one of the ``*_cfg`` preset one-liners), else the §8.3
+    ``multihop_cfg`` default. ``flush_cadence=True`` lands only the
+    departing switch plus its upstream frontier per boundary;
+    ``False`` restores the legacy every-switch flush.
 
     ``batched=True`` (the default) consumes the trace through the windowed
     batch replay (:meth:`HybridMultiSwitchDataPlane.feed_window`): one
-    host-batched Algorithm 1 classify pass and one staged ``(S, U, D)``
-    device put per window. ``batched=False`` replays one Python call per
-    queue event — the reference path the batched one is property-tested
-    against.
+    host-batched Algorithm 1 classify pass per window run, one staged
+    ``(S, U, D)`` device put per flush, and zero host-side forward
+    matching (transit rows routed on device by ``ops.olaf_forward``).
+    ``batched=False`` replays one Python call per queue event — the
+    reference path the batched one is property-tested against.
 
     ``payload_rows`` (N, dim) are consumed in worker-generation order (pass
     the same array to a payload-carrying oracle sim to cross-check).
@@ -449,8 +590,12 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
     switch or a deferred-heavy transmission-control run can never overrun
     the row budget).
     """
-    cfg = sim_cfg if sim_cfg is not None else multihop_cfg(
-        "olaf", seed=seed, **cfg_kw)
+    if sim_cfg is not None:
+        cfg = sim_cfg
+    elif topology is not None:
+        cfg = resolve_sim_cfg(topology, seed=seed, **cfg_kw)
+    else:
+        cfg = multihop_cfg("olaf", seed=seed, **cfg_kw)
     events: List[Tuple[float, str, str, Optional[Update]]] = []
     trace_cfg = dataclasses.replace(
         cfg, on_queue_event=lambda now, sw, kind, upd: events.append(
@@ -480,7 +625,8 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
                 size=(n_fresh, dim)).astype(np.float32)
     plane = HybridMultiSwitchDataPlane(
         cfg.switches, {w.ingress_switch for w in cfg.workers}, dim,
-        payload_rows, interpret=interpret, sharded=sharded)
+        payload_rows, interpret=interpret, sharded=sharded,
+        flush_cadence=flush_cadence)
     if batched:
         plane.feed_window(events)
     else:

@@ -386,7 +386,13 @@ def multihop_cfg(queue: str, *, interval_s1: float = 0.1, interval_s2: float = 0
                  sw12_slots: int = 5, sw3_slots: int = 8, seed: int = 0,
                  reward_threshold: Optional[float] = None) -> SimCfg:
     """§8.3 multi-hop topology (Fig. 9): C1-C5 -> SW1 -> SW3 -> PS and
-    C6-C10 -> SW2 -> SW3 -> PS, 10 workers per cluster, 1 kB updates."""
+    C6-C10 -> SW2 -> SW3 -> PS, 10 workers per cluster, 1 kB updates.
+
+    The SW1/SW2/SW3 switch wiring is one :func:`repro.core.topology.
+    multihop_spec` preset compiled to ``SwitchCfg``/``Link``s — see
+    ``repro.core.topology`` for the whole declarative topology family
+    (chains, wide fan-in, fat-tree, multi-rack, multi-PS egress)."""
+    from repro.core.topology import multihop_spec  # lazy: avoids cycle
     workers: List[WorkerCfg] = []
     wid = 0
     for g, (sw, interval) in enumerate([("SW1", interval_s1), ("SW2", interval_s2)]):
@@ -397,16 +403,9 @@ def multihop_cfg(queue: str, *, interval_s1: float = 0.1, interval_s2: float = 0
                     worker_id=wid, cluster_id=cluster, ingress_switch=sw,
                     gen_interval=interval, gen_jitter=0.3, size_bits=size_bits))
                 wid += 1
-    switches = [
-        SwitchCfg("SW1", queue=queue, queue_slots=sw12_slots,
-                  uplink=Link(x1_gbps * 1e9), next_hop="SW3",
-                  reward_threshold=reward_threshold),
-        SwitchCfg("SW2", queue=queue, queue_slots=sw12_slots,
-                  uplink=Link(x2_gbps * 1e9), next_hop="SW3",
-                  reward_threshold=reward_threshold),
-        SwitchCfg("SW3", queue=queue, queue_slots=sw3_slots,
-                  uplink=Link(sw3_gbps * 1e9), next_hop=None,
-                  reward_threshold=reward_threshold),
-    ]
+    switches = multihop_spec(
+        x1_gbps=x1_gbps, x2_gbps=x2_gbps, sw3_gbps=sw3_gbps,
+        sw12_slots=sw12_slots, sw3_slots=sw3_slots,
+        reward_threshold=reward_threshold).switch_cfgs(queue=queue)
     return SimCfg(switches=switches, workers=workers, horizon=horizon,
                   tx_control=tx_control, seed=seed)

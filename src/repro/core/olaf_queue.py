@@ -280,12 +280,19 @@ def jax_queue_init(capacity: int, dim: int, dtype=jnp.float32) -> JaxQueueState:
 
 def jax_enqueue(state: JaxQueueState, cluster: jnp.ndarray, worker: jnp.ndarray,
                 gen_time: jnp.ndarray, reward: jnp.ndarray, payload: jnp.ndarray,
-                reward_threshold: float = jnp.inf) -> JaxQueueState:
+                reward_threshold: float = jnp.inf,
+                capacity=None) -> JaxQueueState:
     """Jittable Algorithm 1 for a single incoming update.
 
     ``reward_threshold=inf`` disables gating. All branches are computed with
     masks/`jnp.where` so the function is trace-once / fixed-shape.
+    ``capacity`` (static int or traced scalar, default the buffer size Q)
+    caps the *logical* slot count: slots at index >= capacity are never
+    appended into, so one padded ``(Qmax,)`` buffer can host switches with
+    heterogeneous per-switch slot vectors (``TopologySpec.queue_slots``).
     """
+    Q = state.cluster.shape[0]
+    valid_slot = jnp.arange(Q) < (Q if capacity is None else capacity)
     occupied = state.cluster >= 0
     same_cluster = occupied & (state.cluster == cluster)
     hit = jnp.any(same_cluster)
@@ -302,7 +309,7 @@ def jax_enqueue(state: JaxQueueState, cluster: jnp.ndarray, worker: jnp.ndarray,
     do_reward_drop = hit & ~same_worker_replace & (rdiff < -reward_threshold)
     do_aggregate = hit & ~same_worker_replace & ~do_reward_replace & ~do_reward_drop
 
-    full = jnp.all(occupied)
+    full = jnp.all(occupied | ~valid_slot)
     do_append = ~hit & ~full
     do_drop_full = ~hit & full
 
@@ -312,8 +319,8 @@ def jax_enqueue(state: JaxQueueState, cluster: jnp.ndarray, worker: jnp.ndarray,
                    + payload) / (w_cnt + 1).astype(payload.dtype)
 
     # ---- slot selection ---------------------------------------------------
-    # append slot: first empty (argmax over ~occupied)
-    slot_append = jnp.argmax(~occupied)
+    # append slot: first empty *logical* slot (argmax over ~occupied)
+    slot_append = jnp.argmax(~occupied & valid_slot)
     slot = jnp.where(hit, slot_hit, slot_append)
     write = same_worker_replace | do_reward_replace | do_aggregate | do_append
 
@@ -422,7 +429,8 @@ def jax_dequeue_burst(state: JaxQueueState, k: int
 
 
 def jax_enqueue_batch(state: JaxQueueState, clusters, workers, gen_times,
-                      rewards, payloads, reward_threshold: float = jnp.inf) -> JaxQueueState:
+                      rewards, payloads, reward_threshold: float = jnp.inf,
+                      capacity=None) -> JaxQueueState:
     """Sequential (scan) batch enqueue — an incast burst hitting the queue.
 
     Kept as the slow-path oracle for :func:`jax_enqueue_burst`: each scan step
@@ -432,7 +440,8 @@ def jax_enqueue_batch(state: JaxQueueState, clusters, workers, gen_times,
 
     def body(st, xs):
         c, w, t, r, p = xs
-        return jax_enqueue(st, c, w, t, r, p, reward_threshold), None
+        return jax_enqueue(st, c, w, t, r, p, reward_threshold,
+                           capacity), None
 
     state, _ = jax.lax.scan(body, state, (clusters, workers, gen_times, rewards, payloads))
     return state
@@ -445,7 +454,7 @@ _EV_RESET = 2  # slot payload restarts from this update (append / replace)
 
 
 def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
-                   reward_threshold, send=None):
+                   reward_threshold, send=None, capacity=None):
     """Scalar half of the burst: Algorithm 1 decisions for U updates.
 
     A ``lax.scan`` over the burst carrying only the ``(Q,)`` metadata columns
@@ -463,6 +472,10 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
     """
     if send is None:
         send = jnp.ones(clusters.shape, bool)
+    Q = state.cluster.shape[0]
+    # logical-slot mask: slots >= capacity never host an append, so one
+    # padded (Qmax,) buffer serves heterogeneous per-switch slot counts
+    valid_slot = jnp.arange(Q) < (Q if capacity is None else capacity)
     carry = (state.cluster, state.worker, state.seq, state.gen_time,
              state.reward, state.agg_count, state.replaceable, state.next_seq,
              state.n_dropped, state.n_agg, state.n_repl)
@@ -481,11 +494,11 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
         do_reward_drop = snd & hit & ~same_worker_replace & (rdiff < -reward_threshold)
         do_aggregate = snd & hit & ~same_worker_replace & ~do_reward_replace & ~do_reward_drop
 
-        full = jnp.all(occupied)
+        full = jnp.all(occupied | ~valid_slot)
         do_append = snd & ~hit & ~full
         do_drop_full = snd & ~hit & full
 
-        slot = jnp.where(hit, slot_hit, jnp.argmax(~occupied))
+        slot = jnp.where(hit, slot_hit, jnp.argmax(~occupied & valid_slot))
         write = same_worker_replace | do_reward_replace | do_aggregate | do_append
         onehot = (jnp.arange(cl.shape[0]) == slot) & write
 
@@ -517,7 +530,7 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
 
 def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
                       rewards, payloads, reward_threshold: float = jnp.inf,
-                      send=None) -> JaxQueueState:
+                      send=None, capacity=None) -> JaxQueueState:
     """Fused fast path: resolve a whole U-update incast burst in one pass.
 
     Semantics match ``jax_enqueue_batch`` (sequential Algorithm 1) exactly on
@@ -537,7 +550,8 @@ def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
     if U == 0:  # empty burst (drain-only cycle): nothing to resolve
         return state
     carry, slots, events = _burst_resolve(
-        state, clusters, workers, gen_times, rewards, reward_threshold, send)
+        state, clusters, workers, gen_times, rewards, reward_threshold, send,
+        capacity)
     (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr) = carry
 
     u_idx = jnp.arange(U, dtype=jnp.int32)
@@ -569,7 +583,8 @@ def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
 
 def jax_olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
                  payloads, k: int, reward_threshold: float = jnp.inf,
-                 send=None) -> Tuple[JaxQueueState, Dict[str, jnp.ndarray]]:
+                 send=None, capacity=None
+                 ) -> Tuple[JaxQueueState, Dict[str, jnp.ndarray]]:
     """One full data-plane cycle: burst enqueue then drain-k, in one trace.
 
     Exactly ``jax_enqueue_burst`` followed by ``jax_dequeue_burst`` — this
@@ -577,10 +592,12 @@ def jax_olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
     one fused executable) and the oracle the Pallas ``olaf_step`` kernel
     (``repro.kernels.olaf_step``) is proven against. ``send`` optionally
     gates each burst row (worker-side transmission control, §5): a gated-out
-    update is deferred and never touches the queue.
+    update is deferred and never touches the queue. ``capacity`` caps the
+    logical slot count below the padded buffer size (heterogeneous
+    per-switch slot vectors, see :func:`jax_enqueue`).
     """
     state = jax_enqueue_burst(state, clusters, workers, gen_times, rewards,
-                              payloads, reward_threshold, send)
+                              payloads, reward_threshold, send, capacity)
     return jax_dequeue_burst(state, k)
 
 

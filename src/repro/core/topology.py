@@ -1,0 +1,353 @@
+"""Declarative switch-topology specification for the OLAF data plane.
+
+The paper's evaluation (§8.3) hard-codes one SW1/SW2→SW3 fan-in; this
+module turns the topology into *data*. A :class:`TopologySpec` describes an
+arbitrary switch DAG — each switch forwards to at most one next hop, so the
+fabric is a forest of fan-in trees rooted at the PS egress points (chains,
+wide fan-in, leaf–spine/fat-tree, multi-rack, multi-PS egress are all
+instances) — and compiles it ONCE into static arrays the rest of the stack
+consumes:
+
+  * ``next_hop``      — ``(S,)`` int32 next-hop vector (−1 = PS egress);
+                        the hybrid data plane routes drained device rows
+                        with it (``repro.kernels.ops.olaf_forward``) and
+                        the per-event reference replay consults the same
+                        vector, so the two paths cannot diverge;
+  * ``adjacency``     — ``(S, S)`` bool, ``adjacency[u, v]`` iff ``u``
+                        feeds ``v`` (one-hot rows of ``next_hop``);
+  * ``reachability``  — ``(S, S)`` bool transitive closure:
+                        ``reachability[u, v]`` iff ``v`` lies on ``u``'s
+                        downstream path to its PS;
+  * ``queue_slots`` / ``rate_bps`` / ``prop_delay`` — per-switch slot,
+                        serialization-rate and propagation-delay vectors;
+  * ``topo_order``    — upstream-first topological drain order;
+  * ``upstreams``     — per switch, its upstream frontier (the switches
+                        whose next hop it is). ``flush_set(name)`` =
+                        the switch plus that frontier, the per-switch
+                        flush cadence of the hybrid window cursor.
+
+:func:`build_sim_cfg` spreads worker clusters over the spec's source
+switches and emits the :class:`~repro.core.netsim.SimCfg` wiring
+(``SwitchCfg``/``Link``) so every preset is a one-liner:
+``chain_cfg(6)``, ``fanin_cfg(4)``, ``fattree_cfg(2)``, ``multirack_cfg()``,
+``multips_cfg()`` — and ``repro.core.netsim.multihop_cfg`` builds its
+SW1/SW2/SW3 wiring from :func:`multihop_spec` too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.netsim import Link, SimCfg, SwitchCfg, WorkerCfg
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchSpec:
+    """One switch of the DAG: a queue plus a single serialized uplink."""
+
+    name: str
+    next_hop: Optional[str] = None  # switch name, or None => PS egress
+    queue_slots: int = 8
+    rate_gbps: float = 10.0  # uplink serialization capacity
+    prop_delay: float = 1e-6  # uplink propagation delay
+    queue: str = "olaf"  # "olaf" | "fifo"
+    reward_threshold: Optional[float] = None
+
+
+_UNSET = object()
+
+
+class TopologySpec:
+    """A compiled switch DAG (see module docstring for the array surface)."""
+
+    def __init__(self, switches: Sequence[SwitchSpec]) -> None:
+        self.switches: Tuple[SwitchSpec, ...] = tuple(switches)
+        self.names: List[str] = [s.name for s in self.switches]
+        if len(set(self.names)) != len(self.names):
+            raise ValueError(f"duplicate switch names: {self.names}")
+        self.index: Dict[str, int] = {n: i for i, n in enumerate(self.names)}
+        S = len(self.switches)
+        self.num_switches = S
+        self.next_hop = np.full((S,), -1, np.int32)
+        for i, s in enumerate(self.switches):
+            if s.next_hop is not None:
+                if s.next_hop not in self.index:
+                    raise ValueError(f"{s.name}: unknown next hop "
+                                     f"{s.next_hop!r}")
+                self.next_hop[i] = self.index[s.next_hop]
+        self.queue_slots = np.asarray(
+            [s.queue_slots for s in self.switches], np.int32)
+        self.rate_bps = np.asarray(
+            [s.rate_gbps * 1e9 for s in self.switches], np.float64)
+        self.prop_delay = np.asarray(
+            [s.prop_delay for s in self.switches], np.float64)
+        # adjacency: one-hot rows of the next-hop vector
+        self.adjacency = np.zeros((S, S), bool)
+        for u in range(S):
+            if self.next_hop[u] >= 0:
+                self.adjacency[u, self.next_hop[u]] = True
+        # acyclicity: walking the (out-degree <= 1) next-hop chain from any
+        # switch must terminate at a PS egress within S hops
+        for u in range(S):
+            v, hops = u, 0
+            while self.next_hop[v] >= 0:
+                v = int(self.next_hop[v])
+                hops += 1
+                if hops > S:
+                    raise ValueError(f"next-hop cycle reachable from "
+                                     f"{self.names[u]!r}")
+        # strict downstream reachability (transitive closure of adjacency)
+        reach = self.adjacency.copy()
+        for _ in range(S):
+            reach = reach | (reach @ self.adjacency)
+        self.reachability = reach
+        # upstream frontier + upstream-first topological drain order
+        self.upstreams: Tuple[Tuple[int, ...], ...] = tuple(
+            tuple(int(u) for u in np.nonzero(self.adjacency[:, v])[0])
+            for v in range(S))
+        indeg = self.adjacency.sum(axis=0).astype(int)
+        order, ready = [], [u for u in range(S) if indeg[u] == 0]
+        while ready:
+            u = ready.pop(0)
+            order.append(u)
+            v = int(self.next_hop[u])
+            if v >= 0:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    ready.append(v)
+        assert len(order) == S  # acyclic => Kahn consumes every switch
+        self.topo_order = np.asarray(order, np.int32)
+        self.egress: Tuple[int, ...] = tuple(
+            int(i) for i in np.nonzero(self.next_hop < 0)[0])
+        self.source_names: Tuple[str, ...] = tuple(
+            self.names[u] for u in range(S) if not self.upstreams[u])
+
+    # -- derived views ------------------------------------------------------
+    def flush_set(self, name: str) -> Tuple[str, ...]:
+        """The per-switch flush cadence: the departing switch plus its
+        upstream frontier, in topological (upstream-first) order."""
+        v = self.index[name]
+        members = set(self.upstreams[v]) | {v}
+        return tuple(self.names[u] for u in self.topo_order if u in members)
+
+    def switch_cfgs(self, queue: Optional[str] = None,
+                    reward_threshold=_UNSET) -> List[SwitchCfg]:
+        """Emit the netsim ``SwitchCfg``/``Link`` wiring for this spec.
+        ``queue``/``reward_threshold`` override every switch when given."""
+        return [
+            SwitchCfg(
+                name=s.name,
+                queue=queue if queue is not None else s.queue,
+                queue_slots=s.queue_slots,
+                reward_threshold=(s.reward_threshold
+                                  if reward_threshold is _UNSET
+                                  else reward_threshold),
+                uplink=Link(s.rate_gbps * 1e9, s.prop_delay),
+                next_hop=s.next_hop,
+            )
+            for s in self.switches
+        ]
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        hops = ", ".join(
+            f"{s.name}->{s.next_hop or 'PS'}" for s in self.switches)
+        return f"TopologySpec({hops})"
+
+
+def spec_from_switch_cfgs(switch_cfgs: Sequence[SwitchCfg]) -> TopologySpec:
+    """Compile a spec from existing netsim ``SwitchCfg`` wiring (the
+    backward-compatible entry the hybrid plane uses when no spec is
+    passed)."""
+    return TopologySpec([
+        SwitchSpec(name=c.name, next_hop=c.next_hop,
+                   queue_slots=c.queue_slots,
+                   rate_gbps=c.uplink.capacity_bps / 1e9,
+                   prop_delay=c.uplink.prop_delay, queue=c.queue,
+                   reward_threshold=c.reward_threshold)
+        for c in switch_cfgs
+    ])
+
+
+# --------------------------------------------------------------------------
+# Named presets. Rates default to the congested test/bench scale (the OLAF
+# operating point — queueing actually happens inside sub-second horizons);
+# pass paper-scale ``rate_gbps`` for uncongested line-rate runs.
+# --------------------------------------------------------------------------
+def multihop_spec(*, x1_gbps: float = 10.0, x2_gbps: float = 10.0,
+                  sw3_gbps: float = 10.0, sw12_slots: int = 5,
+                  sw3_slots: int = 8,
+                  reward_threshold: Optional[float] = None,
+                  queue: str = "olaf") -> TopologySpec:
+    """The paper's §8.3 SW1/SW2→SW3 fan-in (Fig. 9)."""
+    return TopologySpec([
+        SwitchSpec("SW1", next_hop="SW3", queue_slots=sw12_slots,
+                   rate_gbps=x1_gbps, queue=queue,
+                   reward_threshold=reward_threshold),
+        SwitchSpec("SW2", next_hop="SW3", queue_slots=sw12_slots,
+                   rate_gbps=x2_gbps, queue=queue,
+                   reward_threshold=reward_threshold),
+        SwitchSpec("SW3", next_hop=None, queue_slots=sw3_slots,
+                   rate_gbps=sw3_gbps, queue=queue,
+                   reward_threshold=reward_threshold),
+    ])
+
+
+def chain_spec(n: int = 3, *, rate_gbps: float = 0.6e-3,
+               queue_slots: int = 5, **kw) -> TopologySpec:
+    """A linear chain SW1 → SW2 → … → SWn → PS (workers enter at SW1)."""
+    assert n >= 1
+    return TopologySpec([
+        SwitchSpec(f"SW{i + 1}",
+                   next_hop=None if i == n - 1 else f"SW{i + 2}",
+                   queue_slots=queue_slots, rate_gbps=rate_gbps, **kw)
+        for i in range(n)
+    ])
+
+
+def fanin_spec(fan: int = 4, *, leaf_gbps: float = 0.4e-3,
+               core_gbps: float = 0.8e-3, leaf_slots: int = 4,
+               core_slots: int = 8, **kw) -> TopologySpec:
+    """Wide fan-in: LEAF1..LEAFfan → CORE → PS."""
+    leaves = [SwitchSpec(f"LEAF{i + 1}", next_hop="CORE",
+                         queue_slots=leaf_slots, rate_gbps=leaf_gbps, **kw)
+              for i in range(fan)]
+    return TopologySpec(
+        leaves + [SwitchSpec("CORE", next_hop=None, queue_slots=core_slots,
+                             rate_gbps=core_gbps, **kw)])
+
+
+def fattree_spec(k: int = 2, *, edge_gbps: float = 0.4e-3,
+                 agg_gbps: float = 0.6e-3, core_gbps: float = 1.0e-3,
+                 edge_slots: int = 4, agg_slots: int = 6,
+                 core_slots: int = 8, **kw) -> TopologySpec:
+    """Leaf–spine / fat-tree-style upstream tree: k pods of k edge
+    switches, each pod's edges feeding its aggregation switch, every
+    aggregation feeding one core, the core egressing to the PS
+    (k² + k + 1 switches)."""
+    switches: List[SwitchSpec] = []
+    for p in range(k):
+        for e in range(k):
+            switches.append(SwitchSpec(
+                f"EDGE{p + 1}{e + 1}", next_hop=f"AGG{p + 1}",
+                queue_slots=edge_slots, rate_gbps=edge_gbps, **kw))
+    for p in range(k):
+        switches.append(SwitchSpec(
+            f"AGG{p + 1}", next_hop="CORE", queue_slots=agg_slots,
+            rate_gbps=agg_gbps, **kw))
+    switches.append(SwitchSpec("CORE", next_hop=None, queue_slots=core_slots,
+                               rate_gbps=core_gbps, **kw))
+    return TopologySpec(switches)
+
+
+def multirack_spec(racks: int = 4, *, tor_gbps: float = 0.4e-3,
+                   agg_gbps: float = 0.6e-3, core_gbps: float = 1.0e-3,
+                   tor_slots: int = 4, agg_slots: int = 6,
+                   core_slots: int = 8, **kw) -> TopologySpec:
+    """Multi-rack: one ToR per rack, pairs of ToRs behind an aggregation
+    switch, all aggregations behind one core egress."""
+    switches = [SwitchSpec(f"TOR{r + 1}", next_hop=f"RAGG{r // 2 + 1}",
+                           queue_slots=tor_slots, rate_gbps=tor_gbps, **kw)
+                for r in range(racks)]
+    for a in range((racks + 1) // 2):
+        switches.append(SwitchSpec(
+            f"RAGG{a + 1}", next_hop="CORE", queue_slots=agg_slots,
+            rate_gbps=agg_gbps, **kw))
+    switches.append(SwitchSpec("CORE", next_hop=None, queue_slots=core_slots,
+                               rate_gbps=core_gbps, **kw))
+    return TopologySpec(switches)
+
+
+def multips_spec(groups: int = 2, *, leaves_per_group: int = 2,
+                 leaf_gbps: float = 0.4e-3, egress_gbps: float = 0.7e-3,
+                 leaf_slots: int = 4, egress_slots: int = 6,
+                 **kw) -> TopologySpec:
+    """Multi-PS egress: independent sub-trees, each draining to its own
+    parameter server (several switches with ``next_hop=None``)."""
+    switches: List[SwitchSpec] = []
+    for g in range(groups):
+        for i in range(leaves_per_group):
+            switches.append(SwitchSpec(
+                f"G{g + 1}L{i + 1}", next_hop=f"G{g + 1}E",
+                queue_slots=leaf_slots, rate_gbps=leaf_gbps, **kw))
+    for g in range(groups):
+        switches.append(SwitchSpec(
+            f"G{g + 1}E", next_hop=None, queue_slots=egress_slots,
+            rate_gbps=egress_gbps, **kw))
+    return TopologySpec(switches)
+
+
+# --------------------------------------------------------------------------
+# SimCfg wiring from a spec
+# --------------------------------------------------------------------------
+def build_sim_cfg(spec: TopologySpec, *, queue: Optional[str] = None,
+                  clusters_per_ingress: int = 2,
+                  workers_per_cluster: int = 2,
+                  gen_interval: float = 0.02, gen_jitter: float = 0.3,
+                  size_bits: int = 8192, horizon: float = 0.3,
+                  n_updates: Optional[int] = None, tx_control=None,
+                  seed: int = 0,
+                  reward_threshold=_UNSET) -> SimCfg:
+    """Netsim wiring for a topology spec: ``SwitchCfg``/``Link`` per switch
+    plus ``clusters_per_ingress`` worker clusters spread over the spec's
+    source switches (the leaves of the DAG)."""
+    workers: List[WorkerCfg] = []
+    wid = cluster = 0
+    for ing in spec.source_names:
+        for _ in range(clusters_per_ingress):
+            for _ in range(workers_per_cluster):
+                workers.append(WorkerCfg(
+                    worker_id=wid, cluster_id=cluster, ingress_switch=ing,
+                    gen_interval=gen_interval, gen_jitter=gen_jitter,
+                    n_updates=n_updates, size_bits=size_bits))
+                wid += 1
+            cluster += 1
+    return SimCfg(switches=spec.switch_cfgs(queue, reward_threshold),
+                  workers=workers, horizon=horizon, tx_control=tx_control,
+                  seed=seed)
+
+
+def resolve_sim_cfg(topology, *, seed: int = 0, **cfg_kw) -> SimCfg:
+    """One ``topology=`` argument for the hybrid entry points: either a
+    :class:`TopologySpec` (worker clusters spread over its sources via
+    :func:`build_sim_cfg` with ``cfg_kw``) or an already-built ``SimCfg``
+    from a ``*_cfg`` preset one-liner (in which case stray ``cfg_kw``
+    would be silently dead — rejected instead)."""
+    if isinstance(topology, SimCfg):
+        if cfg_kw:
+            raise TypeError(f"topology is a prebuilt SimCfg; the extra "
+                            f"kwargs {sorted(cfg_kw)} would be ignored — "
+                            f"pass them to its *_cfg preset instead")
+        return topology
+    return build_sim_cfg(topology, seed=seed, **cfg_kw)
+
+
+def chain_cfg(n: int = 3, *, queue: str = "olaf", seed: int = 0,
+              spec_kw: Optional[dict] = None, **cfg_kw) -> SimCfg:
+    return build_sim_cfg(chain_spec(n, **(spec_kw or {})), queue=queue,
+                         seed=seed, **cfg_kw)
+
+
+def fanin_cfg(fan: int = 4, *, queue: str = "olaf", seed: int = 0,
+              spec_kw: Optional[dict] = None, **cfg_kw) -> SimCfg:
+    return build_sim_cfg(fanin_spec(fan, **(spec_kw or {})), queue=queue,
+                         seed=seed, **cfg_kw)
+
+
+def fattree_cfg(k: int = 2, *, queue: str = "olaf", seed: int = 0,
+                spec_kw: Optional[dict] = None, **cfg_kw) -> SimCfg:
+    return build_sim_cfg(fattree_spec(k, **(spec_kw or {})), queue=queue,
+                         seed=seed, **cfg_kw)
+
+
+def multirack_cfg(racks: int = 4, *, queue: str = "olaf", seed: int = 0,
+                  spec_kw: Optional[dict] = None, **cfg_kw) -> SimCfg:
+    return build_sim_cfg(multirack_spec(racks, **(spec_kw or {})),
+                         queue=queue, seed=seed, **cfg_kw)
+
+
+def multips_cfg(groups: int = 2, *, queue: str = "olaf", seed: int = 0,
+                spec_kw: Optional[dict] = None, **cfg_kw) -> SimCfg:
+    return build_sim_cfg(multips_spec(groups, **(spec_kw or {})),
+                         queue=queue, seed=seed, **cfg_kw)

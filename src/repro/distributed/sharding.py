@@ -260,10 +260,14 @@ def to_named(tree, mesh: Mesh):
 # devices the axis is split over a dedicated "switch" mesh with shard_map,
 # so each device runs its slice of the same single launch.
 # ---------------------------------------------------------------------------
-def switch_mesh(n_switches: int) -> Mesh:
+def switch_mesh(n_switches) -> Mesh:
     """1-D mesh on axis ``"switch"`` sized to the largest divisor of
     ``n_switches`` that the available devices support (1 on this CPU
-    container, up to ``n_switches`` on a pod slice)."""
+    container, up to ``n_switches`` on a pod slice). Accepts either the
+    switch count or a compiled ``repro.core.topology.TopologySpec`` (any
+    spec DAG shards by its switch axis), so arbitrary topologies — not
+    just the 3-switch §8.3 fan-in — split over the device mesh."""
+    n_switches = int(getattr(n_switches, "num_switches", n_switches))
     devs = jax.devices()
     n = 1
     for d in range(min(n_switches, len(devs)), 0, -1):
@@ -300,10 +304,16 @@ def olaf_combine_sharded(slots, counts, updates, clusters, gate, *,
 
 
 def olaf_step_sharded(states, clusters, workers, gen_times, rewards,
-                      payloads, reward_threshold=float("inf"), send=None, *,
-                      k: int, mesh: Optional[Mesh] = None, **kw):
+                      payloads, reward_threshold=float("inf"), send=None,
+                      capacities=None, *, k: int,
+                      mesh: Optional[Mesh] = None, **kw):
     """``ops.olaf_step_multi`` with the S axis split over the switch mesh:
-    the full enqueue→drain cycle for every switch in one sharded launch."""
+    the full enqueue→drain cycle for every switch in one sharded launch.
+
+    ``capacities`` is an optional ``(S,)`` per-switch logical slot vector
+    (``TopologySpec.queue_slots``): switches with heterogeneous queue
+    sizes ride one padded ``(S, Qmax)`` state, and the vector shards with
+    its switch."""
     import jax.numpy as jnp
 
     from repro.kernels import ops
@@ -313,14 +323,17 @@ def olaf_step_sharded(states, clusters, workers, gen_times, rewards,
         send = jnp.ones(clusters.shape, bool)
     thr = jnp.broadcast_to(jnp.asarray(reward_threshold, jnp.float32),
                            (clusters.shape[0], 1))
+    cap = jnp.broadcast_to(
+        jnp.asarray(states.cluster.shape[1] if capacities is None
+                    else capacities, jnp.int32), (clusters.shape[0],))
 
-    def fn(st, c, w, t, r, p, th, sn):
-        return ops.olaf_step_multi(st, c, w, t, r, p, th[0, 0], sn, k=k,
-                                   **kw)
+    def fn(st, c, w, t, r, p, th, sn, cp):
+        return ops.olaf_step_multi(st, c, w, t, r, p, th[0, 0], sn, cp,
+                                   k=k, **kw)
 
     if mesh.devices.size <= 1:
         return fn(states, clusters, workers, gen_times, rewards, payloads,
-                  thr, send)
+                  thr, send, cap)
     from jax.experimental.shard_map import shard_map
     spec = P("switch")
     state_specs = jax.tree.map(lambda _: spec, states)
@@ -329,6 +342,7 @@ def olaf_step_sharded(states, clusters, workers, gen_times, rewards,
                       gen_time=spec, reward=spec, agg_count=spec,
                       payload=spec))
     return shard_map(fn, mesh=mesh,
-                     in_specs=(state_specs,) + (spec,) * 7,
+                     in_specs=(state_specs,) + (spec,) * 8,
                      out_specs=out_specs, check_rep=False)(
-        states, clusters, workers, gen_times, rewards, payloads, thr, send)
+        states, clusters, workers, gen_times, rewards, payloads, thr, send,
+        cap)

@@ -159,7 +159,7 @@ _EV_RESET = 2
 
 
 def alg1_resolve(cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
-                 thr, U, read_update, qidx, uidx):
+                 thr, U, read_update, qidx, uidx, cap=None):
     """In-kernel Algorithm 1 scalar resolve over a U-update burst.
 
     The same sequential walk as ``olaf_queue._burst_resolve``, written to
@@ -178,8 +178,14 @@ def alg1_resolve(cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
     events_v, contributes, last_reset)``: the post-burst metadata columns
     and counters, the per-update slot/event assignment, and the
     telescoped-mean bookkeeping consumed by the payload pass.
+
+    ``cap`` (scalar, default the buffer size Q) is the queue's *logical*
+    slot count: slots at index >= cap never host an append, so one padded
+    (Qmax,) buffer batches switches with heterogeneous per-switch slot
+    vectors (``TopologySpec.queue_slots``) in a single launch.
     """
     Q = qidx.shape[0]
+    valid_slot = qidx < (Q if cap is None else cap)
 
     def body(u, carry):
         (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
@@ -202,13 +208,13 @@ def alg1_resolve(cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
         do_rr = snd & hit & ~swr & (rdiff > thr)
         do_rd = snd & hit & ~swr & (rdiff < -thr)
         do_agg = snd & hit & ~swr & ~do_rr & ~do_rd
-        full = jnp.all(occupied)
+        full = jnp.all(occupied | ~valid_slot)
         do_append = snd & ~hit & ~full
         do_dropf = snd & ~hit & full
 
         # min-index in place of argmax (lowers without gather support)
         slot_hit = jnp.min(jnp.where(same, qidx, Q))
-        slot_append = jnp.min(jnp.where(~occupied, qidx, Q))
+        slot_append = jnp.min(jnp.where(~occupied & valid_slot, qidx, Q))
         slot = jnp.minimum(jnp.where(hit, slot_hit, slot_append), Q - 1)
         write = swr | do_rr | do_agg | do_append
         onehot = (qidx == slot) & write
@@ -262,7 +268,8 @@ def _enqueue_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
     Scalar-prefetch SMEM operands:
       qi_ref: (5, Q) int32 — queue [cluster, worker, seq, agg_count, replaceable]
       qf_ref: (2, Q) f32   — queue [gen_time, reward]
-      qc_ref: (1, 4) int32 — counters [next_seq, n_dropped, n_agg, n_repl]
+      qc_ref: (1, 5) int32 — [next_seq, n_dropped, n_agg, n_repl, capacity]
+                 (capacity = the logical slot count; Q when not capped)
       ui_ref: (2, U) int32 — burst [clusters, workers]
       uf_ref: (3, U) f32   — burst [gen_times, rewards, reward_threshold row]
     VMEM tiles: updates (U, Dt), slotpay (Qt, Dt).
@@ -297,7 +304,7 @@ def _enqueue_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
             qi_ref[0, :], qi_ref[1, :], qi_ref[2, :], qf_ref[0, :],
             qf_ref[1, :], qi_ref[3, :], qi_ref[4, :],
             qc_ref[0, 0], qc_ref[0, 1], qc_ref[0, 2], qc_ref[0, 3],
-            uf_ref[2, 0], U, read_update, qidx, uidx)
+            uf_ref[2, 0], U, read_update, qidx, uidx, cap=qc_ref[0, 4])
 
         slots_scr[0, :] = slots_v
         contrib_scr[0, :] = contributes.astype(jnp.int32)
@@ -339,7 +346,8 @@ def _enqueue_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
 def olaf_enqueue_pallas(cluster, worker, seq, gen_time, reward, agg_count,
                         replaceable, next_seq, n_dropped, n_agg, n_repl,
                         payload, clusters, workers, gen_times, rewards,
-                        payloads, reward_threshold=float("inf"), *,
+                        payloads, reward_threshold=float("inf"),
+                        capacity=None, *,
                         tile_q: int = DEFAULT_TILE_Q,
                         tile_d: int = DEFAULT_TILE_D,
                         interpret: bool = True):
@@ -358,11 +366,14 @@ def olaf_enqueue_pallas(cluster, worker, seq, gen_time, reward, agg_count,
     tile_q = _pick_tile_q(Q, tile_q)
     tile_d = _pick_tile_q(D, tile_d)  # same largest-divisor shrink for D
     i32, f32 = jnp.int32, jnp.float32
+    if capacity is None:
+        capacity = Q
     qi = jnp.stack([cluster.astype(i32), worker.astype(i32), seq.astype(i32),
                     agg_count.astype(i32), replaceable.astype(i32)])
     qf = jnp.stack([gen_time.astype(f32), reward.astype(f32)])
     qc = jnp.stack([jnp.asarray(next_seq, i32), jnp.asarray(n_dropped, i32),
-                    jnp.asarray(n_agg, i32), jnp.asarray(n_repl, i32)])[None]
+                    jnp.asarray(n_agg, i32), jnp.asarray(n_repl, i32),
+                    jnp.asarray(capacity, i32)])[None]
     ui = jnp.stack([clusters.astype(i32), workers.astype(i32)])
     uf = jnp.stack([gen_times.astype(f32), rewards.astype(f32),
                     jnp.full((U,), reward_threshold, f32)])

@@ -64,7 +64,10 @@ def _olaf_step_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
     Scalar-prefetch SMEM operands (leading S axis on all of them):
       qi_ref: (S, 5, Q) int32 — [cluster, worker, seq, agg_count, replaceable]
       qf_ref: (S, 2, Q) f32   — [gen_time, reward]
-      qc_ref: (S, 1, 4) int32 — [next_seq, n_dropped, n_agg, n_repl]
+      qc_ref: (S, 1, 5) int32 — [next_seq, n_dropped, n_agg, n_repl,
+                 capacity] (capacity = the per-switch logical slot count —
+                 heterogeneous ``TopologySpec.queue_slots`` ride in one
+                 padded (S, Qmax) launch; Q when not capped)
       ui_ref: (S, 3, U) int32 — burst [clusters, workers, send]
       uf_ref: (S, 3, U) f32   — burst [gen_times, rewards, threshold row]
     VMEM tiles: updates (1, U, Dt), slotpay (1, Qt, Dt).
@@ -101,7 +104,8 @@ def _olaf_step_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
             qi_ref[s, 4, :],
             qc_ref[s, 0, 0], qc_ref[s, 0, 1], qc_ref[s, 0, 2],
             qc_ref[s, 0, 3],
-            uf_ref[s, 2, 0], U, read_update, qidx, uidx)
+            uf_ref[s, 2, 0], U, read_update, qidx, uidx,
+            cap=qc_ref[s, 0, 4])
 
         slots_scr[0, :] = slots_v
         contrib_scr[0, :] = contributes.astype(jnp.int32)
@@ -210,8 +214,8 @@ def olaf_step_pallas(cluster, worker, seq, gen_time, reward, agg_count,
                      replaceable, next_seq, n_dropped, n_agg, n_repl,
                      payload, clusters, workers, gen_times, rewards,
                      payloads, k: int, reward_threshold=float("inf"),
-                     send=None, *, tile_q: int = 8, tile_d: int = 512,
-                     interpret: bool = True):
+                     send=None, capacity=None, *, tile_q: int = 8,
+                     tile_d: int = 512, interpret: bool = True):
     """Single-launch fused enqueue→drain cycle over raw queue-state arrays.
 
     Rank-2 ``payload (Q, D)`` runs one queue; a leading S axis on every
@@ -246,11 +250,13 @@ def olaf_step_pallas(cluster, worker, seq, gen_time, reward, agg_count,
     i32, f32 = jnp.int32, jnp.float32
     if send is None:
         send = jnp.ones((S, U), i32)
+    cap = jnp.broadcast_to(
+        jnp.asarray(Q if capacity is None else capacity, i32), (S,))
     qi = jnp.stack([cluster.astype(i32), worker.astype(i32), seq.astype(i32),
                     agg_count.astype(i32), replaceable.astype(i32)], axis=1)
     qf = jnp.stack([gen_time.astype(f32), reward.astype(f32)], axis=1)
     qc = jnp.stack([jnp.asarray(next_seq, i32), jnp.asarray(n_dropped, i32),
-                    jnp.asarray(n_agg, i32), jnp.asarray(n_repl, i32)],
+                    jnp.asarray(n_agg, i32), jnp.asarray(n_repl, i32), cap],
                    axis=1)[:, None, :]
     ui = jnp.stack([clusters.astype(i32), workers.astype(i32),
                     send.astype(i32)], axis=1)

@@ -77,10 +77,44 @@ def olaf_combine_window(slots, counts, updates, clusters, gate, reset_slots,
 
 
 @functools.partial(jax.jit, static_argnames=("tile_q", "tile_d", "interpret"))
+def olaf_forward(slots, counts, updates, clusters, gate, reset_slots,
+                 drain_sw, drain_slot, *, tile_q: int = 8, tile_d: int = 512,
+                 interpret: bool = _INTERPRET):
+    """Window combine + device-resident forwarding pass, one dispatch.
+
+    First lands the pending transmission window (exactly
+    :func:`olaf_combine_window`; skipped when ``updates`` is empty — a
+    drain-only boundary), then routes the departing rows out of the
+    ``(S, Q, D)`` slot buffer with a next-hop one-hot gather/scatter:
+    ``drain_sw``/``drain_slot`` ``(K,)`` name the departing (switch, slot)
+    pairs; their rows are gathered from the *post-combine* buffer and the
+    slots cleared. Returns ``(new_slots, new_counts, drained (K, D))``.
+
+    The drained rows stay device-resident: the hybrid control plane
+    resolves each row's next hop from the compiled ``TopologySpec``
+    next-hop vector and hands the row straight into the downstream
+    switch's next window, so a transit hop (SW1→SW3-style forwarding, or
+    any spec DAG edge) never round-trips payload bytes through the host.
+    """
+    if updates.shape[1] > 0:
+        slots, counts = olaf_combine_window(
+            slots, counts, updates, clusters, gate, reset_slots,
+            tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+    S, Q, _ = slots.shape
+    drain_sw = jnp.asarray(drain_sw, jnp.int32)
+    drain_slot = jnp.asarray(drain_slot, jnp.int32)
+    # O(K·D) indexed gather + clear — the departing rows, not the buffer
+    drained = slots[drain_sw, drain_slot]  # (K, D)
+    popped = jnp.zeros((S, Q), bool).at[drain_sw, drain_slot].set(True)
+    return (jnp.where(popped[..., None], 0.0, slots),
+            jnp.where(popped, 0, counts), drained)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_d", "interpret"))
 def olaf_enqueue(state: JaxQueueState, clusters, workers, gen_times, rewards,
-                 payloads, reward_threshold=jnp.inf, *, tile_q: int = 8,
-                 tile_d: int = 512, interpret: bool = _INTERPRET
-                 ) -> JaxQueueState:
+                 payloads, reward_threshold=jnp.inf, capacity=None, *,
+                 tile_q: int = 8, tile_d: int = 512,
+                 interpret: bool = _INTERPRET) -> JaxQueueState:
     """Fused single-launch burst enqueue (Algorithm 1 for U updates).
 
     Drop-in replacement for ``repro.core.olaf_queue.jax_enqueue_burst`` (the
@@ -95,7 +129,7 @@ def olaf_enqueue(state: JaxQueueState, clusters, workers, gen_times, rewards,
         state.agg_count, state.replaceable, state.next_seq, state.n_dropped,
         state.n_agg, state.n_repl, state.payload,
         clusters, workers, gen_times, rewards, payloads, reward_threshold,
-        tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+        capacity, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
     return JaxQueueState(
         cluster=mi[0], worker=mi[1], seq=mi[2], gen_time=mf[0], reward=mf[1],
         agg_count=mi[3], replaceable=mi[4].astype(bool), payload=new_payload,
@@ -130,8 +164,8 @@ def _olaf_step_unpack(new_payload, drained, mi, mf, di, df):
 @functools.partial(jax.jit, static_argnames=(
     "k", "tile_q", "tile_d", "interpret", "impl"), donate_argnums=0)
 def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
-              payloads, reward_threshold=jnp.inf, send=None, *, k: int,
-              tile_q: int = 8, tile_d: int = 512,
+              payloads, reward_threshold=jnp.inf, send=None, capacity=None,
+              *, k: int, tile_q: int = 8, tile_d: int = 512,
               interpret: bool = _INTERPRET, impl: str = "auto"):
     """Fused full-cycle data-plane step: burst enqueue → drain-k, one launch.
 
@@ -139,8 +173,9 @@ def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
     jax_dequeue_burst`` pipeline (the oracle it is tested against in
     tests/test_olaf_step.py); returns the same ``(new_state, out)`` pair.
     ``send`` optionally gates each burst row (worker-side transmission
-    control). The queue state is donated: treat the passed-in state as
-    consumed.
+    control); ``capacity`` caps the logical slot count below the padded
+    buffer size (per-switch ``TopologySpec.queue_slots``). The queue state
+    is donated: treat the passed-in state as consumed.
 
     ``impl`` selects the execution path: ``"pallas"`` is the single-launch
     kernel (the TPU fast path — resolve, drain select and payload movement
@@ -155,13 +190,13 @@ def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
         impl = "xla" if (interpret or clusters.shape[0] == 0) else "pallas"
     if impl == "xla":
         return jax_olaf_step(state, clusters, workers, gen_times, rewards,
-                             payloads, k, reward_threshold, send)
+                             payloads, k, reward_threshold, send, capacity)
     outs = olaf_step_pallas(
         state.cluster, state.worker, state.seq, state.gen_time, state.reward,
         state.agg_count, state.replaceable, state.next_seq, state.n_dropped,
         state.n_agg, state.n_repl, state.payload,
         clusters, workers, gen_times, rewards, payloads, k, reward_threshold,
-        send, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+        send, capacity, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
     return _olaf_step_unpack(*outs)
 
 
@@ -169,8 +204,9 @@ def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
     "k", "tile_q", "tile_d", "interpret", "impl"), donate_argnums=0)
 def olaf_step_multi(states: JaxQueueState, clusters, workers, gen_times,
                     rewards, payloads, reward_threshold=jnp.inf, send=None,
-                    *, k: int, tile_q: int = 8, tile_d: int = 512,
-                    interpret: bool = _INTERPRET, impl: str = "auto"):
+                    capacity=None, *, k: int, tile_q: int = 8,
+                    tile_d: int = 512, interpret: bool = _INTERPRET,
+                    impl: str = "auto"):
     """Multi-queue fused cycle: every operand carries a leading S axis.
 
     ``states`` is a JaxQueueState of (S, Q)/(S, Q, D)/(S,) arrays; burst
@@ -187,16 +223,20 @@ def olaf_step_multi(states: JaxQueueState, clusters, workers, gen_times,
             send = jnp.ones(clusters.shape, bool)
         thr = jnp.broadcast_to(jnp.asarray(reward_threshold, jnp.float32),
                                (clusters.shape[0],))
+        cap = jnp.broadcast_to(
+            jnp.asarray(states.cluster.shape[1] if capacity is None
+                        else capacity, jnp.int32), (clusters.shape[0],))
         return jax.vmap(
-            lambda st, c, w, t, r, p, th, sn: jax_olaf_step(
-                st, c, w, t, r, p, k, th, sn)
-        )(states, clusters, workers, gen_times, rewards, payloads, thr, send)
+            lambda st, c, w, t, r, p, th, sn, cp: jax_olaf_step(
+                st, c, w, t, r, p, k, th, sn, cp)
+        )(states, clusters, workers, gen_times, rewards, payloads, thr, send,
+          cap)
     outs = olaf_step_pallas(
         states.cluster, states.worker, states.seq, states.gen_time,
         states.reward, states.agg_count, states.replaceable, states.next_seq,
         states.n_dropped, states.n_agg, states.n_repl, states.payload,
         clusters, workers, gen_times, rewards, payloads, k, reward_threshold,
-        send, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+        send, capacity, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
     return _olaf_step_unpack(*outs)
 
 

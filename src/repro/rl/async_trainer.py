@@ -56,6 +56,12 @@ class AsyncTrainConfig:
     # per-pop host-sync apply was removed); ACKs between drains carry the
     # then-current (possibly stale) weights.
     ps_drain_k: int = 1
+    # Optional repro.core.topology.TopologySpec: replaces the single "ACC"
+    # accelerator switch with the spec's whole switch DAG (chain, fan-in,
+    # fat-tree, multi-rack, multi-PS...). Worker clusters are spread
+    # round-robin over the spec's source switches; ``queue`` and
+    # ``reward_threshold`` above override every switch.
+    topology: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -101,20 +107,30 @@ class AsyncDRLTrainer:
         self._ps_buf: List[tuple] = []
         rng = np.random.default_rng(cfg.seed)
 
+        if cfg.topology is not None:
+            # the declarative path: the spec's switch DAG replaces the
+            # single accelerator queue; clusters spread over its sources
+            switches = cfg.topology.switch_cfgs(
+                queue=cfg.queue, reward_threshold=cfg.reward_threshold)
+            ingress = list(cfg.topology.source_names)
+        else:
+            switches = [SwitchCfg(
+                "ACC", queue=cfg.queue, queue_slots=cfg.queue_slots,
+                uplink=Link(cfg.out_gbps * 1e9), next_hop=None,
+                reward_threshold=cfg.reward_threshold)]
+            ingress = ["ACC"]
         workers = []
         for i in range(n_workers):
             speed = 1.0 + cfg.heterogeneity * rng.uniform(-1, 1)
+            cluster = i % cfg.n_clusters
             workers.append(WorkerCfg(
-                worker_id=i, cluster_id=i % cfg.n_clusters,
-                ingress_switch="ACC",
+                worker_id=i, cluster_id=cluster,
+                ingress_switch=ingress[cluster % len(ingress)],
                 gen_interval=cfg.base_interval * speed, gen_jitter=0.3,
                 n_updates=cfg.n_updates_per_worker,
                 size_bits=int(32 * flat0.size + 32)))
-        sw = SwitchCfg("ACC", queue=cfg.queue, queue_slots=cfg.queue_slots,
-                       uplink=Link(cfg.out_gbps * 1e9), next_hop=None,
-                       reward_threshold=cfg.reward_threshold)
         self.sim_cfg = SimCfg(
-            switches=[sw], workers=workers, horizon=cfg.horizon,
+            switches=switches, workers=workers, horizon=cfg.horizon,
             tx_control=cfg.tx_control, seed=cfg.seed,
             payload_fn=self._make_payload,
             on_deliver=self._on_deliver, on_ack=self._on_ack)
@@ -203,8 +219,9 @@ def run_hybrid_ppo(*, env: str = "cartpole", ppo_cfg: Optional[PPOConfig] = None
                    ps_cfg: Optional[PSConfig] = None, n_envs: int = 2,
                    local_lr: float = 5e-3, seed: int = 0,
                    interpret: bool = True, sharded: bool = True,
-                   batched: bool = True, **multihop_kw):
-    """§8.3 multi-switch hybrid run fed by **real PPO gradients** end to end.
+                   batched: bool = True, topology=None,
+                   flush_cadence: bool = True, **multihop_kw):
+    """Multi-switch hybrid run fed by **real PPO gradients** end to end.
 
     Every generated update's payload is a real flattened PPO gradient (and
     its reward the episode mean) from the owning worker's current local
@@ -212,15 +229,21 @@ def run_hybrid_ppo(*, env: str = "cartpole", ppo_cfg: Optional[PPOConfig] = None
     only and is consumed per transmission window (``batched=True`` routes
     through ``HybridMultiSwitchDataPlane.feed_window``: one host-batched
     Algorithm 1 classify pass and one staged gradient-block put per
-    window); the SW1/SW2/SW3 payload combining runs as one sharded
+    window); all switches' payload combining runs as one sharded
     multi-queue launch per window (``repro.core.hybrid``), and every PS
     delivery is applied through ``ParameterServer.on_updates`` with its
     combined packet's agg_count weight, reward and generation time.
+
+    ``topology`` selects the switch DAG: a ``repro.core.topology.
+    TopologySpec`` (worker clusters spread over its source switches) or a
+    prebuilt ``SimCfg`` preset; the default is the §8.3 SW1/SW2/SW3
+    fan-in via ``multihop_cfg(**multihop_kw)``.
 
     Returns ``(HybridResult, ParameterServer, SimCfg)``.
     """
     from repro.core.hybrid import run_hybrid_multihop
     from repro.core.netsim import multihop_cfg
+    from repro.core.topology import resolve_sim_cfg
 
     env_obj = make_env(env)
     pcfg = dataclasses.replace(ppo_cfg or PPOConfig(),
@@ -230,7 +253,10 @@ def run_hybrid_ppo(*, env: str = "cartpole", ppo_cfg: Optional[PPOConfig] = None
     flat0, _ = flatten_params(params0)
     dim = int(np.asarray(flat0).size)
 
-    cfg = multihop_cfg("olaf", seed=seed, **multihop_kw)
+    if topology is None:
+        cfg = multihop_cfg("olaf", seed=seed, **multihop_kw)
+    else:
+        cfg = resolve_sim_cfg(topology, seed=seed, **multihop_kw)
     worker_params = {w.worker_id: params0 for w in cfg.workers}
     worker_keys = {w.worker_id: jax.random.key(seed * 7919 + w.worker_id)
                    for w in cfg.workers}
@@ -249,7 +275,8 @@ def run_hybrid_ppo(*, env: str = "cartpole", ppo_cfg: Optional[PPOConfig] = None
     hyb, cfg = run_hybrid_multihop(dim, seed=seed, interpret=interpret,
                                    payload_source=payload_source,
                                    sim_cfg=cfg, sharded=sharded,
-                                   batched=batched)
+                                   batched=batched,
+                                   flush_cadence=flush_cadence)
     ps = ParameterServer(np.asarray(flat0), ps_cfg or PSConfig())
     for t, upd, row in hyb.delivered:  # deliveries -> reward-gated PS apply
         ps.on_updates(t, np.asarray(row, np.float32)[None],

@@ -42,6 +42,9 @@ def _assert_results_equal(a, b):
     assert a.residual_slot_counts == b.residual_slot_counts
     assert a.launches == b.launches
     assert a.combined_updates == b.combined_updates
+    assert a.forward_launches == b.forward_launches
+    assert a.switch_launches == b.switch_launches
+    assert a.forwarded == b.forwarded
 
 
 def _payload_source(seed, dim):
@@ -115,9 +118,14 @@ def test_windowed_replay_equivalent_on_synthetic_rows():
 # Forward matching
 # ---------------------------------------------------------------------------
 def _two_upstream_plane():
+    """SW A's uplink has a much longer propagation delay than SW B's, so a
+    packet departing A *earlier* arrives at SW C *later* — the cross-link
+    overtaking case both forwarding paths must resolve."""
     switches = [
-        SwitchCfg("SWA", queue_slots=4, next_hop="SWC"),
-        SwitchCfg("SWB", queue_slots=4, next_hop="SWC"),
+        SwitchCfg("SWA", queue_slots=4, next_hop="SWC",
+                  uplink=Link(40e9, prop_delay=0.010)),
+        SwitchCfg("SWB", queue_slots=4, next_hop="SWC",
+                  uplink=Link(40e9, prop_delay=0.007)),
         SwitchCfg("SWC", queue_slots=4, next_hop=None),
     ]
     rows = np.eye(2, DIM, dtype=np.float32)  # distinguishable payloads
@@ -133,8 +141,11 @@ def _two_upstream_events():
     """Crafted trace: two upstream switches dequeue same-flow packets
     (same cluster AND worker id) before either reaches SW C — the
     ``(cluster_id, worker_id)`` match alone is ambiguous, and the later
-    departure (B) arrives *first*, so dequeue order alone picks wrongly
-    too; only ``gen_time``/``seq`` resolve it."""
+    departure (B at 0.013, prop 7 ms -> arrives 0.020) overtakes the
+    earlier one (A at 0.011, prop 10 ms -> arrives 0.021), so dequeue
+    order alone picks wrongly too. The reference path resolves it on
+    ``gen_time``/``seq``; the batched path on the spec-computed arrival
+    times."""
     a, b = _mk(0.010), _mk(0.012)
     return [
         (0.010, "SWA", "enqueue", a),
@@ -148,13 +159,22 @@ def _two_upstream_events():
         # forwarded snapshots carry the upstream departure seq (>= 0)
         (0.020, "SWC", "enqueue", _mk(0.012, seq=0)),  # B first
         (0.020, "SWC", "lock", _mk(0.012, seq=0)),
-        (0.021, "SWC", "window", None),
-        (0.021, "SWC", "dequeue", _mk(0.012)),
-        (0.022, "SWC", "enqueue", _mk(0.010, seq=0)),
-        (0.022, "SWC", "lock", _mk(0.010, seq=0)),
-        (0.023, "SWC", "window", None),
-        (0.023, "SWC", "dequeue", _mk(0.010)),
+        (0.0205, "SWC", "window", None),
+        (0.0205, "SWC", "dequeue", _mk(0.012)),
+        (0.021, "SWC", "enqueue", _mk(0.010, seq=0)),
+        (0.021, "SWC", "lock", _mk(0.010, seq=0)),
+        (0.022, "SWC", "window", None),
+        (0.022, "SWC", "dequeue", _mk(0.010)),
     ]
+
+
+def _in_flight(plane, batched):
+    """The in-flight transit metadata, whichever structure the mode uses."""
+    if batched:
+        return [u for _, _, u, _ in sorted(plane._transit[
+            plane.index["SWC"]])]
+    return [q[0][1] for n in ("SWA", "SWB") for q in [plane._forward[n]]
+            if q]
 
 
 @pytest.mark.parametrize("batched", [False, True])
@@ -163,14 +183,15 @@ def test_two_upstream_same_flow_heads_disambiguate(batched):
     plane = HybridMultiSwitchDataPlane(switches, {"SWA", "SWB"}, DIM, rows)
     events = _two_upstream_events()
     # feed up to the first SW C arrival and confirm the trace really puts
-    # the ambiguous same-flow heads in both upstream forward queues
+    # two ambiguous same-flow packets in flight at once
     if batched:
         plane.feed_window(events[:8])
     else:
         for ev in events[:8]:
             plane.feed(*ev)
-    assert len(plane._forward["SWA"]) == len(plane._forward["SWB"]) == 1
-    ua, ub = plane._forward["SWA"][0][1], plane._forward["SWB"][0][1]
+    in_flight = _in_flight(plane, batched)
+    assert len(in_flight) == 2
+    ua, ub = in_flight
     assert (ua.cluster_id, ua.worker_id) == (ub.cluster_id, ub.worker_id)
     if batched:
         plane.feed_window(events[8:])
@@ -180,7 +201,8 @@ def test_two_upstream_same_flow_heads_disambiguate(batched):
     res = plane.result()
     assert len(res.delivered) == 2
     # B's packet (row 1) was delivered first, A's (row 0) second — matched
-    # on gen_time/seq, not on arrival-vs-departure order
+    # on gen_time/seq (reference) / spec arrival order (batched), not on
+    # departure order
     assert res.delivered[0][1].gen_time == 0.012
     assert res.delivered[1][1].gen_time == 0.010
     np.testing.assert_array_equal(np.asarray(res.delivered[0][2]), rows[1])
