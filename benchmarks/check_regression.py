@@ -60,6 +60,13 @@ SPEEDUP_FLOORS = {
     # per-row host path too).
     "step": {"olaf_step_cycle": 2.0, "hybrid_replay": 2.0,
              "topology_fattree": 2.0},
+    # ``failure_aom_advantage`` is FIFO AoM / OLAF AoM on the SAME faulty
+    # fat-tree run (mid-run spine outage + lossy edges) — structural, so
+    # any inversion is a real fault-tolerance regression (recorded ~6.8x).
+    # ``failure_recovery`` encodes the zero-lost-updates acceptance
+    # criterion as a hard 1.0/0.0 gate: OLAF with ACK-timeout
+    # retransmission must recover every genuinely dropped update.
+    "failures": {"failure_aom_advantage": 1.02, "failure_recovery": 1.0},
 }
 
 

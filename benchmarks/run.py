@@ -17,9 +17,9 @@ OUT_DIR = Path(__file__).resolve().parents[1] / "experiments"
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_multihop, bench_queue,
-                            bench_roofline, bench_step, bench_train,
-                            bench_training, bench_verifier)
+    from benchmarks import (bench_failures, bench_kernels, bench_multihop,
+                            bench_queue, bench_roofline, bench_step,
+                            bench_train, bench_training, bench_verifier)
     results = {}
     print("name,us_per_call,derived")
 
@@ -35,7 +35,7 @@ def main() -> None:
         ("train", bench_train), ("step", bench_step),
         ("training", bench_training),
         ("verifier", bench_verifier), ("kernels", bench_kernels),
-        ("roofline", bench_roofline),
+        ("roofline", bench_roofline), ("failures", bench_failures),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     if only and only not in {n for n, _ in modules}:

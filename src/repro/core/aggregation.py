@@ -45,6 +45,8 @@ class Update:
     size_bits: int = 2048  # wire size (paper microbench: 2048-bit packets)
     seq: int = -1  # departure-order sequence number (queue internal)
     replaceable: bool = True  # replace_status flag: un-aggregated, same-worker replace OK
+    retx: int = 0  # 0 = fresh send; k>0 = k-th ACK-timeout retransmission
+    #   of a previously sent update (same gen_time, same payload)
 
     def clone(self) -> "Update":
         return dataclasses.replace(

@@ -34,15 +34,27 @@ in ``HybridResult.switch_launches``) without changing what is delivered —
 a switch's pending is always landed before its own head departs. Pass
 ``flush_cadence=False`` for the legacy every-switch flush.
 
-**Forwarding** — the per-event reference replay (:meth:`feed`) keeps the
-head-matching :meth:`_match_forward` splice, now consulting the compiled
-spec's next-hop vector (so reference and batched paths cannot diverge on
-multi-PS topologies). The batched consumer (:meth:`feed_window`) does *no
-host-side forward matching at all*: per-link FIFO plus a constant
-propagation delay make arrival order deterministic, so each in-flight
-packet is pushed into a per-destination transit queue keyed by its arrival
-time (departure time + the source switch's ``prop_delay`` from the spec)
-and the next forwarded enqueue at that switch simply pops the head.
+**Forwarding & failures** — every "dequeue" in the trace is immediately
+followed by one *routing event* recording the simulator's control-plane
+decision: "forward" to the chosen (possibly rerouted) next hop, "deliver"
+to the PS, or "linkdrop" when the fault model lost the packet. The
+departure's fused flush+drain dispatch is deferred to that routing event,
+so the chosen hop rides the same :func:`repro.kernels.ops.olaf_forward`
+call as the drained row (a dropped packet's slot is cleared and its row
+discarded device-side). Multi-path fabrics and failure scenarios
+(``SimCfg.faults``) therefore replay **identically** in both consumers by
+construction — the decision is data in the trace, not re-derived. Traces
+predating routing events fall back to the spec's static next-hop vector.
+The per-event reference replay (:meth:`feed`) keeps the head-matching
+:meth:`_match_forward` splice over per-``(src, dst)`` drain queues; the
+batched consumer (:meth:`feed_window`) does *no host-side forward matching
+at all*: per-link FIFO plus a constant propagation delay make arrival
+order deterministic, so each in-flight packet is pushed into a
+per-destination transit queue keyed by its arrival time (departure time +
+the source switch's ``prop_delay`` from the spec) and the next forwarded
+enqueue at that switch simply pops the head. A worker's ACK-timeout
+retransmission (``Update.retx > 0``) re-enters as a fresh enqueue but
+reuses its original payload row — the row budget only counts first sends.
 
 The trace is consumed per **transmission window**: each window's enqueue
 runs are classified in one host-batched Algorithm 1 stats-delta pass per
@@ -153,6 +165,10 @@ class HybridResult:
     # legacy every-switch flush on wide/deep topologies
     switch_launches: Dict[str, int] = dataclasses.field(default_factory=dict)
     forwarded: int = 0  # packets routed switch->switch (transit hops)
+    # ---- failure accounting (mirrors SimResult's; zero without faults) ---
+    link_dropped: int = 0  # departures lost to link faults (slots cleared)
+    rerouted: int = 0  # departures steered off the primary next hop
+    drops_by_switch: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class HybridMultiSwitchDataPlane:
@@ -189,12 +205,21 @@ class HybridMultiSwitchDataPlane:
             self._mesh = switch_mesh(S)
         self._rows = payload_rows  # (N, dim) ingress payloads in gen order
         self._next_row = 0
+        # retransmitted sends (Update.retx > 0) reuse their original row
+        self._last_row: Dict[int, np.ndarray] = {}
         self._zero_row = jnp.zeros((dim,), jnp.float32)
-        # per-event reference path: per upstream switch, drained
-        # (order, meta, device row) awaiting its next hop, matched by
-        # _match_forward; ``order`` is the global dequeue sequence
-        self._forward: Dict[str, Deque[Tuple[int, Update, jnp.ndarray]]] = {
-            n: deque() for n in self.names}
+        # a dequeue's fused flush+drain is deferred until its routing event
+        # ("forward"/"deliver"/"linkdrop") so the chosen hop rides the same
+        # dispatch: (now, src_name, meta, slot, batched)
+        self._pending_depart: Optional[
+            Tuple[float, str, Update, int, bool]] = None
+        # per-event reference path: per (src, dst) link, drained
+        # (order, meta, device row) awaiting arrival downstream, matched by
+        # _match_forward; ``order`` is the global dequeue sequence. Keyed
+        # by link (not source) because a multi-path source interleaves
+        # departures toward different destinations
+        self._forward: Dict[Tuple[str, str],
+                            Deque[Tuple[int, Update, jnp.ndarray]]] = {}
         # batched path: per *destination* switch, in-flight transit rows
         # keyed by (arrival_time, departure order) — the deterministic
         # per-link FIFO order, so forwarded enqueues pop with ZERO
@@ -209,6 +234,9 @@ class HybridMultiSwitchDataPlane:
         self.forwarded = 0
         self.combined_updates = 0
         self.h2d_transfers = 0
+        self.link_dropped = 0
+        self.rerouted = 0
+        self.drops_by_switch: Dict[str, int] = {}
 
     # -- flush cadence ------------------------------------------------------
     def _flush_names(self, sw_name: str) -> Tuple[str, ...]:
@@ -236,11 +264,17 @@ class HybridMultiSwitchDataPlane:
             return self._match_forward(sw_name, meta)
         assert sw_name in self.ingress, \
             f"fresh update at non-ingress switch {sw_name}"
-        row_host = np.asarray(self._rows[self._next_row], np.float32)
-        self._next_row += 1
+        if meta.retx > 0:
+            # ACK-timeout retransmission: same update, same payload row —
+            # only first sends consume the ingress row budget
+            row_host = self._last_row[meta.worker_id]
+        else:
+            row_host = np.asarray(self._rows[self._next_row], np.float32)
+            self._next_row += 1
+            self._last_row[meta.worker_id] = row_host
         upd = Update(cluster_id=meta.cluster_id, worker_id=meta.worker_id,
                      gen_time=meta.gen_time, reward=meta.reward,
-                     size_bits=meta.size_bits)
+                     size_bits=meta.size_bits, retx=meta.retx)
         if batched:  # stays host-side until the window's single block put
             return upd, row_host
         self.h2d_transfers += 1  # per-event reference path: one put per row
@@ -272,34 +306,41 @@ class HybridMultiSwitchDataPlane:
         worker_id)`` alone is ambiguous when two upstream switches hold
         same-flow heads — disambiguate on the replayed ``gen_time``/``seq``
         (which mirror the simulator's exactly), then on dequeue order.
-        Candidate sources are read off the compiled spec's next-hop vector
-        — the same array the batched transit router uses — so the two
-        paths cannot diverge on multi-PS topologies.
+        The drain queues are keyed per (src, dst) link with the dst the
+        routing event recorded — the same decision the batched transit
+        router replays — so the two paths cannot diverge on multi-path or
+        multi-PS topologies.
         """
-        dst = self.index[sw_name]
         cands = []
-        for n, q in self._forward.items():
-            if not q or int(self.spec.next_hop[self.index[n]]) != dst:
+        for key, q in self._forward.items():
+            if not q or key[1] != sw_name:
                 continue
             order, u, _row = q[0]
             if (u.cluster_id == meta.cluster_id
                     and u.worker_id == meta.worker_id):
-                cands.append((order, u, n))
+                cands.append((order, u, key))
         assert cands, f"no forward match for {meta} at {sw_name}"
         if len(cands) > 1:
             exact = [c for c in cands
                      if c[1].gen_time == meta.gen_time
                      and c[1].seq == meta.seq]
             cands = exact or cands
-        src = min(cands)[2]  # earliest departure arrives first
-        _order, upd, row = self._forward[src].popleft()
+        key = min(cands)[2]  # earliest departure arrives first
+        _order, upd, row = self._forward[key].popleft()
         return upd, row
+
+    ROUTE_KINDS = frozenset({"forward", "deliver", "linkdrop"})
 
     # -- per-event reference replay ----------------------------------------
     def feed(self, now: float, sw_name: str, kind: str,
              meta: Optional[Update]) -> None:
         """One-event-per-call replay — the reference the batched
         :meth:`feed_window` is property-tested against."""
+        if kind in self.ROUTE_KINDS:  # the deferred departure's routing
+            self._route(kind, sw_name)  # decision ("forward" names the dst)
+            return
+        if self._pending_depart is not None:
+            self._route_pending_legacy()  # trace predates routing events
         if kind == "window":  # boundary marker: folded into the dequeue
             return             # that immediately follows it in the trace
         mirror = self.mirrors[self.index[sw_name]]
@@ -338,6 +379,11 @@ class HybridMultiSwitchDataPlane:
                 self._classify_run(name, run)
 
         for now, sw_name, kind, meta in events:
+            if kind in self.ROUTE_KINDS:
+                self._route(kind, sw_name)
+                continue
+            if self._pending_depart is not None:
+                self._route_pending_legacy()  # trace predates routing events
             if kind == "enqueue":
                 # resolve the packet (ingress row consumption / transit
                 # pop) eagerly so rows and transit pops stay in event
@@ -375,36 +421,75 @@ class HybridMultiSwitchDataPlane:
 
     def _depart(self, now: float, sw_name: str, meta: Update, *,
                 batched: bool) -> None:
-        """A transmission completes at ``sw_name``: land the flush set's
-        pending windows and gather+clear the departing row in ONE fused
-        dispatch, then route the row by the spec's next-hop vector."""
+        """A transmission completes at ``sw_name``: pop the mirror's head
+        and its device slot, then *defer* the fused flush+drain dispatch to
+        the routing event that immediately follows in the trace — the
+        chosen hop (possibly a failure reroute) rides the same
+        :func:`~repro.kernels.ops.olaf_forward` call as the drained row."""
         s = self.index[sw_name]
         mirror = self.mirrors[s]
         upd = mirror.queue.dequeue()
         assert upd is not None and upd.cluster_id == meta.cluster_id
         slot = mirror.pop_slot(upd.cluster_id)
-        row = self.flush(self._flush_names(sw_name), drain=(s, slot))
-        nh = int(self.spec.next_hop[s])
-        if nh < 0:
+        assert self._pending_depart is None
+        self._pending_depart = (now, sw_name, upd, slot, batched)
+
+    def _route(self, kind: str, event_name: str) -> None:
+        """Consume the deferred departure with its routing decision:
+        ``forward`` (event_name = destination switch), ``deliver`` (PS),
+        or ``linkdrop`` (the fault model lost it — the slot is cleared by
+        the same drain dispatch and the device row is discarded)."""
+        assert self._pending_depart is not None, \
+            f"routing event {kind}@{event_name} without a pending departure"
+        now, src_name, upd, slot, batched = self._pending_depart
+        self._pending_depart = None
+        s = self.index[src_name]
+        if kind == "forward":
+            hop = self.index[event_name]
+        else:
+            hop = -1 if kind == "deliver" else -2
+        row = self.flush(self._flush_names(src_name), drain=(s, slot),
+                         hop=hop)
+        if kind == "linkdrop":
+            self.link_dropped += 1
+            self.drops_by_switch[src_name] = \
+                self.drops_by_switch.get(src_name, 0) + 1
+            return
+        if kind == "deliver":
             self.delivered.append((now, upd, row))
             return
         self.forwarded += 1
+        if hop != int(self.spec.next_hop[s]):
+            self.rerouted += 1
         if batched:
-            heapq.heappush(self._transit[nh],
+            heapq.heappush(self._transit[hop],
                            (now + float(self.spec.prop_delay[s]),
                             next(self._fwd_order), upd, row))
         else:
-            self._forward[sw_name].append((next(self._fwd_order), upd, row))
+            self._forward.setdefault((src_name, event_name), deque()).append(
+                (next(self._fwd_order), upd, row))
+
+    def _route_pending_legacy(self) -> None:
+        """Route a deferred departure for traces that predate routing
+        events: the spec's static next hop, failure-free."""
+        _now, src_name, _upd, _slot, _batched = self._pending_depart
+        nh = int(self.spec.next_hop[self.index[src_name]])
+        self._route("deliver" if nh < 0 else "forward",
+                    src_name if nh < 0 else self.names[nh])
 
     # -- the single-launch data plane --------------------------------------
     def flush(self, names: Optional[Sequence[str]] = None,
-              drain: Optional[Tuple[int, int]] = None
+              drain: Optional[Tuple[int, int]] = None,
+              hop: Optional[int] = None
               ) -> Optional[jnp.ndarray]:
         """One dispatch landing the selected switches' pending windows into
         the (S, Q, D) slot buffer — the window's host rows staged as a
         single ``(S, U, D)`` block put — optionally fused with the
         departing-row gather/clear (``drain=(switch, slot)``), whose
-        device-resident row is returned."""
+        device-resident row is returned. ``hop`` is the routing decision
+        for the drained row (destination switch index, −1 = PS, −2 =
+        dropped); it rides the same dispatch so the chosen-hop vector
+        stays device-resident alongside the row it routes."""
         sel = self.mirrors if names is None else \
             [self.mirrors[self.index[n]] for n in names]
         if not any(m.pending for m in sel):
@@ -498,13 +583,14 @@ class HybridMultiSwitchDataPlane:
                 drained = self._drain_only(*drain)
         elif drain is not None:
             s, slot = drain
-            self.h2d_transfers += 1  # drain (switch, slot) index put
+            self.h2d_transfers += 1  # drain (switch, slot, hop) index put
             self.forward_launches += 1
-            self.slots_dev, self.counts_dev, rows = ops.olaf_forward(
+            self.slots_dev, self.counts_dev, rows, _hops = ops.olaf_forward(
                 self.slots_dev, self.counts_dev, updates, clusters, gate,
                 reset_mask, np.asarray([s], np.int32),
-                np.asarray([slot], np.int32), tile_d=self.tile_d,
-                interpret=self.interpret)
+                np.asarray([slot], np.int32),
+                drain_hop=np.asarray([-1 if hop is None else hop], np.int32),
+                tile_d=self.tile_d, interpret=self.interpret)
             drained = rows[0]
         else:
             self.slots_dev, self.counts_dev = ops.olaf_combine_window(
@@ -522,6 +608,8 @@ class HybridMultiSwitchDataPlane:
         return row
 
     def result(self) -> HybridResult:
+        if self._pending_depart is not None:
+            self._route_pending_legacy()  # trace cut before routing event
         self.flush()
         residual: Dict[str, Dict[int, int]] = {}
         for m in self.mirrors:
@@ -542,7 +630,10 @@ class HybridMultiSwitchDataPlane:
             h2d_transfers=self.h2d_transfers,
             forward_launches=self.forward_launches,
             switch_launches=dict(self.switch_launches),
-            forwarded=self.forwarded)
+            forwarded=self.forwarded,
+            link_dropped=self.link_dropped,
+            rerouted=self.rerouted,
+            drops_by_switch=dict(self.drops_by_switch))
 
 
 def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
@@ -619,7 +710,8 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
             # fresh update's metadata snapshot carries seq == -1; see
             # HybridMultiSwitchDataPlane._resolve_incoming)
             n_fresh = sum(1 for _, _, kind, m in events
-                          if kind == "enqueue" and m.seq < 0)
+                          if kind == "enqueue" and m.seq < 0
+                          and m.retx == 0)
             rng = np.random.default_rng(seed + 1)
             payload_rows = rng.normal(
                 size=(n_fresh, dim)).astype(np.float32)

@@ -48,6 +48,8 @@ class SwitchCfg:
     reward_threshold: Optional[float] = None
     uplink: Link = dataclasses.field(default_factory=lambda: Link(40e9))
     next_hop: Optional[str] = None  # switch name, or None => PS
+    # ordered multi-path candidate set (primary first); None => single path
+    next_hops: Optional[Tuple[str, ...]] = None
 
 
 @dataclasses.dataclass
@@ -62,6 +64,72 @@ class WorkerCfg:
     size_bits: int = 2048
 
 
+# --------------------------------------------------------------------------
+# Fault model (link loss, scheduled outages, switch stalls)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class LinkFault:
+    """Fault behaviour of one switch's uplink(s).
+
+    ``dst`` scopes the fault to the link toward one candidate next hop
+    (or the PS when the switch is an egress); ``dst=None`` covers every
+    link leaving ``switch``. ``drop_prob`` drops each departing update
+    i.i.d.; ``down`` lists half-open ``[t0, t1)`` outage windows during
+    which the link carries nothing (departures reroute to a live
+    alternate candidate, or are dropped if none exists)."""
+
+    switch: str
+    dst: Optional[str] = None
+    drop_prob: float = 0.0
+    down: Sequence[Tuple[float, float]] = ()
+
+
+@dataclasses.dataclass
+class SwitchStall:
+    """The switch starts no new transmissions in ``[from_t, until_t)``;
+    arrivals still enqueue (and combine, for OLAF queues) meanwhile."""
+
+    switch: str
+    from_t: float
+    until_t: float
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """Declarative failure scenario attached to ``SimCfg.faults``.
+
+    All randomness draws from a dedicated stream (``seed``), so enabling
+    a zero-probability FaultSpec leaves a run byte-identical to the
+    fault-free baseline."""
+
+    links: List[LinkFault] = dataclasses.field(default_factory=list)
+    stalls: List[SwitchStall] = dataclasses.field(default_factory=list)
+    seed: int = 0
+
+    def _match(self, src: str, dst: Optional[str]):
+        for lf in self.links:
+            if lf.switch == src and (lf.dst is None or lf.dst == dst):
+                yield lf
+
+    def drop_prob(self, src: str, dst: Optional[str]) -> float:
+        p_keep = 1.0
+        for lf in self._match(src, dst):
+            p_keep *= 1.0 - lf.drop_prob
+        return 1.0 - p_keep
+
+    def link_down(self, src: str, dst: Optional[str], t: float) -> bool:
+        return any(t0 <= t < t1 for lf in self._match(src, dst)
+                   for (t0, t1) in lf.down)
+
+    def stall_end(self, switch: str, t: float) -> Optional[float]:
+        """End of the stall window covering time ``t``, or None."""
+        end = None
+        for st in self.stalls:
+            if st.switch == switch and st.from_t <= t < st.until_t:
+                end = st.until_t if end is None else max(end, st.until_t)
+        return end
+
+
 @dataclasses.dataclass
 class SimCfg:
     switches: List[SwitchCfg]
@@ -70,6 +138,8 @@ class SimCfg:
     ack_delay: float = 200e-6  # constant reverse-path delay R
     tx_control: Optional[TxControlConfig] = None  # None => send at will
     seed: int = 0
+    faults: Optional[FaultSpec] = None  # None => loss-free fabric
+    route_policy: str = "static"  # multi-path hop selection (see topology)
     active_window: float = 1.0  # sliding window for "active clusters" count
     # hooks: async-trainer integration.
     # payload_fn(now, worker_id) -> (payload array | None, reward float):
@@ -80,15 +150,21 @@ class SimCfg:
     on_deliver: Optional[Callable[[float, Update], object]] = None
     on_ack: Optional[Callable[[float, int, object], None]] = None
     # on_queue_event(now, switch_name, kind, update) with kind in
-    # {"enqueue", "lock", "window", "dequeue"}: fires on every queue
-    # transition in event order. This is the control-plane trace consumed
-    # by the hybrid device data plane (``repro.core.hybrid``), which
-    # replays the switch decisions host-side while all payload bytes move
-    # on the accelerator. "window" marks a transmission-window boundary —
-    # it fires when a transmission completes, immediately before the
-    # departing "dequeue" (the payload must be materialized before it
-    # leaves the switch), so a windowed consumer can flush its batched
-    # combines there without trace lookahead.
+    # {"enqueue", "lock", "window", "dequeue", "forward", "deliver",
+    # "linkdrop"}: fires on every queue transition in event order. This is
+    # the control-plane trace consumed by the hybrid device data plane
+    # (``repro.core.hybrid``), which replays the switch decisions host-side
+    # while all payload bytes move on the accelerator. "window" marks a
+    # transmission-window boundary — it fires when a transmission
+    # completes, immediately before the departing "dequeue" (the payload
+    # must be materialized before it leaves the switch), so a windowed
+    # consumer can flush its batched combines there without trace
+    # lookahead. Every "dequeue" of a real update is immediately followed
+    # by exactly one routing event recording the control-plane decision:
+    # "forward" to the chosen next hop (its switch_name is the
+    # *destination*), "deliver" to the PS, or "linkdrop" when a fault
+    # dropped it — so multi-path choices and failures replay identically
+    # in the per-event and windowed consumers.
     on_queue_event: Optional[Callable[[float, str, str, Optional[Update]], None]] = None
 
 
@@ -106,6 +182,7 @@ class _Switch:
         else:
             raise ValueError(cfg.queue)
         self.busy = False
+        self.stalled = False  # inside a FaultSpec stall window
         self.last_seen: Dict[int, float] = {}  # cluster -> last arrival time
         self._max_window = 0.0  # widest active_clusters() probe seen
 
@@ -143,13 +220,49 @@ class SimResult:
     raw_updates_delivered: int  # sum of agg_count over deliveries
     queue_stats: Dict[str, Dict[str, int]]
     agg_counts: List[int]  # per delivered packet, for the Fig. 6 CDF
+    # ---- failure accounting (all zero on a fault-free fabric) ------------
+    link_dropped: int = 0  # packets lost to faults (post-combine)
+    raw_link_dropped: int = 0  # raw worker updates inside those packets
+    retransmits: int = 0  # worker-side ACK-timeout re-sends
+    reroutes: int = 0  # departures steered off the primary next hop
+    unrecovered_drops: int = 0  # dropped packets never covered by a later
+    #   same-cluster delivery with gen_time >= theirs (retransmit/reroute
+    #   recovered everything else)
+    drops_by_switch: Dict[str, int] = dataclasses.field(default_factory=dict)
+    reroutes_by_switch: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     # ---- derived metrics -------------------------------------------------
     @property
     def loss_pct(self) -> float:
+        """Total shortfall between raw updates sent and raw updates that
+        reached the PS — combine-absorption, genuine link loss, and
+        residual in-queue occupancy all count. See ``link_loss_pct`` /
+        ``absorbed_pct`` for the decomposition once faults exist."""
         if self.sent == 0:
             return 0.0
         return 100.0 * (self.sent - self.raw_updates_delivered) / self.sent
+
+    @property
+    def link_loss_pct(self) -> float:
+        """Share of sent raw updates genuinely lost in flight (link drops
+        and outages), as opposed to absorbed by opportunistic combining."""
+        if self.sent == 0:
+            return 0.0
+        return 100.0 * self.raw_link_dropped / self.sent
+
+    @property
+    def absorbed_pct(self) -> float:
+        """loss_pct minus the genuinely-dropped share: the part explained
+        by combine-absorption and end-of-horizon queue residue."""
+        return self.loss_pct - self.link_loss_pct
+
+    @property
+    def delivery_rate(self) -> float:
+        """Fraction of sent raw updates that reached the PS."""
+        if self.sent == 0:
+            return 1.0
+        return self.raw_updates_delivered / self.sent
 
     @property
     def busy_end(self) -> float:
@@ -187,6 +300,14 @@ class NetworkSimulator:
         self.rng = np.random.default_rng(cfg.seed)
         self.switches = {s.name: _Switch(s) for s in cfg.switches}
         self.now = 0.0
+        # compile the topology once: candidate sets + route policy for
+        # multi-path forwarding, and construction-time wiring validation
+        from repro.core.topology import spec_from_switch_cfgs  # lazy: cycle
+        self.spec = spec_from_switch_cfgs(
+            cfg.switches, route_policy=cfg.route_policy)
+        if cfg.workers:
+            self.spec.validate_ingress(
+                [w.ingress_switch for w in cfg.workers])
         self._events: List[Tuple[float, int, Callable[[], None]]] = []
         self._eseq = itertools.count()
         self._payload_seq = itertools.count()
@@ -200,6 +321,14 @@ class NetworkSimulator:
         self.workers_by_cluster: Dict[int, List[WorkerCfg]] = defaultdict(list)
         for w in cfg.workers:
             self.workers_by_cluster[w.cluster_id].append(w)
+        # fault machinery: dedicated RNG stream so a zero-probability
+        # FaultSpec cannot perturb the fault-free event sequence
+        self.faults = cfg.faults
+        fseed = (cfg.faults.seed if cfg.faults is not None else 0)
+        self.fault_rng = np.random.default_rng(
+            fseed * 104729 + cfg.seed * 7919 + 11)
+        # worker-side retransmission cache: last sent (gen, reward, payload)
+        self._last_sent: Dict[int, Tuple[float, float, Optional[np.ndarray]]] = {}
         # metrics
         self.deliveries: Dict[int, List[Tuple[float, float]]] = defaultdict(list)
         self.delivered_updates: List[Update] = []
@@ -208,6 +337,15 @@ class NetworkSimulator:
         self.deferred = 0
         self.agg_counts: List[int] = []
         self._gen_count: Dict[int, int] = defaultdict(int)
+        # failure accounting
+        self.link_dropped = 0
+        self.raw_link_dropped = 0
+        self.retransmits = 0
+        self.reroutes = 0
+        self.drops_by_switch: Dict[str, int] = defaultdict(int)
+        self.reroutes_by_switch: Dict[str, int] = defaultdict(int)
+        self._dropped_info: List[Tuple[int, float]] = []  # (cluster, gen)
+        self._max_delivered_gen: Dict[int, float] = {}
 
     # -- event plumbing ----------------------------------------------------
     def _at(self, t: float, fn: Callable[[], None]) -> None:
@@ -223,6 +361,12 @@ class NetworkSimulator:
             self.now = t
             fn()
         raw = sum(u.subsumed for u in self.delivered_updates)
+        # a dropped packet is *recovered* iff a later same-cluster delivery
+        # carried model state at least as fresh (a retransmitted copy keeps
+        # the original gen_time, and OLAF combining keeps the max)
+        unrecovered = sum(
+            1 for (c, g) in self._dropped_info
+            if g > self._max_delivered_gen.get(c, -math.inf))
         return SimResult(
             horizon=self.cfg.horizon,
             deliveries=dict(self.deliveries),
@@ -234,6 +378,13 @@ class NetworkSimulator:
             raw_updates_delivered=raw,
             queue_stats={n: s.queue.stats.as_dict() for n, s in self.switches.items()},
             agg_counts=self.agg_counts,
+            link_dropped=self.link_dropped,
+            raw_link_dropped=self.raw_link_dropped,
+            retransmits=self.retransmits,
+            reroutes=self.reroutes,
+            unrecovered_drops=unrecovered,
+            drops_by_switch=dict(self.drops_by_switch),
+            reroutes_by_switch=dict(self.reroutes_by_switch),
         )
 
     # -- worker side ---------------------------------------------------------
@@ -269,10 +420,32 @@ class NetworkSimulator:
             upd = Update(cluster_id=w.cluster_id, worker_id=w.worker_id,
                          gen_time=self.now, reward=reward, payload=payload,
                          size_bits=w.size_bits)
+            if ctl is not None and ctl.cfg.ack_timeout is not None:
+                # arm loss recovery: remember what we sent and poll the
+                # controller when its ACK deadline expires
+                self._last_sent[w.worker_id] = (self.now, reward, payload)
+                ctl.on_send(self.now, self.now)
+                self._at(ctl.deadline, lambda: self._maybe_retransmit(w))
             self._arrive_at_switch(w.ingress_switch, upd)
         else:
             self.deferred += 1  # worker keeps training; next update subsumes
         self._schedule_generation(w)
+
+    def _maybe_retransmit(self, w: WorkerCfg) -> None:
+        """ACK-deadline poll: re-send the worker's outstanding update if
+        the controller says its timeout (with exponential backoff) expired
+        and the retry budget allows another copy."""
+        ctl = self.controllers.get(w.worker_id)
+        if ctl is None or not ctl.poll_retransmit(self.now):
+            return  # acked, superseded, stale poll, or budget exhausted
+        gen, reward, payload = self._last_sent[w.worker_id]
+        self.retransmits += 1
+        upd = Update(cluster_id=w.cluster_id, worker_id=w.worker_id,
+                     gen_time=gen, reward=reward,
+                     payload=None if payload is None else payload.copy(),
+                     size_bits=w.size_bits, retx=ctl.retries)
+        self._arrive_at_switch(w.ingress_switch, upd)
+        self._at(ctl.deadline, lambda: self._maybe_retransmit(w))
 
     def _queue_event(self, name: str, kind: str, upd: Optional[Update]) -> None:
         if self.cfg.on_queue_event is not None:
@@ -296,12 +469,27 @@ class NetworkSimulator:
         if head is None:
             sw.busy = False
             return
+        if self.faults is not None and not sw.stalled:
+            end = self.faults.stall_end(sw.cfg.name, self.now)
+            if end is not None:
+                # stall: nothing departs until the window closes, but
+                # arrivals keep combining (the head stays unlocked)
+                sw.stalled = True
+                self._at(end, lambda: self._end_stall(sw))
+                return
+        if sw.stalled:
+            return  # resume event will restart us
         sw.busy = True
         if isinstance(sw.queue, PyOlafQueue):
             sw.queue.lock_head()  # §12.1: in-flight update cannot be combined
             self._queue_event(sw.cfg.name, "lock", head)
         tx_time = head.size_bits / sw.cfg.uplink.capacity_bps
         self._at(self.now + tx_time, lambda: self._finish_transmission(sw))
+
+    def _end_stall(self, sw: _Switch) -> None:
+        sw.stalled = False
+        if not sw.busy and len(sw.queue):
+            self._start_transmission(sw)
 
     def _finish_transmission(self, sw: _Switch) -> None:
         # the transmission window closes here: everything enqueued since
@@ -311,28 +499,87 @@ class NetworkSimulator:
         self._queue_event(sw.cfg.name, "dequeue", upd)
         sw.busy = False
         if upd is not None:
-            arrive = self.now + sw.cfg.uplink.prop_delay
-            if sw.cfg.next_hop is None:
-                self._at(arrive, lambda u=upd: self._deliver_to_ps(u))
-            else:
-                self._at(arrive, lambda u=upd, n=sw.cfg.next_hop: self._arrive_at_switch(n, u))
+            self._route_departure(sw, upd)
         if len(sw.queue):
             self._start_transmission(sw)
+
+    def _route_departure(self, sw: _Switch, upd: Update) -> None:
+        """Control-plane routing decision for one departed update: pick a
+        live candidate next hop (multi-path), apply the fault model, and
+        record the decision in the trace ("forward" / "deliver" /
+        "linkdrop") so replays cannot diverge."""
+        name = sw.cfg.name
+        src = self.spec.index[name]
+        cands = self.spec.candidates[src]
+        arrive = self.now + sw.cfg.uplink.prop_delay
+        if not cands:  # PS egress
+            if self._link_faulted(name, None):
+                self._record_drop(name, upd)
+                return
+            self._queue_event(name, "deliver", upd)
+            self._at(arrive, lambda u=upd: self._deliver_to_ps(u))
+            return
+        up = [c for c in cands
+              if self.faults is None
+              or not self.faults.link_down(name, self.spec.names[c],
+                                           self.now)]
+        if not up:  # every candidate link is down
+            self._record_drop(name, upd)
+            return
+        dst = self.spec.select_hop(
+            src, upd.cluster_id, upd.worker_id, up,
+            depth_fn=lambda v: len(self.switches[self.spec.names[v]].queue))
+        dst_name = self.spec.names[dst]
+        if self._link_faulted(name, dst_name):
+            self._record_drop(name, upd)
+            return
+        if dst != int(self.spec.next_hop[src]):
+            self.reroutes += 1
+            self.reroutes_by_switch[name] += 1
+        # the "forward" event names the *destination* — the source is the
+        # switch whose "dequeue" immediately precedes it in the trace
+        self._queue_event(dst_name, "forward", upd)
+        self._at(arrive,
+                 lambda u=upd, n=dst_name: self._arrive_at_switch(n, u))
+
+    def _link_faulted(self, src: str, dst: Optional[str]) -> bool:
+        """True if the (src → dst) departure is lost: the link is inside
+        an outage window, or the i.i.d. drop probability fires. The RNG is
+        only consulted when a positive drop probability is configured, so
+        fault-free runs stay byte-identical."""
+        if self.faults is None:
+            return False
+        if self.faults.link_down(src, dst, self.now):
+            return True
+        p = self.faults.drop_prob(src, dst)
+        return p > 0.0 and self.fault_rng.random() < p
+
+    def _record_drop(self, name: str, upd: Update) -> None:
+        self.link_dropped += 1
+        self.raw_link_dropped += upd.subsumed
+        self.drops_by_switch[name] += 1
+        self._dropped_info.append((upd.cluster_id, upd.gen_time))
+        self._queue_event(name, "linkdrop", upd)
 
     # -- PS + reverse path -----------------------------------------------------
     def _deliver_to_ps(self, upd: Update) -> None:
         self.deliveries[upd.cluster_id].append((self.now, upd.gen_time))
         self.delivered_updates.append(upd)
         self.agg_counts.append(upd.agg_count)
+        prev = self._max_delivered_gen.get(upd.cluster_id, -math.inf)
+        self._max_delivered_gen[upd.cluster_id] = max(prev, upd.gen_time)
         payload = None
         if self.cfg.on_deliver is not None:
             payload = self.cfg.on_deliver(self.now, upd)
         # ACK multicast to the cluster after constant reverse delay R; it
-        # carries the *current* bottleneck queue state (max pressure on path).
+        # carries the *current* bottleneck queue state (max pressure on
+        # path) plus the delivered gen_time, which clears the cluster's
+        # outstanding-retransmission state for updates it subsumes.
         fb = self._path_feedback()
         t_ack = self.now + self.cfg.ack_delay
         for w in self.workers_by_cluster[upd.cluster_id]:
-            self._at(t_ack, lambda wid=w.worker_id, f=fb, p=payload: self._on_ack(wid, f, p))
+            self._at(t_ack, lambda wid=w.worker_id, f=fb, p=payload,
+                     g=upd.gen_time: self._on_ack(wid, f, p, g))
 
     def _path_feedback(self) -> QueueFeedback:
         best: Optional[QueueFeedback] = None
@@ -345,10 +592,11 @@ class NetworkSimulator:
         assert best is not None
         return best
 
-    def _on_ack(self, worker_id: int, fb: QueueFeedback, payload: object) -> None:
+    def _on_ack(self, worker_id: int, fb: QueueFeedback, payload: object,
+                delivered_gen: Optional[float] = None) -> None:
         ctl = self.controllers.get(worker_id)
         if ctl is not None:
-            ctl.on_ack(self.now, fb)
+            ctl.on_ack(self.now, fb, delivered_gen=delivered_gen)
         if self.cfg.on_ack is not None:
             self.cfg.on_ack(self.now, worker_id, payload)
 

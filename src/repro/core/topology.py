@@ -2,17 +2,18 @@
 
 The paper's evaluation (§8.3) hard-codes one SW1/SW2→SW3 fan-in; this
 module turns the topology into *data*. A :class:`TopologySpec` describes an
-arbitrary switch DAG — each switch forwards to at most one next hop, so the
-fabric is a forest of fan-in trees rooted at the PS egress points (chains,
-wide fan-in, leaf–spine/fat-tree, multi-rack, multi-PS egress are all
-instances) — and compiles it ONCE into static arrays the rest of the stack
-consumes:
+arbitrary switch DAG — each switch forwards to an ordered *candidate set*
+of next hops (one candidate = the historic fan-in-tree case; several =
+a multi-path fabric, e.g. a fat-tree with multiple spines) — and compiles
+it ONCE into static arrays the rest of the stack consumes:
 
-  * ``next_hop``      — ``(S,)`` int32 next-hop vector (−1 = PS egress);
-                        the hybrid data plane routes drained device rows
-                        with it (``repro.kernels.ops.olaf_forward``) and
-                        the per-event reference replay consults the same
-                        vector, so the two paths cannot diverge;
+  * ``next_hop``      — ``(S,)`` int32 primary next-hop vector (−1 = PS
+                        egress); ``candidates`` holds the full per-switch
+                        candidate tuple and ``select_hop`` applies the
+                        spec's ``route_policy`` ("static" | "hash" |
+                        "adaptive") over the live subset. The simulator
+                        records every routing decision in the queue-event
+                        trace, so the hybrid replay paths cannot diverge;
   * ``adjacency``     — ``(S, S)`` bool, ``adjacency[u, v]`` iff ``u``
                         feeds ``v`` (one-hot rows of ``next_hop``);
   * ``reachability``  — ``(S, S)`` bool transitive closure:
@@ -45,7 +46,14 @@ from repro.core.netsim import Link, SimCfg, SwitchCfg, WorkerCfg
 
 @dataclasses.dataclass(frozen=True)
 class SwitchSpec:
-    """One switch of the DAG: a queue plus a single serialized uplink."""
+    """One switch of the DAG: a queue plus a serialized uplink.
+
+    ``next_hop`` names the single (primary) next hop; ``next_hops`` widens
+    it to an ordered *candidate set* for multi-path fabrics — the first
+    candidate (or ``next_hop``, which must then be a member) is the primary
+    and the rest are alternates a route policy may pick, e.g. to steer
+    around a failed link. Leaving both unset makes the switch a PS egress.
+    """
 
     name: str
     next_hop: Optional[str] = None  # switch name, or None => PS egress
@@ -54,15 +62,23 @@ class SwitchSpec:
     prop_delay: float = 1e-6  # uplink propagation delay
     queue: str = "olaf"  # "olaf" | "fifo"
     reward_threshold: Optional[float] = None
+    next_hops: Optional[Tuple[str, ...]] = None  # multi-path candidates
 
 
 _UNSET = object()
+
+ROUTE_POLICIES = ("static", "hash", "adaptive")
 
 
 class TopologySpec:
     """A compiled switch DAG (see module docstring for the array surface)."""
 
-    def __init__(self, switches: Sequence[SwitchSpec]) -> None:
+    def __init__(self, switches: Sequence[SwitchSpec], *,
+                 route_policy: str = "static") -> None:
+        if route_policy not in ROUTE_POLICIES:
+            raise ValueError(f"route_policy must be one of {ROUTE_POLICIES},"
+                             f" got {route_policy!r}")
+        self.route_policy = route_policy
         self.switches: Tuple[SwitchSpec, ...] = tuple(switches)
         self.names: List[str] = [s.name for s in self.switches]
         if len(set(self.names)) != len(self.names):
@@ -70,34 +86,77 @@ class TopologySpec:
         self.index: Dict[str, int] = {n: i for i, n in enumerate(self.names)}
         S = len(self.switches)
         self.num_switches = S
-        self.next_hop = np.full((S,), -1, np.int32)
+        # candidate next-hop sets: primary first, alternates after. A bare
+        # next_hop is a one-candidate set; an egress switch has none.
+        cand: List[Tuple[int, ...]] = []
         for i, s in enumerate(self.switches):
-            if s.next_hop is not None:
-                if s.next_hop not in self.index:
-                    raise ValueError(f"{s.name}: unknown next hop "
-                                     f"{s.next_hop!r}")
-                self.next_hop[i] = self.index[s.next_hop]
+            hops: Tuple[str, ...]
+            if s.next_hops is not None:
+                hops = tuple(s.next_hops)
+                if not hops:
+                    raise ValueError(f"{s.name}: next_hops must be non-empty"
+                                     f" when given (omit it for a PS egress)")
+                if len(set(hops)) != len(hops):
+                    raise ValueError(f"{s.name}: duplicate candidates in "
+                                     f"next_hops {hops}")
+                if s.next_hop is not None:
+                    if s.next_hop not in hops:
+                        raise ValueError(
+                            f"{s.name}: next_hop {s.next_hop!r} is not a "
+                            f"member of next_hops {hops}")
+                    # the declared primary leads the candidate order
+                    hops = (s.next_hop,) + tuple(
+                        h for h in hops if h != s.next_hop)
+            elif s.next_hop is not None:
+                hops = (s.next_hop,)
+            else:
+                hops = ()
+            for h in hops:
+                if h not in self.index:
+                    raise ValueError(f"{s.name}: unknown next hop {h!r}")
+                if h == s.name:
+                    raise ValueError(f"{s.name}: next-hop cycle (self-loop)")
+            cand.append(tuple(self.index[h] for h in hops))
+        self.candidates: Tuple[Tuple[int, ...], ...] = tuple(cand)
+        self.next_hop = np.asarray(
+            [c[0] if c else -1 for c in cand], np.int32)
         self.queue_slots = np.asarray(
             [s.queue_slots for s in self.switches], np.int32)
         self.rate_bps = np.asarray(
             [s.rate_gbps * 1e9 for s in self.switches], np.float64)
         self.prop_delay = np.asarray(
             [s.prop_delay for s in self.switches], np.float64)
-        # adjacency: one-hot rows of the next-hop vector
+        # adjacency: one row per switch, hot at every candidate next hop
         self.adjacency = np.zeros((S, S), bool)
         for u in range(S):
-            if self.next_hop[u] >= 0:
-                self.adjacency[u, self.next_hop[u]] = True
-        # acyclicity: walking the (out-degree <= 1) next-hop chain from any
-        # switch must terminate at a PS egress within S hops
-        for u in range(S):
-            v, hops = u, 0
-            while self.next_hop[v] >= 0:
-                v = int(self.next_hop[v])
-                hops += 1
-                if hops > S:
-                    raise ValueError(f"next-hop cycle reachable from "
-                                     f"{self.names[u]!r}")
+            for v in cand[u]:
+                self.adjacency[u, v] = True
+        # acyclicity over the *candidate* graph: iterative colored DFS so a
+        # cycle through any alternate path is rejected with a clear message
+        color = [0] * S  # 0 = unvisited, 1 = on stack, 2 = done
+        for root in range(S):
+            if color[root]:
+                continue
+            stack: List[Tuple[int, int]] = [(root, 0)]
+            color[root] = 1
+            while stack:
+                u, ci = stack[-1]
+                if ci < len(cand[u]):
+                    stack[-1] = (u, ci + 1)
+                    v = cand[u][ci]
+                    if color[v] == 1:
+                        path = [self.names[x] for x, _ in stack]
+                        path = path[path.index(self.names[v]):]
+                        raise ValueError(
+                            f"next-hop cycle reachable from "
+                            f"{self.names[root]!r}: "
+                            f"{' -> '.join(path + [self.names[v]])}")
+                    if color[v] == 0:
+                        color[v] = 1
+                        stack.append((v, 0))
+                else:
+                    color[u] = 2
+                    stack.pop()
         # strict downstream reachability (transitive closure of adjacency)
         reach = self.adjacency.copy()
         for _ in range(S):
@@ -112,8 +171,7 @@ class TopologySpec:
         while ready:
             u = ready.pop(0)
             order.append(u)
-            v = int(self.next_hop[u])
-            if v >= 0:
+            for v in cand[u]:
                 indeg[v] -= 1
                 if indeg[v] == 0:
                     ready.append(v)
@@ -123,6 +181,57 @@ class TopologySpec:
             int(i) for i in np.nonzero(self.next_hop < 0)[0])
         self.source_names: Tuple[str, ...] = tuple(
             self.names[u] for u in range(S) if not self.upstreams[u])
+
+    # -- routing ------------------------------------------------------------
+    def select_hop(self, src: int, cluster_id: int, worker_id: int,
+                   up: Sequence[int],
+                   depth_fn=None) -> int:
+        """Pick the next hop for a departure at switch index ``src`` among
+        the *up* candidate subset (already filtered for failed links, in
+        candidate order).
+
+          * ``static``   — primary if alive, else the first alive alternate;
+          * ``hash``     — flow-stable ECMP hash of (cluster, worker);
+          * ``adaptive`` — least destination queue occupancy (``depth_fn``
+            maps a switch index to its current depth), ties in candidate
+            order.
+        """
+        if not up:
+            raise ValueError(f"{self.names[src]}: no live next hop")
+        if len(up) == 1 or self.route_policy == "static":
+            return int(up[0])
+        if self.route_policy == "hash":
+            h = (int(cluster_id) * 2654435761 + int(worker_id) * 40503
+                 + src * 9176) & 0xFFFFFFFF
+            return int(up[h % len(up)])
+        # adaptive: least-loaded destination queue
+        depths = [depth_fn(v) if depth_fn is not None else 0 for v in up]
+        return int(up[int(np.argmin(depths))])
+
+    def validate_ingress(self, ingress: Sequence[str]) -> None:
+        """Check the worker wiring against this spec: every ingress must
+        name a real switch, and every switch must be reachable from some
+        worker ingress (an orphan switch would silently never carry
+        traffic)."""
+        unknown = sorted({n for n in ingress if n not in self.index})
+        if unknown:
+            raise ValueError(f"worker ingress switches {unknown} are not in "
+                             f"the topology {self.names}")
+        seen = {self.index[n] for n in ingress}
+        frontier = list(seen)
+        while frontier:
+            u = frontier.pop()
+            for v in self.candidates[u]:
+                if v not in seen:
+                    seen.add(v)
+                    frontier.append(v)
+        orphans = [self.names[u] for u in range(self.num_switches)
+                   if u not in seen]
+        if orphans:
+            raise ValueError(
+                f"switches {orphans} are unreachable from any worker "
+                f"ingress {sorted(set(ingress))}; every switch must lie on "
+                f"some worker's path to a PS")
 
     # -- derived views ------------------------------------------------------
     def flush_set(self, name: str) -> Tuple[str, ...]:
@@ -145,9 +254,13 @@ class TopologySpec:
                                   if reward_threshold is _UNSET
                                   else reward_threshold),
                 uplink=Link(s.rate_gbps * 1e9, s.prop_delay),
-                next_hop=s.next_hop,
+                next_hop=(self.names[c[0]] if c else None),
+                # None (not a 1-tuple) for single-path switches keeps the
+                # emitted cfg dataclass-equal to hand-written wiring
+                next_hops=(tuple(self.names[v] for v in c)
+                           if len(c) > 1 else None),
             )
-            for s in self.switches
+            for s, c in zip(self.switches, self.candidates)
         ]
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -156,7 +269,8 @@ class TopologySpec:
         return f"TopologySpec({hops})"
 
 
-def spec_from_switch_cfgs(switch_cfgs: Sequence[SwitchCfg]) -> TopologySpec:
+def spec_from_switch_cfgs(switch_cfgs: Sequence[SwitchCfg], *,
+                          route_policy: str = "static") -> TopologySpec:
     """Compile a spec from existing netsim ``SwitchCfg`` wiring (the
     backward-compatible entry the hybrid plane uses when no spec is
     passed)."""
@@ -165,9 +279,11 @@ def spec_from_switch_cfgs(switch_cfgs: Sequence[SwitchCfg]) -> TopologySpec:
                    queue_slots=c.queue_slots,
                    rate_gbps=c.uplink.capacity_bps / 1e9,
                    prop_delay=c.uplink.prop_delay, queue=c.queue,
-                   reward_threshold=c.reward_threshold)
+                   reward_threshold=c.reward_threshold,
+                   next_hops=(tuple(c.next_hops)
+                              if c.next_hops is not None else None))
         for c in switch_cfgs
-    ])
+    ], route_policy=route_policy)
 
 
 # --------------------------------------------------------------------------
@@ -221,24 +337,33 @@ def fanin_spec(fan: int = 4, *, leaf_gbps: float = 0.4e-3,
 def fattree_spec(k: int = 2, *, edge_gbps: float = 0.4e-3,
                  agg_gbps: float = 0.6e-3, core_gbps: float = 1.0e-3,
                  edge_slots: int = 4, agg_slots: int = 6,
-                 core_slots: int = 8, **kw) -> TopologySpec:
+                 core_slots: int = 8, spines: int = 1,
+                 route_policy: str = "static", **kw) -> TopologySpec:
     """Leaf–spine / fat-tree-style upstream tree: k pods of k edge
     switches, each pod's edges feeding its aggregation switch, every
-    aggregation feeding one core, the core egressing to the PS
-    (k² + k + 1 switches)."""
+    aggregation feeding the core layer (k² + k + spines switches).
+
+    ``spines=1`` keeps the historic single-CORE tree. ``spines>1`` gives
+    every aggregation switch all CORE1..COREn spines as candidate next
+    hops — the multi-path fabric the failure suite reroutes across —
+    with ``route_policy`` choosing among them."""
     switches: List[SwitchSpec] = []
     for p in range(k):
         for e in range(k):
             switches.append(SwitchSpec(
                 f"EDGE{p + 1}{e + 1}", next_hop=f"AGG{p + 1}",
                 queue_slots=edge_slots, rate_gbps=edge_gbps, **kw))
+    cores = (["CORE"] if spines == 1
+             else [f"CORE{i + 1}" for i in range(spines)])
     for p in range(k):
         switches.append(SwitchSpec(
-            f"AGG{p + 1}", next_hop="CORE", queue_slots=agg_slots,
-            rate_gbps=agg_gbps, **kw))
-    switches.append(SwitchSpec("CORE", next_hop=None, queue_slots=core_slots,
-                               rate_gbps=core_gbps, **kw))
-    return TopologySpec(switches)
+            f"AGG{p + 1}", next_hop=cores[0],
+            next_hops=tuple(cores) if spines > 1 else None,
+            queue_slots=agg_slots, rate_gbps=agg_gbps, **kw))
+    for c in cores:
+        switches.append(SwitchSpec(c, next_hop=None, queue_slots=core_slots,
+                                   rate_gbps=core_gbps, **kw))
+    return TopologySpec(switches, route_policy=route_policy)
 
 
 def multirack_spec(racks: int = 4, *, tor_gbps: float = 0.4e-3,
@@ -287,7 +412,7 @@ def build_sim_cfg(spec: TopologySpec, *, queue: Optional[str] = None,
                   gen_interval: float = 0.02, gen_jitter: float = 0.3,
                   size_bits: int = 8192, horizon: float = 0.3,
                   n_updates: Optional[int] = None, tx_control=None,
-                  seed: int = 0,
+                  seed: int = 0, faults=None,
                   reward_threshold=_UNSET) -> SimCfg:
     """Netsim wiring for a topology spec: ``SwitchCfg``/``Link`` per switch
     plus ``clusters_per_ingress`` worker clusters spread over the spec's
@@ -305,7 +430,7 @@ def build_sim_cfg(spec: TopologySpec, *, queue: Optional[str] = None,
             cluster += 1
     return SimCfg(switches=spec.switch_cfgs(queue, reward_threshold),
                   workers=workers, horizon=horizon, tx_control=tx_control,
-                  seed=seed)
+                  seed=seed, faults=faults, route_policy=spec.route_policy)
 
 
 def resolve_sim_cfg(topology, *, seed: int = 0, **cfg_kw) -> SimCfg:

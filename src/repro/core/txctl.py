@@ -35,6 +35,10 @@ class TxControlConfig:
     delta_threshold: float = 0.4  # Δ̄_T, paper uses 400 msec
     slope_mode: str = "fairness"  # "fairness": v=Δ̄_T, "urgency": v=1/Δ̄_T
     slope: Optional[float] = None  # explicit v overrides slope_mode
+    # ---- loss recovery (None disables retransmission entirely) ----------
+    ack_timeout: Optional[float] = None  # seconds before a send is presumed lost
+    max_retries: int = 3  # retransmission budget per update
+    backoff: float = 2.0  # exponential deadline growth per retry
 
     @property
     def v(self) -> float:
@@ -46,17 +50,57 @@ class TxControlConfig:
 
 
 class TransmissionController:
-    """Per-worker state machine implementing §5."""
+    """Per-worker state machine implementing §5, plus ACK-timeout loss
+    recovery: each send arms a deadline; if no covering ACK arrives the
+    update is retransmitted with exponential backoff, at most
+    ``max_retries`` times."""
 
     def __init__(self, cfg: TxControlConfig, rng: np.random.Generator) -> None:
         self.cfg = cfg
         self.rng = rng
         self.last_ack_time: Optional[float] = None
         self.feedback: Optional[QueueFeedback] = None
+        # retransmission state (mirrored 1:1 by the vectorized JaxTxState)
+        self.outstanding = False
+        self.sent_gen = -float("inf")  # gen_time of the outstanding update
+        self.deadline = float("inf")  # next ACK-timeout poll
+        self.retries = 0
 
-    def on_ack(self, now: float, feedback: QueueFeedback) -> None:
+    def on_send(self, now: float, gen_time: float) -> None:
+        """A fresh update left the worker: it becomes the (single)
+        outstanding one — a newer send supersedes an older outstanding
+        update, which the newer one's experience subsumes."""
+        if self.cfg.ack_timeout is None:
+            return
+        self.outstanding = True
+        self.sent_gen = gen_time
+        self.retries = 0
+        self.deadline = now + self.cfg.ack_timeout
+
+    def poll_retransmit(self, now: float) -> bool:
+        """True iff the outstanding update's deadline has expired and the
+        retry budget allows another copy; arms the next (backed-off)
+        deadline as a side effect."""
+        if (self.cfg.ack_timeout is None or not self.outstanding
+                or now < self.deadline):
+            return False
+        if self.retries >= self.cfg.max_retries:
+            return False  # budget exhausted: give up (next fresh send rearms)
+        self.retries += 1
+        self.deadline = now + self.cfg.ack_timeout * (
+            self.cfg.backoff ** self.retries)
+        return True
+
+    def on_ack(self, now: float, feedback: QueueFeedback,
+               delivered_gen: Optional[float] = None) -> None:
         self.last_ack_time = now
         self.feedback = feedback
+        # an ACK covering model state at least as fresh as the outstanding
+        # update clears it (stale-but-delivered beats dropped); an ACK with
+        # no gen info (legacy callers) clears unconditionally
+        if delivered_gen is None or delivered_gen >= self.sent_gen:
+            self.outstanding = False
+            self.deadline = float("inf")
 
     def send_probability(self, now: float) -> float:
         if self.feedback is None:
@@ -91,13 +135,20 @@ class JaxTxState:
 
     ``last_ack``/``n_active``/``q_max`` hold the most recent ACK's timestamp
     and piggybacked queue feedback; ``has_fb`` is False until the first ACK
-    (initial transmissions are free).
+    (initial transmissions are free). ``outstanding``/``sent_gen``/
+    ``deadline``/``retries`` mirror the scalar controller's ACK-timeout
+    retransmission state (None when loss recovery is unused — legacy
+    constructions stay valid pytrees, None being an empty subtree).
     """
 
     last_ack: jnp.ndarray  # float32[W]
     has_fb: jnp.ndarray  # bool[W]
     n_active: jnp.ndarray  # float32[W]
     q_max: jnp.ndarray  # float32[W]
+    outstanding: Optional[jnp.ndarray] = None  # bool[W]
+    sent_gen: Optional[jnp.ndarray] = None  # float32[W]
+    deadline: Optional[jnp.ndarray] = None  # float32[W]
+    retries: Optional[jnp.ndarray] = None  # int32[W]
 
 
 def jax_txctl_init(n_workers: int) -> JaxTxState:
@@ -106,6 +157,10 @@ def jax_txctl_init(n_workers: int) -> JaxTxState:
         has_fb=jnp.zeros((n_workers,), bool),
         n_active=jnp.zeros((n_workers,), jnp.float32),
         q_max=jnp.ones((n_workers,), jnp.float32),
+        outstanding=jnp.zeros((n_workers,), bool),
+        sent_gen=jnp.full((n_workers,), -jnp.inf, jnp.float32),
+        deadline=jnp.full((n_workers,), jnp.inf, jnp.float32),
+        retries=jnp.zeros((n_workers,), jnp.int32),
     )
 
 
@@ -140,10 +195,26 @@ def jax_txctl_gate(state: JaxTxState, key, now, delta_threshold: float,
 
 
 def jax_txctl_ack(state: JaxTxState, acked, now, n_active,
-                  q_max) -> JaxTxState:
+                  q_max, delivered_gen=None) -> JaxTxState:
     """Multicast ACK: workers in ``acked`` (bool (W,)) receive the current
-    queue feedback ``{N, Q_max}`` and refresh their ``Δ̂`` clock."""
+    queue feedback ``{N, Q_max}`` and refresh their ``Δ̂`` clock.
+
+    ``delivered_gen`` (scalar or (W,)) additionally clears the outstanding
+    retransmission state of acked workers whose outstanding ``sent_gen`` it
+    covers — the vectorized mirror of the scalar
+    :meth:`TransmissionController.on_ack`. ``None`` clears unconditionally
+    (legacy behaviour) when retransmission state exists."""
     nowf = jnp.asarray(now, jnp.float32)
+    out = state.outstanding
+    ddl = state.deadline
+    if out is not None:
+        if delivered_gen is None:
+            cleared = acked
+        else:
+            cleared = acked & (jnp.asarray(delivered_gen, jnp.float32)
+                               >= state.sent_gen)
+        out = out & ~cleared
+        ddl = jnp.where(cleared, jnp.inf, ddl)
     return JaxTxState(
         last_ack=jnp.where(acked, nowf, state.last_ack),
         has_fb=state.has_fb | acked,
@@ -151,4 +222,59 @@ def jax_txctl_ack(state: JaxTxState, acked, now, n_active,
                            state.n_active),
         q_max=jnp.where(acked, jnp.asarray(q_max, jnp.float32),
                         state.q_max),
+        outstanding=out,
+        sent_gen=state.sent_gen,
+        deadline=ddl,
+        retries=state.retries,
+    )
+
+
+def jax_txctl_send(state: JaxTxState, sent, now, gen_time,
+                   ack_timeout: float) -> JaxTxState:
+    """Fresh sends for workers in ``sent`` (bool (W,)): each becomes its
+    worker's single outstanding update (superseding any older one) with a
+    fresh ACK deadline and a reset retry budget. Mirrors the scalar
+    :meth:`TransmissionController.on_send`."""
+    assert state.outstanding is not None, "state lacks retransmission buffers"
+    nowf = jnp.asarray(now, jnp.float32)
+    return JaxTxState(
+        last_ack=state.last_ack,
+        has_fb=state.has_fb,
+        n_active=state.n_active,
+        q_max=state.q_max,
+        outstanding=state.outstanding | sent,
+        sent_gen=jnp.where(sent, jnp.asarray(gen_time, jnp.float32),
+                           state.sent_gen),
+        deadline=jnp.where(sent, nowf + jnp.float32(ack_timeout),
+                           state.deadline),
+        retries=jnp.where(sent, 0, state.retries),
+    )
+
+
+def jax_txctl_retransmit(state: JaxTxState, now, ack_timeout: float,
+                         backoff: float, max_retries: int):
+    """ACK-timeout poll over the whole (W,) worker axis: returns
+    ``(due, new_state)`` where ``due`` marks workers whose outstanding
+    update must be retransmitted now. Their retry counters advance and
+    their deadlines back off exponentially — bit-for-bit the scalar
+    :meth:`TransmissionController.poll_retransmit` per worker."""
+    assert state.outstanding is not None, "state lacks retransmission buffers"
+    nowf = jnp.asarray(now, jnp.float32)
+    due = (state.outstanding & (nowf >= state.deadline)
+           & (state.retries < max_retries))
+    retries = jnp.where(due, state.retries + 1, state.retries)
+    deadline = jnp.where(
+        due,
+        nowf + jnp.float32(ack_timeout)
+        * jnp.float32(backoff) ** retries.astype(jnp.float32),
+        state.deadline)
+    return due, JaxTxState(
+        last_ack=state.last_ack,
+        has_fb=state.has_fb,
+        n_active=state.n_active,
+        q_max=state.q_max,
+        outstanding=state.outstanding,
+        sent_gen=state.sent_gen,
+        deadline=deadline,
+        retries=retries,
     )

@@ -78,8 +78,8 @@ def olaf_combine_window(slots, counts, updates, clusters, gate, reset_slots,
 
 @functools.partial(jax.jit, static_argnames=("tile_q", "tile_d", "interpret"))
 def olaf_forward(slots, counts, updates, clusters, gate, reset_slots,
-                 drain_sw, drain_slot, *, tile_q: int = 8, tile_d: int = 512,
-                 interpret: bool = _INTERPRET):
+                 drain_sw, drain_slot, drain_hop=None, *, tile_q: int = 8,
+                 tile_d: int = 512, interpret: bool = _INTERPRET):
     """Window combine + device-resident forwarding pass, one dispatch.
 
     First lands the pending transmission window (exactly
@@ -88,13 +88,19 @@ def olaf_forward(slots, counts, updates, clusters, gate, reset_slots,
     ``(S, Q, D)`` slot buffer with a next-hop one-hot gather/scatter:
     ``drain_sw``/``drain_slot`` ``(K,)`` name the departing (switch, slot)
     pairs; their rows are gathered from the *post-combine* buffer and the
-    slots cleared. Returns ``(new_slots, new_counts, drained (K, D))``.
+    slots cleared. Returns ``(new_slots, new_counts, drained (K, D))``, or
+    ``(…, drained, hops (K,))`` when ``drain_hop`` is given.
 
     The drained rows stay device-resident: the hybrid control plane
-    resolves each row's next hop from the compiled ``TopologySpec``
-    next-hop vector and hands the row straight into the downstream
-    switch's next window, so a transit hop (SW1→SW3-style forwarding, or
-    any spec DAG edge) never round-trips payload bytes through the host.
+    resolves each row's next hop (the routing decision recorded in the
+    queue-event trace — primary, failure reroute, PS delivery, or link
+    drop) and threads it through as ``drain_hop`` ``(K,)`` int32
+    (destination switch index, −1 = PS egress, −2 = dropped by the fault
+    model). The hop vector rides the dispatch and returns as a device
+    array aligned with ``drained``, so a transit hop (SW1→SW3-style
+    forwarding, or any spec DAG edge) never round-trips payload bytes
+    through the host, and a batched multi-drain consumer can scatter rows
+    by hop entirely on device.
     """
     if updates.shape[1] > 0:
         slots, counts = olaf_combine_window(
@@ -106,8 +112,15 @@ def olaf_forward(slots, counts, updates, clusters, gate, reset_slots,
     # O(K·D) indexed gather + clear — the departing rows, not the buffer
     drained = slots[drain_sw, drain_slot]  # (K, D)
     popped = jnp.zeros((S, Q), bool).at[drain_sw, drain_slot].set(True)
-    return (jnp.where(popped[..., None], 0.0, slots),
-            jnp.where(popped, 0, counts), drained)
+    new_slots = jnp.where(popped[..., None], 0.0, slots)
+    new_counts = jnp.where(popped, 0, counts)
+    if drain_hop is None:
+        return new_slots, new_counts, drained
+    # a dropped row (hop == −2) is zeroed in place: the payload dies on
+    # device with its slot; the caller never copies it anywhere
+    hops = jnp.asarray(drain_hop, jnp.int32)
+    drained = jnp.where((hops >= -1)[:, None], drained, 0.0)
+    return new_slots, new_counts, drained, hops
 
 
 @functools.partial(jax.jit, static_argnames=("tile_q", "tile_d", "interpret"))

@@ -62,6 +62,12 @@ class AsyncTrainConfig:
     # round-robin over the spec's source switches; ``queue`` and
     # ``reward_threshold`` above override every switch.
     topology: Optional[object] = None
+    # Optional repro.core.netsim.FaultSpec: link drops / outages / switch
+    # stalls. Combined with tx_control.ack_timeout the workers retransmit
+    # lost updates (stale-but-delivered beats dropped); the trainer itself
+    # needs no changes — retransmitted copies re-enter the fabric with the
+    # cached payload and the PS applies whichever copy arrives.
+    faults: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -132,6 +138,9 @@ class AsyncDRLTrainer:
         self.sim_cfg = SimCfg(
             switches=switches, workers=workers, horizon=cfg.horizon,
             tx_control=cfg.tx_control, seed=cfg.seed,
+            faults=cfg.faults,
+            route_policy=(cfg.topology.route_policy
+                          if cfg.topology is not None else "static"),
             payload_fn=self._make_payload,
             on_deliver=self._on_deliver, on_ack=self._on_ack)
 

@@ -1,0 +1,413 @@
+"""The fault-tolerant data plane: link failures, rerouting, retransmission.
+
+Covers the three legs of the failure story end to end:
+
+  * **fault model + multi-path control plane** — randomized DAGs with
+    multi-candidate next hops, random route policies and random
+    ``FaultSpec``s (i.i.d. link loss, scheduled outages, switch stalls)
+    must replay *identically* through the per-event reference and the
+    windowed batch consumer — delivered payloads bitwise, drop/reroute
+    counters equal, and both agreeing with the metadata simulator.
+  * **recovery** — a fat-tree with a mid-run link failure plus ACK-timeout
+    retransmission loses zero updates (every dropped packet is covered by
+    a later delivery of fresher same-cluster state).
+  * **worker-side state machines** — the vectorized ``jax_txctl_*``
+    retransmission ops must track the scalar ``TransmissionController``
+    bit for bit across random send/ACK/timeout interleavings, including
+    backoff saturation (always-running numpy property test, plus a
+    Hypothesis variant when the library is installed).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.hybrid import run_hybrid_multihop
+from repro.core.netsim import (FaultSpec, LinkFault, NetworkSimulator,
+                               SwitchStall)
+from repro.core.topology import (SwitchSpec, TopologySpec, build_sim_cfg,
+                                 fattree_spec)
+from repro.core.txctl import (TransmissionController, TxControlConfig,
+                              jax_txctl_ack, jax_txctl_init,
+                              jax_txctl_retransmit, jax_txctl_send)
+
+DIM = 16
+
+
+def _assert_results_equal(a, b):
+    assert len(a.delivered) == len(b.delivered)
+    for (t0, u0, p0), (t1, u1, p1) in zip(a.delivered, b.delivered):
+        assert t0 == t1
+        assert (u0.cluster_id, u0.worker_id, u0.gen_time, u0.reward,
+                u0.agg_count, u0.seq) == \
+               (u1.cluster_id, u1.worker_id, u1.gen_time, u1.reward,
+                u1.agg_count, u1.seq)
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+    assert a.queue_stats == b.queue_stats
+    np.testing.assert_array_equal(a.final_counts, b.final_counts)
+    assert a.residual_slot_counts == b.residual_slot_counts
+    assert a.forwarded == b.forwarded
+    assert a.link_dropped == b.link_dropped
+    assert a.rerouted == b.rerouted
+    assert a.drops_by_switch == b.drops_by_switch
+
+
+def _payload_source(seed, dim):
+    r = np.random.default_rng(seed)
+
+    def src(now, worker_id):
+        return r.normal(size=dim).astype(np.float32), float(r.normal())
+
+    return src
+
+
+# ---------------------------------------------------------------------------
+# Randomized failure-trace equivalence (the acceptance property)
+# ---------------------------------------------------------------------------
+def _random_multipath_spec(rng):
+    """Random fan-in DAG with *multi-candidate* next hops: each non-root
+    switch points at 1-3 higher-indexed switches (acyclic by construction),
+    under a random route policy."""
+    S = int(rng.integers(4, 9))
+    n_roots = 2 if (S >= 5 and rng.random() < 0.3) else 1
+    names = [f"N{i}" for i in range(S)]
+    switches = []
+    for i in range(S):
+        if i >= S - n_roots:
+            nhs = None
+        else:
+            pool = names[i + 1:]
+            k = min(len(pool), int(rng.integers(1, 4)))
+            nhs = tuple(rng.choice(pool, size=k, replace=False))
+        switches.append(SwitchSpec(
+            names[i], next_hop=None if nhs is None else nhs[0],
+            next_hops=nhs if nhs is not None and len(nhs) > 1 else None,
+            queue_slots=int(rng.integers(3, 7)),
+            rate_gbps=float(rng.uniform(0.3e-3, 1.0e-3)),
+            prop_delay=float(rng.uniform(0.5e-6, 5e-6)),
+            reward_threshold=[None, 0.3][int(rng.integers(2))]))
+    policy = ["static", "hash", "adaptive"][int(rng.integers(3))]
+    return TopologySpec(switches, route_policy=policy)
+
+
+def _random_faults(rng, spec, horizon):
+    """Random FaultSpec over the spec's links: i.i.d. loss on some
+    switches, one scheduled outage window, sometimes a stall."""
+    links = []
+    for name in spec.names:
+        if rng.random() < 0.5:
+            links.append(LinkFault(switch=name,
+                                   drop_prob=float(rng.uniform(0.0, 0.5))))
+    # one scheduled outage on a random (non-egress, if possible) switch
+    victims = [n for n in spec.names
+               if spec.next_hop[spec.index[n]] >= 0] or list(spec.names)
+    t0 = float(rng.uniform(0.2, 0.6)) * horizon
+    links.append(LinkFault(switch=victims[int(rng.integers(len(victims)))],
+                           down=((t0, t0 + float(rng.uniform(0.1, 0.4))
+                                  * horizon),)))
+    stalls = []
+    if rng.random() < 0.4:
+        s0 = float(rng.uniform(0.1, 0.5)) * horizon
+        stalls.append(SwitchStall(
+            switch=spec.names[int(rng.integers(len(spec.names)))],
+            from_t=s0, until_t=s0 + 0.2 * horizon))
+    return FaultSpec(links=links, stalls=stalls,
+                     seed=int(rng.integers(0, 1000)))
+
+
+@pytest.mark.slow
+def test_randomized_failure_trace_equivalence():
+    """Property: >= 20 randomized multi-path topologies with injected
+    faults (link loss, outages, stalls) and random route policies replayed
+    both ways must produce identical ``HybridResult``s, and their failure
+    counters must agree with the metadata simulator's."""
+    rng = np.random.default_rng(777)
+    n_dropped = n_rerouted = n_nonempty = 0
+    for trial in range(22):
+        spec = _random_multipath_spec(rng)
+        horizon = float(rng.uniform(0.08, 0.16))
+        cfg = build_sim_cfg(
+            spec,
+            clusters_per_ingress=int(rng.integers(1, 3)),
+            workers_per_cluster=int(rng.integers(1, 4)),
+            gen_interval=float(rng.uniform(0.008, 0.03)),
+            horizon=horizon,
+            faults=_random_faults(rng, spec, horizon),
+            seed=int(rng.integers(0, 100000)))
+        src_seed = int(rng.integers(0, 100000))
+        per_event, _ = run_hybrid_multihop(
+            DIM, sim_cfg=cfg, batched=False,
+            payload_source=_payload_source(src_seed, DIM))
+        batched, _ = run_hybrid_multihop(
+            DIM, sim_cfg=cfg, batched=True,
+            payload_source=_payload_source(src_seed, DIM))
+        _assert_results_equal(per_event, batched)
+        assert batched.h2d_transfers <= per_event.h2d_transfers, trial
+        sim = NetworkSimulator(cfg).run()
+        assert batched.link_dropped == sim.link_dropped, trial
+        assert batched.rerouted == sim.reroutes, trial
+        assert batched.drops_by_switch == sim.drops_by_switch, trial
+        assert len(batched.delivered) == sim.received_at_ps, trial
+        n_dropped += batched.link_dropped > 0
+        n_rerouted += batched.rerouted > 0
+        n_nonempty += bool(batched.delivered)
+    # the sample really exercised the failure machinery
+    assert n_nonempty >= 15
+    assert n_dropped >= 8
+    assert n_rerouted >= 5
+
+
+def test_zero_probability_faultspec_is_byte_identical():
+    """Enabling an all-zero FaultSpec must not perturb the run (the fault
+    RNG is a dedicated stream, consulted only when drop_prob > 0)."""
+    spec = fattree_spec(2)
+    base = build_sim_cfg(spec, horizon=0.2, seed=3)
+    faulty = dataclasses.replace(base, faults=FaultSpec(seed=9))
+    ra, rb = NetworkSimulator(base).run(), NetworkSimulator(faulty).run()
+    assert ra.deliveries == rb.deliveries
+    assert ra.queue_stats == rb.queue_stats
+    assert rb.link_dropped == rb.reroutes == 0
+
+
+# ---------------------------------------------------------------------------
+# Recovery: mid-run link failure with retransmission loses nothing
+# ---------------------------------------------------------------------------
+def test_fattree_midrun_failure_zero_lost():
+    """Fat-tree (k=4, two spines, adaptive routing): one spine uplink goes
+    down mid-run while workers run ACK-timeout retransmission — the run
+    completes, traffic reroutes onto the surviving spine, and every
+    dropped update is covered by a later delivery (zero unrecovered)."""
+    spec = fattree_spec(4, spines=2, route_policy="adaptive")
+    faults = FaultSpec(links=[
+        LinkFault(switch="AGG1", dst="CORE1", down=((0.08, 0.16),)),
+        LinkFault(switch="AGG2", dst="CORE1", down=((0.08, 0.16),)),
+    ])
+    cfg = build_sim_cfg(
+        spec, clusters_per_ingress=1, workers_per_cluster=2,
+        gen_interval=0.02, horizon=0.24, faults=faults, seed=11,
+        tx_control=TxControlConfig(ack_timeout=0.03, max_retries=4))
+    res = NetworkSimulator(cfg).run()
+    assert res.received_at_ps > 0
+    assert res.reroutes > 0  # the outage actually steered traffic
+    assert res.unrecovered_drops == 0  # nothing was lost for good
+    assert res.delivery_rate > 0.0
+    # the decomposition: combine absorption and link loss add up
+    assert abs(res.loss_pct - res.link_loss_pct - res.absorbed_pct) < 1e-9
+
+
+def test_fattree_failure_trace_hybrid_smoke():
+    """Fast-lane smoke: a faulty multi-spine fat-tree trace (drops +
+    outage + retransmission) replays through BOTH hybrid consumers with
+    identical results and nonzero failure counters."""
+    spec = fattree_spec(2, spines=2, route_policy="hash")
+    faults = FaultSpec(links=[
+        LinkFault(switch="AGG1", drop_prob=0.3),
+        LinkFault(switch="AGG1", dst="CORE2", down=((0.05, 0.12),)),
+    ], seed=4)
+    cfg = build_sim_cfg(
+        spec, clusters_per_ingress=1, workers_per_cluster=2,
+        gen_interval=0.015, horizon=0.2, faults=faults, seed=7,
+        tx_control=TxControlConfig(ack_timeout=0.004, max_retries=2))
+    per_event, _ = run_hybrid_multihop(DIM, sim_cfg=cfg, batched=False)
+    batched, _ = run_hybrid_multihop(DIM, sim_cfg=cfg, batched=True)
+    _assert_results_equal(per_event, batched)
+    assert len(batched.delivered) > 0
+    assert batched.link_dropped > 0
+    sim = NetworkSimulator(cfg).run()
+    assert sim.retransmits > 0
+    assert batched.drops_by_switch == sim.drops_by_switch
+
+
+def test_switch_stall_keeps_combining():
+    """A stalled switch starts no transmissions but keeps aggregating
+    arrivals — OLAF's whole point under backpressure — then drains after
+    the stall lifts."""
+    spec = fattree_spec(2)
+    horizon = 0.3
+    stall = SwitchStall(switch="CORE", from_t=0.05, until_t=0.2)
+    cfg = build_sim_cfg(spec, horizon=horizon, seed=5,
+                        gen_interval=0.01,
+                        faults=FaultSpec(stalls=[stall]))
+    base = NetworkSimulator(build_sim_cfg(
+        spec, horizon=horizon, seed=5, gen_interval=0.01)).run()
+    stalled = NetworkSimulator(cfg).run()
+    # the stall forces more combining at the stalled switch
+    assert stalled.queue_stats["CORE"]["aggregations"] >= \
+        base.queue_stats["CORE"]["aggregations"]
+    assert stalled.received_at_ps > 0  # it drained after the window
+
+
+# ---------------------------------------------------------------------------
+# Construction-time validation
+# ---------------------------------------------------------------------------
+def test_candidate_cycle_rejected():
+    """A cycle reachable only through a *secondary* candidate must be
+    rejected at construction, with the cycle spelled out."""
+    with pytest.raises(ValueError, match="cycle"):
+        TopologySpec([
+            SwitchSpec("A", next_hop="B", next_hops=("B", "C")),
+            SwitchSpec("B", next_hop=None),
+            SwitchSpec("C", next_hop="A"),
+        ])
+
+
+def test_unreachable_switch_rejected():
+    spec = TopologySpec([
+        SwitchSpec("A", next_hop="B"),
+        SwitchSpec("B", next_hop=None),
+        SwitchSpec("ORPHAN", next_hop="B"),
+    ])
+    with pytest.raises(ValueError, match="unreachable"):
+        spec.validate_ingress({"A"})
+    spec.validate_ingress({"A", "ORPHAN"})  # fine once it has ingress
+
+
+def test_candidate_validation_errors():
+    with pytest.raises(ValueError, match="unknown"):
+        TopologySpec([SwitchSpec("A", next_hop="NOPE")])
+    with pytest.raises(ValueError, match="duplicate"):
+        TopologySpec([SwitchSpec("A", next_hop="B", next_hops=("B", "B")),
+                      SwitchSpec("B", next_hop=None)])
+    with pytest.raises(ValueError, match="self-loop"):
+        TopologySpec([SwitchSpec("A", next_hop="A")])
+
+
+# ---------------------------------------------------------------------------
+# Scalar vs vectorized transmission-control retransmission state
+# ---------------------------------------------------------------------------
+# All times/timeouts are dyadic rationals so float32 arithmetic is exact
+# and scalar (float64) vs jax (float32) comparisons can demand equality.
+_ACK_TIMEOUT = 0.5
+_BACKOFF = 2.0
+_MAX_RETRIES = 3
+
+
+def _fresh_pair(n):
+    cfg = TxControlConfig(ack_timeout=_ACK_TIMEOUT, max_retries=_MAX_RETRIES,
+                          backoff=_BACKOFF)
+    scalars = [TransmissionController(cfg, np.random.default_rng(i))
+               for i in range(n)]
+    return cfg, scalars, jax_txctl_init(n)
+
+
+def _assert_state_matches(scalars, state):
+    for i, c in enumerate(scalars):
+        assert bool(state.outstanding[i]) == c.outstanding, i
+        assert int(state.retries[i]) == c.retries, i
+        if c.outstanding:
+            assert float(state.sent_gen[i]) == c.sent_gen, i
+        assert float(state.deadline[i]) == c.deadline \
+            or (np.isinf(float(state.deadline[i])) and np.isinf(c.deadline))
+
+
+def _replay_random_ops(seed, n_workers=5, n_steps=60):
+    """Drive both state machines through one random op sequence and check
+    them against each other after every step."""
+    rng = np.random.default_rng(seed)
+    cfg, scalars, state = _fresh_pair(n_workers)
+    now = 0.0
+    for _ in range(n_steps):
+        now += int(rng.integers(1, 9)) / 16.0  # dyadic forward steps
+        op = rng.integers(3)
+        if op == 0:  # fresh sends for a random subset
+            mask = rng.random(n_workers) < 0.5
+            gen = now - int(rng.integers(0, 4)) / 16.0
+            for i, c in enumerate(scalars):
+                if mask[i]:
+                    c.on_send(now, gen)
+            state = jax_txctl_send(state, jnp.asarray(mask), now, gen,
+                                   cfg.ack_timeout)
+        elif op == 1:  # ACK covering a random generation cutoff
+            mask = rng.random(n_workers) < 0.5
+            cut = now - int(rng.integers(0, 32)) / 16.0
+            for i, c in enumerate(scalars):
+                if mask[i]:
+                    c.on_ack(now, None, delivered_gen=cut)
+            state = jax_txctl_ack(state, jnp.asarray(mask), now, 4.0, 8.0,
+                                  delivered_gen=cut)
+        else:  # timeout poll
+            due_scalar = [c.poll_retransmit(now) for c in scalars]
+            due, state = jax_txctl_retransmit(
+                state, now, cfg.ack_timeout, cfg.backoff, cfg.max_retries)
+            assert list(np.asarray(due)) == due_scalar
+        _assert_state_matches(scalars, state)
+
+
+def test_jax_retransmit_matches_scalar_randomized():
+    for seed in range(8):
+        _replay_random_ops(seed)
+
+
+def test_backoff_saturation_gives_up():
+    """After ``max_retries`` expired deadlines the update is abandoned —
+    in both machines — until the next fresh send rearms."""
+    cfg, (c,), state = _fresh_pair(1)
+    c.on_send(0.0, 0.0)
+    state = jax_txctl_send(state, jnp.asarray([True]), 0.0, 0.0,
+                           cfg.ack_timeout)
+    now, fired = 0.0, 0
+    for _ in range(40):
+        now += _ACK_TIMEOUT
+        s = c.poll_retransmit(now)
+        due, state = jax_txctl_retransmit(state, now, cfg.ack_timeout,
+                                          cfg.backoff, cfg.max_retries)
+        assert bool(due[0]) == s
+        fired += s
+        _assert_state_matches([c], state)
+    assert fired == _MAX_RETRIES  # the budget, then silence
+    assert c.outstanding  # still outstanding, just not retried
+    # a fresh send resets the budget
+    c.on_send(now, now)
+    state = jax_txctl_send(state, jnp.asarray([True]), now, now,
+                           cfg.ack_timeout)
+    assert c.retries == int(state.retries[0]) == 0
+    now += _ACK_TIMEOUT
+    assert c.poll_retransmit(now)
+
+
+def test_stale_ack_does_not_clear_outstanding():
+    """An ACK for older model state than the outstanding send must leave
+    the retransmission armed (the outstanding update is still in danger)."""
+    cfg, (c,), state = _fresh_pair(1)
+    c.on_send(1.0, 1.0)
+    state = jax_txctl_send(state, jnp.asarray([True]), 1.0, 1.0,
+                           cfg.ack_timeout)
+    c.on_ack(1.25, None, delivered_gen=0.5)  # stale: covers gen 0.5 < 1.0
+    state = jax_txctl_ack(state, jnp.asarray([True]), 1.25, 4.0, 8.0,
+                          delivered_gen=0.5)
+    assert c.outstanding and bool(state.outstanding[0])
+    c.on_ack(1.5, None, delivered_gen=1.0)  # covering ACK clears
+    state = jax_txctl_ack(state, jnp.asarray([True]), 1.5, 4.0, 8.0,
+                          delivered_gen=1.0)
+    assert not c.outstanding and not bool(state.outstanding[0])
+    _assert_state_matches([c], state)
+
+
+def test_legacy_jax_state_remains_valid_pytree():
+    """Four-field JaxTxState constructions (pre-retransmission callers)
+    must stay valid pytrees and flow through ack unchanged."""
+    import jax
+    from repro.core.txctl import JaxTxState
+    st = JaxTxState(last_ack=jnp.zeros(3), has_fb=jnp.zeros(3, bool),
+                    n_active=jnp.zeros(3), q_max=jnp.ones(3))
+    leaves = jax.tree_util.tree_leaves(st)
+    assert len(leaves) == 4  # None fields are empty subtrees
+    out = jax_txctl_ack(st, jnp.asarray([True, False, True]), 2.0, 4.0, 8.0)
+    assert out.outstanding is None
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis variant (skipped when the library isn't installed)
+# ---------------------------------------------------------------------------
+def test_jax_retransmit_matches_scalar_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+    def prop(seed):
+        _replay_random_ops(seed, n_workers=3, n_steps=25)
+
+    prop()

@@ -45,6 +45,9 @@ def _assert_results_equal(a, b):
     assert a.forward_launches == b.forward_launches
     assert a.switch_launches == b.switch_launches
     assert a.forwarded == b.forwarded
+    assert a.link_dropped == b.link_dropped
+    assert a.rerouted == b.rerouted
+    assert a.drops_by_switch == b.drops_by_switch
 
 
 def _payload_source(seed, dim):
@@ -137,7 +140,7 @@ def _mk(gen_time, seq=-1):
                   size_bits=64, seq=seq)
 
 
-def _two_upstream_events():
+def _two_upstream_events(routed=True):
     """Crafted trace: two upstream switches dequeue same-flow packets
     (same cluster AND worker id) before either reaches SW C — the
     ``(cluster_id, worker_id)`` match alone is ambiguous, and the later
@@ -145,27 +148,41 @@ def _two_upstream_events():
     earlier one (A at 0.011, prop 10 ms -> arrives 0.021), so dequeue
     order alone picks wrongly too. The reference path resolves it on
     ``gen_time``/``seq``; the batched path on the spec-computed arrival
-    times."""
+    times.
+
+    ``routed=True`` follows the current trace protocol: every dequeue of a
+    real update is immediately followed by one routing event naming the
+    chosen destination (``forward``) or the egress (``deliver``).
+    ``routed=False`` is the legacy shape without routing events, which the
+    consumers must still replay via the static next-hop fallback."""
     a, b = _mk(0.010), _mk(0.012)
-    return [
+    events = [
         (0.010, "SWA", "enqueue", a),
         (0.010, "SWA", "lock", a),
         (0.011, "SWA", "window", None),
         (0.011, "SWA", "dequeue", _mk(0.010)),
+        (0.011, "SWC", "forward", _mk(0.010)),
         (0.012, "SWB", "enqueue", b),
         (0.012, "SWB", "lock", b),
         (0.013, "SWB", "window", None),
         (0.013, "SWB", "dequeue", _mk(0.012)),
+        (0.013, "SWC", "forward", _mk(0.012)),
         # forwarded snapshots carry the upstream departure seq (>= 0)
         (0.020, "SWC", "enqueue", _mk(0.012, seq=0)),  # B first
         (0.020, "SWC", "lock", _mk(0.012, seq=0)),
         (0.0205, "SWC", "window", None),
         (0.0205, "SWC", "dequeue", _mk(0.012)),
+        (0.0205, "SWC", "deliver", _mk(0.012)),
         (0.021, "SWC", "enqueue", _mk(0.010, seq=0)),
         (0.021, "SWC", "lock", _mk(0.010, seq=0)),
         (0.022, "SWC", "window", None),
         (0.022, "SWC", "dequeue", _mk(0.010)),
+        (0.022, "SWC", "deliver", _mk(0.010)),
     ]
+    if not routed:
+        events = [ev for ev in events
+                  if ev[2] not in ("forward", "deliver")]
+    return events
 
 
 def _in_flight(plane, batched):
@@ -173,7 +190,7 @@ def _in_flight(plane, batched):
     if batched:
         return [u for _, _, u, _ in sorted(plane._transit[
             plane.index["SWC"]])]
-    return [q[0][1] for n in ("SWA", "SWB") for q in [plane._forward[n]]
+    return [q[0][1] for (src, dst), q in sorted(plane._forward.items())
             if q]
 
 
@@ -185,24 +202,45 @@ def test_two_upstream_same_flow_heads_disambiguate(batched):
     # feed up to the first SW C arrival and confirm the trace really puts
     # two ambiguous same-flow packets in flight at once
     if batched:
-        plane.feed_window(events[:8])
+        plane.feed_window(events[:10])
     else:
-        for ev in events[:8]:
+        for ev in events[:10]:
             plane.feed(*ev)
     in_flight = _in_flight(plane, batched)
     assert len(in_flight) == 2
     ua, ub = in_flight
     assert (ua.cluster_id, ua.worker_id) == (ub.cluster_id, ub.worker_id)
     if batched:
-        plane.feed_window(events[8:])
+        plane.feed_window(events[10:])
     else:
-        for ev in events[8:]:
+        for ev in events[10:]:
             plane.feed(*ev)
     res = plane.result()
     assert len(res.delivered) == 2
     # B's packet (row 1) was delivered first, A's (row 0) second — matched
     # on gen_time/seq (reference) / spec arrival order (batched), not on
     # departure order
+    assert res.delivered[0][1].gen_time == 0.012
+    assert res.delivered[1][1].gen_time == 0.010
+    np.testing.assert_array_equal(np.asarray(res.delivered[0][2]), rows[1])
+    np.testing.assert_array_equal(np.asarray(res.delivered[1][2]), rows[0])
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_legacy_trace_without_routing_events(batched):
+    """Traces recorded before the routing-event protocol (no
+    forward/deliver/linkdrop events) must still replay: departures fall
+    back to the static next-hop and deliveries to the egress rule."""
+    switches, rows = _two_upstream_plane()
+    plane = HybridMultiSwitchDataPlane(switches, {"SWA", "SWB"}, DIM, rows)
+    events = _two_upstream_events(routed=False)
+    if batched:
+        plane.feed_window(events)
+    else:
+        for ev in events:
+            plane.feed(*ev)
+    res = plane.result()
+    assert len(res.delivered) == 2
     assert res.delivered[0][1].gen_time == 0.012
     assert res.delivered[1][1].gen_time == 0.010
     np.testing.assert_array_equal(np.asarray(res.delivered[0][2]), rows[1])
