@@ -3,8 +3,13 @@
 Checkpoints are ``.npz`` files keyed by flattened param paths plus a JSON
 manifest (step, config fingerprint). Restore accepts a *different* mesh /
 sharding than the save used (elastic scaling): arrays are loaded on host and
-``jax.device_put`` with the new sharding. Atomic write (tmp + rename) so a
-killed writer never corrupts the latest checkpoint — restart-safe.
+``jax.device_put`` with the new sharding. Atomic write (tmp + rename) for
+the array blob, the manifest, and the ``LATEST`` pointer, so a killed
+writer never corrupts the latest checkpoint — restart-safe.
+
+Beyond params/opt, ``aux`` carries named auxiliary pytrees (device queue
+state, txctl buffers, AoM state, host-side counters) so the whole
+asynchronous training plane — not just the model — survives a restart.
 """
 from __future__ import annotations
 
@@ -32,9 +37,29 @@ def _unflatten(flat: Dict[str, Any]) -> Any:
     return root
 
 
+def _atomic_write_text(path: Path, text: str) -> None:
+    """tmp + rename so a killed writer never leaves a truncated file."""
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
 def save_checkpoint(directory: str, step: int, params: Any,
-                    opt_state: Any = None, extra: Optional[dict] = None) -> str:
-    """Atomic save; returns the checkpoint path."""
+                    opt_state: Any = None, extra: Optional[dict] = None,
+                    aux: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic save; returns the checkpoint path.
+
+    ``aux`` maps names to arbitrary pytrees (queue / txctl / AoM buffers,
+    host counter arrays); each is flattened and stored under
+    ``aux/<name>/<i>``. Restore them by passing a structurally identical
+    ``aux_like`` to :func:`restore_checkpoint`.
+    """
     d = Path(directory)
     d.mkdir(parents=True, exist_ok=True)
 
@@ -53,16 +78,26 @@ def save_checkpoint(directory: str, step: int, params: Any,
         manifest_opt = str(treedef)
     else:
         manifest_opt = None
+    aux_manifest = {}
+    if aux:
+        for name, tree in aux.items():
+            leaves, treedef = jax.tree_util.tree_flatten(tree)
+            for i, leaf in enumerate(leaves):
+                flat[f"aux/{name}/{i}"] = to_np(leaf)
+            aux_manifest[name] = {"n_leaves": len(leaves),
+                                  "treedef": str(treedef)}
     path = d / f"ckpt_{step:08d}.npz"
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz")
     os.close(fd)
     np.savez(tmp, **flat)  # savez keeps the name (already ends with .npz)
     os.replace(tmp, path)
     manifest = {"step": step, "n_arrays": len(flat),
-                "opt_treedef": manifest_opt, "extra": extra or {}}
-    mpath = d / f"ckpt_{step:08d}.json"
-    mpath.write_text(json.dumps(manifest))
-    (d / "LATEST").write_text(str(step))
+                "opt_treedef": manifest_opt, "aux": aux_manifest,
+                "extra": extra or {}}
+    _atomic_write_text(d / f"ckpt_{step:08d}.json", json.dumps(manifest))
+    # LATEST flips only after blob + manifest are durable: a reader never
+    # sees a step whose files are incomplete
+    _atomic_write_text(d / "LATEST", str(step))
     return str(path)
 
 
@@ -73,16 +108,33 @@ def latest_step(directory: str) -> Optional[int]:
     return int(f.read_text().strip())
 
 
+def read_manifest(directory: str, step: Optional[int] = None) -> dict:
+    """The JSON manifest of ``step`` (default: latest) — carries the
+    caller's ``extra`` dict (e.g. scalar PS state) alongside the layout."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    return json.loads((Path(directory) / f"ckpt_{step:08d}.json").read_text())
+
+
 def restore_checkpoint(directory: str, step: Optional[int] = None, *,
                        params_like: Any, opt_like: Any = None,
-                       shardings: Any = None, opt_shardings: Any = None
-                       ) -> Tuple[int, Any, Any]:
+                       shardings: Any = None, opt_shardings: Any = None,
+                       aux_like: Optional[Dict[str, Any]] = None):
     """Restore onto (possibly different) shardings — elastic re-mesh.
 
     ``params_like``/``opt_like`` provide the pytree structure; ``shardings``
     (same structure, jax.sharding.Sharding leaves) place each array. Arrays
     whose saved shape differs only by head/vocab padding are zero-padded or
     sliced to fit (checkpoints travel across tp sizes).
+
+    Returns ``(step, params, opt_state)``; with ``aux_like`` (a dict of
+    named like-pytrees matching the save-side ``aux``) it returns
+    ``(step, params, opt_state, aux)`` instead. Aux leaves that are numpy
+    arrays in ``aux_like`` restore as numpy with the like dtype preserved
+    (float64 host counters survive exactly); jax leaves restore as jax
+    arrays.
     """
     if step is None:
         step = latest_step(directory)
@@ -110,7 +162,22 @@ def restore_checkpoint(directory: str, step: Optional[int] = None, *,
             leaves.append(jax.device_put(jarr, sh_leaves[i])
                           if sh_leaves[i] is not None else jarr)
         opt_state = jax.tree_util.tree_unflatten(treedef, leaves)
-    return step, params, opt_state
+    if aux_like is None:
+        return step, params, opt_state
+    aux: Dict[str, Any] = {}
+    for name, tree in aux_like.items():
+        leaves_like, treedef = jax.tree_util.tree_flatten(tree)
+        leaves = []
+        for i, like in enumerate(leaves_like):
+            arr = _fit(data[f"aux/{name}/{i}"], np.shape(like))
+            if isinstance(like, np.ndarray):
+                # host-side state: keep numpy, preserve the like dtype
+                leaves.append(np.asarray(arr, like.dtype))
+            else:
+                leaves.append(jax.numpy.asarray(arr).astype(
+                    getattr(like, "dtype", arr.dtype)))
+        aux[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+    return step, params, opt_state, aux
 
 
 def _fit(arr: np.ndarray, shape) -> np.ndarray:

@@ -47,6 +47,12 @@ class Update:
     replaceable: bool = True  # replace_status flag: un-aggregated, same-worker replace OK
     retx: int = 0  # 0 = fresh send; k>0 = k-th ACK-timeout retransmission
     #   of a previously sent update (same gen_time, same payload)
+    uids: Optional[frozenset] = None  # unique ids of the fresh sends whose
+    #   information this packet carries. A retransmitted copy reuses the
+    #   original's uid, so counting distinct delivered uids never exceeds
+    #   the number of fresh sends (the delivery_rate <= 1 invariant).
+    defers: int = 0  # times this update was deferred by the PS staleness
+    #   admission control and re-queued at the egress switch to recombine
 
     def clone(self) -> "Update":
         return dataclasses.replace(
@@ -92,6 +98,8 @@ def aggregate(waiting: Update, incoming: Update) -> Update:
         reward=max(waiting.reward, incoming.reward),
         seq=waiting.seq,
         replaceable=False,  # an aggregation disables same-worker replacement
+        uids=_merge_uids(waiting.uids, incoming.uids),
+        defers=max(waiting.defers, incoming.defers),
     )
 
 
@@ -100,4 +108,16 @@ def replace(waiting: Update, incoming: Update) -> Update:
     out = incoming.clone() if incoming.payload is not None else dataclasses.replace(incoming)
     out.seq = waiting.seq
     out.subsumed = waiting.subsumed + incoming.subsumed
+    # the replacing update subsumes the waiting one's information, so its
+    # delivery also covers the waiting update's fresh sends
+    out.uids = _merge_uids(waiting.uids, incoming.uids)
+    out.defers = max(waiting.defers, incoming.defers)
     return out
+
+
+def _merge_uids(a: Optional[frozenset], b: Optional[frozenset]) -> Optional[frozenset]:
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return a | b

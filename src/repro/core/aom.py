@@ -174,3 +174,16 @@ def jax_aom_average(state: JaxAoMState, horizon) -> jnp.ndarray:
     tail = dt * ((state.last_t - state.last_gen)
                  + (horizon - state.last_gen)) / 2.0
     return (state.integral + tail) / jnp.maximum(horizon, 1e-9)
+
+
+def jax_staleness_mask(now, gen_times, bound) -> jnp.ndarray:
+    """PS staleness admission control: True for updates whose age at
+    arrival — ``now - gen_time`` — is within the hard ``bound``.
+
+    AND this into ``olaf_step``'s drain ``valid`` mask before the weight
+    apply: an over-stale row is popped (slot freed) but never applied and
+    never advances the AoM sawtooth (``jax_aom_update`` freezes on
+    ``valid=False``), the device-resident mirror of the event simulator's
+    ``SimCfg.staleness_bound`` rejection path."""
+    age = jnp.asarray(now, jnp.float32) - jnp.asarray(gen_times, jnp.float32)
+    return age <= jnp.float32(bound)

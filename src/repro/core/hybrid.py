@@ -169,6 +169,13 @@ class HybridResult:
     link_dropped: int = 0  # departures lost to link faults (slots cleared)
     rerouted: int = 0  # departures steered off the primary next hop
     drops_by_switch: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # ---- node-fault accounting (mirrors SimResult's) ---------------------
+    ps_dropped: int = 0  # departures lost to a PSFault recovery window
+    stale_rejected: int = 0  # departures rejected by the staleness bound
+    stale_deferred: int = 0  # defer-and-recombine re-enqueues (OLAF egress)
+    worker_crashes: int = 0
+    worker_restarts: int = 0
+    worker_straggles: int = 0
 
 
 class HybridMultiSwitchDataPlane:
@@ -237,6 +244,12 @@ class HybridMultiSwitchDataPlane:
         self.link_dropped = 0
         self.rerouted = 0
         self.drops_by_switch: Dict[str, int] = {}
+        self.ps_dropped = 0
+        self.stale_rejected = 0
+        self.stale_deferred = 0
+        self.worker_crashes = 0
+        self.worker_restarts = 0
+        self.worker_straggles = 0
 
     # -- flush cadence ------------------------------------------------------
     def _flush_names(self, sw_name: str) -> Tuple[str, ...]:
@@ -329,13 +342,29 @@ class HybridMultiSwitchDataPlane:
         _order, upd, row = self._forward[key].popleft()
         return upd, row
 
-    ROUTE_KINDS = frozenset({"forward", "deliver", "linkdrop"})
+    ROUTE_KINDS = frozenset({"forward", "deliver", "linkdrop",
+                             "psdrop", "staledrop", "stalerequeue"})
+    # node-churn markers: no queue effect, replayed for the counters (they
+    # never interleave into a dequeue's pending departure — the simulator
+    # emits dequeue and its routing event inside one heap callback)
+    NODE_KINDS = frozenset({"crash", "restart", "straggle"})
+
+    def _node_event(self, kind: str) -> None:
+        if kind == "crash":
+            self.worker_crashes += 1
+        elif kind == "restart":
+            self.worker_restarts += 1
+        else:
+            self.worker_straggles += 1
 
     # -- per-event reference replay ----------------------------------------
     def feed(self, now: float, sw_name: str, kind: str,
              meta: Optional[Update]) -> None:
         """One-event-per-call replay — the reference the batched
         :meth:`feed_window` is property-tested against."""
+        if kind in self.NODE_KINDS:
+            self._node_event(kind)
+            return
         if kind in self.ROUTE_KINDS:  # the deferred departure's routing
             self._route(kind, sw_name)  # decision ("forward" names the dst)
             return
@@ -379,6 +408,9 @@ class HybridMultiSwitchDataPlane:
                 self._classify_run(name, run)
 
         for now, sw_name, kind, meta in events:
+            if kind in self.NODE_KINDS:
+                self._node_event(kind)
+                continue
             if kind in self.ROUTE_KINDS:
                 self._route(kind, sw_name)
                 continue
@@ -437,14 +469,17 @@ class HybridMultiSwitchDataPlane:
     def _route(self, kind: str, event_name: str) -> None:
         """Consume the deferred departure with its routing decision:
         ``forward`` (event_name = destination switch), ``deliver`` (PS),
-        or ``linkdrop`` (the fault model lost it — the slot is cleared by
-        the same drain dispatch and the device row is discarded)."""
+        ``linkdrop`` / ``psdrop`` / ``staledrop`` (the packet is lost — the
+        slot is cleared by the same drain dispatch and the device row is
+        discarded), or ``stalerequeue`` (staleness admission deferred it:
+        the drained row goes back in flight toward the *same* switch, a
+        forward-to-self, so it can recombine with fresher traffic)."""
         assert self._pending_depart is not None, \
             f"routing event {kind}@{event_name} without a pending departure"
         now, src_name, upd, slot, batched = self._pending_depart
         self._pending_depart = None
         s = self.index[src_name]
-        if kind == "forward":
+        if kind == "forward" or kind == "stalerequeue":
             hop = self.index[event_name]
         else:
             hop = -1 if kind == "deliver" else -2
@@ -455,12 +490,21 @@ class HybridMultiSwitchDataPlane:
             self.drops_by_switch[src_name] = \
                 self.drops_by_switch.get(src_name, 0) + 1
             return
+        if kind == "psdrop":
+            self.ps_dropped += 1
+            return
+        if kind == "staledrop":
+            self.stale_rejected += 1
+            return
         if kind == "deliver":
             self.delivered.append((now, upd, row))
             return
-        self.forwarded += 1
-        if hop != int(self.spec.next_hop[s]):
-            self.rerouted += 1
+        if kind == "stalerequeue":
+            self.stale_deferred += 1
+        else:
+            self.forwarded += 1
+            if hop != int(self.spec.next_hop[s]):
+                self.rerouted += 1
         if batched:
             heapq.heappush(self._transit[hop],
                            (now + float(self.spec.prop_delay[s]),
@@ -633,7 +677,13 @@ class HybridMultiSwitchDataPlane:
             forwarded=self.forwarded,
             link_dropped=self.link_dropped,
             rerouted=self.rerouted,
-            drops_by_switch=dict(self.drops_by_switch))
+            drops_by_switch=dict(self.drops_by_switch),
+            ps_dropped=self.ps_dropped,
+            stale_rejected=self.stale_rejected,
+            stale_deferred=self.stale_deferred,
+            worker_crashes=self.worker_crashes,
+            worker_restarts=self.worker_restarts,
+            worker_straggles=self.worker_straggles)
 
 
 def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,

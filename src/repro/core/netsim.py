@@ -95,15 +95,53 @@ class SwitchStall:
 
 
 @dataclasses.dataclass
+class WorkerFault:
+    """Node-level fault for one worker.
+
+    ``crash_t`` kills the worker at that instant: generation stops, its
+    outstanding retransmission state dies with the process, and it stops
+    hearing ACK multicasts. ``restart_delay`` (requires ``crash_t``)
+    brings it back ``delay`` seconds later as a *fresh* member — elastic
+    membership: the transmission controller rejoins with no feedback and
+    no outstanding update, but keeps its RNG object so the random stream
+    stays deterministic. ``slowdown`` > 1 makes the worker a straggler
+    (its generation interval is multiplied) for the whole run."""
+
+    worker: int
+    crash_t: Optional[float] = None
+    restart_delay: Optional[float] = None
+    slowdown: float = 1.0
+
+
+@dataclasses.dataclass
+class PSFault:
+    """Parameter-server restart at ``restart_t``: for ``recovery`` seconds
+    the PS accepts nothing (arrivals in the window are dropped and must be
+    recovered by worker retransmission), after which
+    ``SimCfg.on_ps_restart`` fires so the trainer can restore from its
+    latest checkpoint."""
+
+    restart_t: float
+    recovery: float = 0.0
+
+    def down(self, t: float) -> bool:
+        return self.restart_t <= t < self.restart_t + self.recovery
+
+
+@dataclasses.dataclass
 class FaultSpec:
     """Declarative failure scenario attached to ``SimCfg.faults``.
 
     All randomness draws from a dedicated stream (``seed``), so enabling
     a zero-probability FaultSpec leaves a run byte-identical to the
-    fault-free baseline."""
+    fault-free baseline. Node faults (``workers`` / ``ps``) are scheduled
+    deterministically and consume no randomness at all, so a WorkerFault
+    with no crash and unit slowdown is likewise a no-op."""
 
     links: List[LinkFault] = dataclasses.field(default_factory=list)
     stalls: List[SwitchStall] = dataclasses.field(default_factory=list)
+    workers: List[WorkerFault] = dataclasses.field(default_factory=list)
+    ps: List[PSFault] = dataclasses.field(default_factory=list)
     seed: int = 0
 
     def _match(self, src: str, dst: Optional[str]):
@@ -129,6 +167,16 @@ class FaultSpec:
                 end = st.until_t if end is None else max(end, st.until_t)
         return end
 
+    def worker_slowdown(self, worker_id: int) -> float:
+        f = 1.0
+        for wf in self.workers:
+            if wf.worker == worker_id:
+                f *= wf.slowdown
+        return f
+
+    def ps_down(self, t: float) -> bool:
+        return any(pf.down(t) for pf in self.ps)
+
 
 @dataclasses.dataclass
 class SimCfg:
@@ -141,6 +189,16 @@ class SimCfg:
     faults: Optional[FaultSpec] = None  # None => loss-free fabric
     route_policy: str = "static"  # multi-path hop selection (see topology)
     active_window: float = 1.0  # sliding window for "active clusters" count
+    # PS staleness admission control: a hard bound on (arrival - gen_time).
+    # Over-stale packets arriving at the PS are rejected outright on FIFO
+    # egress queues; on OLAF egress queues they are deferred back into the
+    # egress switch (up to ``max_stale_defers`` times) to recombine with
+    # fresher same-cluster traffic before a final rejection.
+    staleness_bound: Optional[float] = None
+    max_stale_defers: int = 1
+    # on_ps_restart(now): fires when a PSFault recovery window closes, so
+    # the trainer can restore PS state from its latest checkpoint.
+    on_ps_restart: Optional[Callable[[float], None]] = None
     # hooks: async-trainer integration.
     # payload_fn(now, worker_id) -> (payload array | None, reward float):
     #   called when a worker generates a fresh update (real PPO gradient).
@@ -151,20 +209,27 @@ class SimCfg:
     on_ack: Optional[Callable[[float, int, object], None]] = None
     # on_queue_event(now, switch_name, kind, update) with kind in
     # {"enqueue", "lock", "window", "dequeue", "forward", "deliver",
-    # "linkdrop"}: fires on every queue transition in event order. This is
-    # the control-plane trace consumed by the hybrid device data plane
-    # (``repro.core.hybrid``), which replays the switch decisions host-side
-    # while all payload bytes move on the accelerator. "window" marks a
-    # transmission-window boundary — it fires when a transmission
-    # completes, immediately before the departing "dequeue" (the payload
-    # must be materialized before it leaves the switch), so a windowed
-    # consumer can flush its batched combines there without trace
+    # "linkdrop", "psdrop", "staledrop", "stalerequeue", "crash",
+    # "restart", "straggle"}: fires on every queue transition in event
+    # order. This is the control-plane trace consumed by the hybrid device
+    # data plane (``repro.core.hybrid``), which replays the switch
+    # decisions host-side while all payload bytes move on the accelerator.
+    # "window" marks a transmission-window boundary — it fires when a
+    # transmission completes, immediately before the departing "dequeue"
+    # (the payload must be materialized before it leaves the switch), so a
+    # windowed consumer can flush its batched combines there without trace
     # lookahead. Every "dequeue" of a real update is immediately followed
     # by exactly one routing event recording the control-plane decision:
     # "forward" to the chosen next hop (its switch_name is the
-    # *destination*), "deliver" to the PS, or "linkdrop" when a fault
-    # dropped it — so multi-path choices and failures replay identically
-    # in the per-event and windowed consumers.
+    # *destination*), "deliver" to the PS, "linkdrop" when a fault dropped
+    # it, "psdrop" when the PS was inside a PSFault recovery window at
+    # arrival, "staledrop" when the staleness admission control rejected
+    # it, or "stalerequeue" when admission control deferred it back into
+    # the same egress switch — so multi-path choices and failures replay
+    # identically in the per-event and windowed consumers. The node-fault
+    # kinds "crash" / "restart" / "straggle" fire at the worker's ingress
+    # switch with a metadata-only update naming the worker; they carry no
+    # queue effect and exist so node churn replays through the trace.
     on_queue_event: Optional[Callable[[float, str, str, Optional[Update]], None]] = None
 
 
@@ -231,6 +296,16 @@ class SimResult:
     drops_by_switch: Dict[str, int] = dataclasses.field(default_factory=dict)
     reroutes_by_switch: Dict[str, int] = dataclasses.field(
         default_factory=dict)
+    # ---- node-fault accounting (worker/PS churn, staleness admission) ----
+    unique_delivered: int = 0  # distinct fresh sends whose information
+    #   reached the PS (uid-deduplicated: retransmitted copies and
+    #   combine-subsumed updates count once)
+    ps_dropped: int = 0  # packets lost to a PSFault recovery window
+    stale_rejected: int = 0  # packets rejected by the staleness bound
+    stale_deferred: int = 0  # defer-and-recombine events (OLAF egress)
+    worker_crashes: int = 0
+    worker_restarts: int = 0
+    ps_restarts: int = 0
 
     # ---- derived metrics -------------------------------------------------
     @property
@@ -259,7 +334,21 @@ class SimResult:
 
     @property
     def delivery_rate(self) -> float:
-        """Fraction of sent raw updates that reached the PS."""
+        """Fraction of unique sent updates whose information reached the
+        PS. Each fresh send carries a unique id; a retransmitted copy
+        reuses the original's id and combining unions them, so this can
+        never exceed 1.0 (the raw per-copy ratio lives in
+        ``raw_delivery_rate``)."""
+        if self.sent == 0:
+            return 1.0
+        return self.unique_delivered / self.sent
+
+    @property
+    def raw_delivery_rate(self) -> float:
+        """Raw subsumed-update copies delivered / fresh sends. Exceeds 1.0
+        when retransmitted duplicates of the same update all deliver —
+        kept for loss-decomposition continuity; use ``delivery_rate`` for
+        the normalized metric."""
         if self.sent == 0:
             return 1.0
         return self.raw_updates_delivered / self.sent
@@ -327,8 +416,20 @@ class NetworkSimulator:
         fseed = (cfg.faults.seed if cfg.faults is not None else 0)
         self.fault_rng = np.random.default_rng(
             fseed * 104729 + cfg.seed * 7919 + 11)
-        # worker-side retransmission cache: last sent (gen, reward, payload)
-        self._last_sent: Dict[int, Tuple[float, float, Optional[np.ndarray]]] = {}
+        # worker-side retransmission cache: last sent
+        # (gen, reward, payload, uid)
+        self._last_sent: Dict[
+            int, Tuple[float, float, Optional[np.ndarray], int]] = {}
+        # node-fault machinery: crashed workers, per-worker generation-chain
+        # epochs (a crash/restart bumps the epoch so pre-crash chain events
+        # become no-ops), and PS availability windows
+        self._worker_cfg: Dict[int, WorkerCfg] = {
+            w.worker_id: w for w in cfg.workers}
+        self._crashed: set = set()
+        self._worker_epoch: Dict[int, int] = defaultdict(int)
+        # unique-send accounting for the normalized delivery rate
+        self._uid_seq = itertools.count()
+        self._delivered_uids: set = set()
         # metrics
         self.deliveries: Dict[int, List[Tuple[float, float]]] = defaultdict(list)
         self.delivered_updates: List[Update] = []
@@ -346,12 +447,20 @@ class NetworkSimulator:
         self.reroutes_by_switch: Dict[str, int] = defaultdict(int)
         self._dropped_info: List[Tuple[int, float]] = []  # (cluster, gen)
         self._max_delivered_gen: Dict[int, float] = {}
+        # node-fault accounting
+        self.ps_dropped = 0
+        self.stale_rejected = 0
+        self.stale_deferred = 0
+        self.worker_crashes = 0
+        self.worker_restarts = 0
+        self.ps_restarts = 0
 
     # -- event plumbing ----------------------------------------------------
     def _at(self, t: float, fn: Callable[[], None]) -> None:
         heapq.heappush(self._events, (t, next(self._eseq), fn))
 
     def run(self) -> SimResult:
+        self._schedule_node_faults()
         for w in self.cfg.workers:
             self._schedule_generation(w, first=True)
         while self._events:
@@ -385,7 +494,82 @@ class NetworkSimulator:
             unrecovered_drops=unrecovered,
             drops_by_switch=dict(self.drops_by_switch),
             reroutes_by_switch=dict(self.reroutes_by_switch),
+            unique_delivered=len(self._delivered_uids),
+            ps_dropped=self.ps_dropped,
+            stale_rejected=self.stale_rejected,
+            stale_deferred=self.stale_deferred,
+            worker_crashes=self.worker_crashes,
+            worker_restarts=self.worker_restarts,
+            ps_restarts=self.ps_restarts,
         )
+
+    # -- node faults (worker crash/restart/straggle, PS restart) -----------
+    def _schedule_node_faults(self) -> None:
+        if self.faults is None:
+            return
+        for wf in self.faults.workers:
+            w = self._worker_cfg.get(wf.worker)
+            if w is None:
+                continue
+            if wf.slowdown != 1.0:
+                # one trace event at t=0 so straggler membership replays
+                self._queue_event(w.ingress_switch, "straggle",
+                                  self._node_event_update(w, wf.slowdown))
+            if wf.crash_t is not None:
+                self._at(wf.crash_t, lambda f=wf: self._on_worker_crash(f))
+                if wf.restart_delay is not None:
+                    self._at(wf.crash_t + wf.restart_delay,
+                             lambda f=wf: self._on_worker_restart(f))
+        for pf in self.faults.ps:
+            self._at(pf.restart_t + pf.recovery,
+                     lambda: self._on_ps_restarted())
+
+    def _node_event_update(self, w: WorkerCfg, reward: float = 0.0) -> Update:
+        """Metadata-only marker naming the worker, for node-fault trace
+        events (never enqueued anywhere)."""
+        return Update(cluster_id=w.cluster_id, worker_id=w.worker_id,
+                      gen_time=self.now, reward=reward)
+
+    def _ps_down(self, t: float) -> bool:
+        return self.faults is not None and self.faults.ps_down(t)
+
+    def _on_worker_crash(self, wf: WorkerFault) -> None:
+        if wf.worker in self._crashed:
+            return
+        self._crashed.add(wf.worker)
+        self._worker_epoch[wf.worker] += 1  # kill the generation chain
+        self.worker_crashes += 1
+        w = self._worker_cfg[wf.worker]
+        self._queue_event(w.ingress_switch, "crash",
+                          self._node_event_update(w))
+
+    def _on_worker_restart(self, wf: WorkerFault) -> None:
+        if wf.worker not in self._crashed:
+            return
+        self._crashed.discard(wf.worker)
+        self._worker_epoch[wf.worker] += 1
+        self.worker_restarts += 1
+        w = self._worker_cfg[wf.worker]
+        ctl = self.controllers.get(wf.worker)
+        if ctl is not None:
+            # elastic membership: rejoin as a fresh member — feedback and
+            # outstanding-update state died with the process, but the RNG
+            # object survives so the send-decision stream stays seeded
+            ctl.last_ack_time = None
+            ctl.feedback = None
+            ctl.outstanding = False
+            ctl.sent_gen = -math.inf
+            ctl.deadline = math.inf
+            ctl.retries = 0
+        self._last_sent.pop(wf.worker, None)
+        self._queue_event(w.ingress_switch, "restart",
+                          self._node_event_update(w))
+        self._schedule_generation(w)
+
+    def _on_ps_restarted(self) -> None:
+        self.ps_restarts += 1
+        if self.cfg.on_ps_restart is not None:
+            self.cfg.on_ps_restart(self.now)
 
     # -- worker side ---------------------------------------------------------
     def _next_gen_time(self, w: WorkerCfg) -> Optional[float]:
@@ -395,6 +579,10 @@ class NetworkSimulator:
         if w.trace is not None:
             return w.trace[k] if k < len(w.trace) else None
         base = w.gen_interval
+        if self.faults is not None:
+            slow = self.faults.worker_slowdown(w.worker_id)
+            if slow != 1.0:  # guard: keep unit-slowdown byte-identical
+                base *= slow
         if w.gen_jitter > 0:
             base *= 1.0 + w.gen_jitter * (2 * self.rng.random() - 1)
         return (self.now if k else 0.0) + base
@@ -403,9 +591,18 @@ class NetworkSimulator:
         t = self._next_gen_time(w)
         if t is None:
             return
-        self._at(t, lambda: self._on_generate(w))
+        # a restart may schedule from a trace time already in the past;
+        # never let the event heap regress virtual time
+        t = max(t, self.now)
+        epoch = self._worker_epoch[w.worker_id]
+        self._at(t, lambda: self._on_generate(w, epoch))
 
-    def _on_generate(self, w: WorkerCfg) -> None:
+    def _on_generate(self, w: WorkerCfg, epoch: Optional[int] = None) -> None:
+        if epoch is not None and epoch != self._worker_epoch[w.worker_id]:
+            return  # chain superseded by a crash/restart; the new epoch
+            #   (if any) has its own chain
+        if w.worker_id in self._crashed:
+            return  # worker is down; restart reschedules the chain
         self.generated += 1
         self._gen_count[w.worker_id] += 1
         ctl = self.controllers.get(w.worker_id)
@@ -417,13 +614,14 @@ class NetworkSimulator:
             payload, reward = (None, 0.0)
             if self.cfg.payload_fn is not None:
                 payload, reward = self.cfg.payload_fn(self.now, w.worker_id)
+            uid = next(self._uid_seq)
             upd = Update(cluster_id=w.cluster_id, worker_id=w.worker_id,
                          gen_time=self.now, reward=reward, payload=payload,
-                         size_bits=w.size_bits)
+                         size_bits=w.size_bits, uids=frozenset((uid,)))
             if ctl is not None and ctl.cfg.ack_timeout is not None:
                 # arm loss recovery: remember what we sent and poll the
                 # controller when its ACK deadline expires
-                self._last_sent[w.worker_id] = (self.now, reward, payload)
+                self._last_sent[w.worker_id] = (self.now, reward, payload, uid)
                 ctl.on_send(self.now, self.now)
                 self._at(ctl.deadline, lambda: self._maybe_retransmit(w))
             self._arrive_at_switch(w.ingress_switch, upd)
@@ -435,15 +633,20 @@ class NetworkSimulator:
         """ACK-deadline poll: re-send the worker's outstanding update if
         the controller says its timeout (with exponential backoff) expired
         and the retry budget allows another copy."""
+        if w.worker_id in self._crashed:
+            return  # the retransmission state died with the process
         ctl = self.controllers.get(w.worker_id)
         if ctl is None or not ctl.poll_retransmit(self.now):
             return  # acked, superseded, stale poll, or budget exhausted
-        gen, reward, payload = self._last_sent[w.worker_id]
+        gen, reward, payload, uid = self._last_sent[w.worker_id]
         self.retransmits += 1
+        # the copy reuses the original's uid: delivering either (or both)
+        # counts the fresh send as delivered exactly once
         upd = Update(cluster_id=w.cluster_id, worker_id=w.worker_id,
                      gen_time=gen, reward=reward,
                      payload=None if payload is None else payload.copy(),
-                     size_bits=w.size_bits, retx=ctl.retries)
+                     size_bits=w.size_bits, retx=ctl.retries,
+                     uids=frozenset((uid,)))
         self._arrive_at_switch(w.ingress_switch, upd)
         self._at(ctl.deadline, lambda: self._maybe_retransmit(w))
 
@@ -516,6 +719,33 @@ class NetworkSimulator:
             if self._link_faulted(name, None):
                 self._record_drop(name, upd)
                 return
+            if self._ps_down(arrive):
+                # the PS is inside a PSFault recovery window when this
+                # packet would land: it is lost, but (unlike a staleness
+                # rejection) recoverable — no ACK arrives, so the worker's
+                # retransmission timer covers it
+                self.ps_dropped += 1
+                self._dropped_info.append((upd.cluster_id, upd.gen_time))
+                self._queue_event(name, "psdrop", upd)
+                return
+            bound = self.cfg.staleness_bound
+            if bound is not None and (arrive - upd.gen_time) > bound:
+                sw_q = sw.queue
+                if (isinstance(sw_q, PyOlafQueue)
+                        and upd.defers < self.cfg.max_stale_defers):
+                    # OLAF egress: defer-and-recombine — re-enqueue at the
+                    # same switch so Algorithm 1 can merge it with fresher
+                    # same-cluster traffic before the retry
+                    upd.defers += 1
+                    self.stale_deferred += 1
+                    self._queue_event(name, "stalerequeue", upd)
+                    self._at(arrive,
+                             lambda u=upd, n=name: self._arrive_at_switch(n, u))
+                    return
+                # FIFO egress (or defer budget spent): hard rejection
+                self.stale_rejected += 1
+                self._queue_event(name, "staledrop", upd)
+                return
             self._queue_event(name, "deliver", upd)
             self._at(arrive, lambda u=upd: self._deliver_to_ps(u))
             return
@@ -566,6 +796,8 @@ class NetworkSimulator:
         self.deliveries[upd.cluster_id].append((self.now, upd.gen_time))
         self.delivered_updates.append(upd)
         self.agg_counts.append(upd.agg_count)
+        if upd.uids is not None:
+            self._delivered_uids |= upd.uids
         prev = self._max_delivered_gen.get(upd.cluster_id, -math.inf)
         self._max_delivered_gen[upd.cluster_id] = max(prev, upd.gen_time)
         payload = None
@@ -594,6 +826,8 @@ class NetworkSimulator:
 
     def _on_ack(self, worker_id: int, fb: QueueFeedback, payload: object,
                 delivered_gen: Optional[float] = None) -> None:
+        if worker_id in self._crashed:
+            return  # a down worker misses the ACK multicast
         ctl = self.controllers.get(worker_id)
         if ctl is not None:
             ctl.on_ack(self.now, fb, delivered_gen=delivered_gen)

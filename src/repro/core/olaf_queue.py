@@ -581,9 +581,23 @@ def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
         n_dropped=nd, n_agg=na, n_repl=nr)
 
 
+def expire_inactive_drains(out: Dict[str, jnp.ndarray], active_workers
+                           ) -> Dict[str, jnp.ndarray]:
+    """Algorithm 1 node-churn gating: drained rows belonging to crashed
+    workers are treated as *expired* — the slot is freed (the drain already
+    popped it) but the row is masked invalid, so it is never applied to the
+    model and never advances the AoM sawtooth (``jax_aom_update`` freezes
+    on ``valid=False``). ``active_workers`` is a bool (W,) membership mask;
+    works for both the single-queue (k,) and multi-queue (S, k) layouts."""
+    aw = jnp.asarray(active_workers, bool)
+    w = jnp.clip(out["worker"], 0, aw.shape[0] - 1)  # invalid rows carry -1
+    valid = out["valid"] & aw[w]
+    return dict(out, valid=valid, n_valid=valid.sum(axis=-1))
+
+
 def jax_olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
                  payloads, k: int, reward_threshold: float = jnp.inf,
-                 send=None, capacity=None
+                 send=None, capacity=None, active_workers=None
                  ) -> Tuple[JaxQueueState, Dict[str, jnp.ndarray]]:
     """One full data-plane cycle: burst enqueue then drain-k, in one trace.
 
@@ -594,11 +608,16 @@ def jax_olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
     gates each burst row (worker-side transmission control, §5): a gated-out
     update is deferred and never touches the queue. ``capacity`` caps the
     logical slot count below the padded buffer size (heterogeneous
-    per-switch slot vectors, see :func:`jax_enqueue`).
+    per-switch slot vectors, see :func:`jax_enqueue`). ``active_workers``
+    (bool (W,)) expires drained rows of crashed workers — see
+    :func:`expire_inactive_drains`.
     """
     state = jax_enqueue_burst(state, clusters, workers, gen_times, rewards,
                               payloads, reward_threshold, send, capacity)
-    return jax_dequeue_burst(state, k)
+    state, out = jax_dequeue_burst(state, k)
+    if active_workers is not None:
+        out = expire_inactive_drains(out, active_workers)
+    return state, out
 
 
 # ---------------------------------------------------------------------------

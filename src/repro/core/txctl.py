@@ -149,9 +149,17 @@ class JaxTxState:
     sent_gen: Optional[jnp.ndarray] = None  # float32[W]
     deadline: Optional[jnp.ndarray] = None  # float32[W]
     retries: Optional[jnp.ndarray] = None  # int32[W]
+    # node-churn membership mask: False = crashed worker. None (the
+    # default, and another empty subtree) means everyone is active — the
+    # gate sends nothing for, retransmits nothing for, and ACKs nothing to
+    # inactive workers. Set via :func:`jax_txctl_set_active`.
+    active: Optional[jnp.ndarray] = None  # bool[W]
 
 
-def jax_txctl_init(n_workers: int) -> JaxTxState:
+def jax_txctl_init(n_workers: int, *, track_active: bool = False) -> JaxTxState:
+    """``track_active=True`` materializes the membership mask (all-ones)
+    so node churn can toggle it without changing the pytree structure
+    mid-run (a structure change would retrace the jitted PS step)."""
     return JaxTxState(
         last_ack=jnp.zeros((n_workers,), jnp.float32),
         has_fb=jnp.zeros((n_workers,), bool),
@@ -161,7 +169,36 @@ def jax_txctl_init(n_workers: int) -> JaxTxState:
         sent_gen=jnp.full((n_workers,), -jnp.inf, jnp.float32),
         deadline=jnp.full((n_workers,), jnp.inf, jnp.float32),
         retries=jnp.zeros((n_workers,), jnp.int32),
+        active=jnp.ones((n_workers,), bool) if track_active else None,
     )
+
+
+def jax_txctl_set_active(state: JaxTxState, active,
+                         *, reset_joined: bool = True) -> JaxTxState:
+    """Update the membership mask: crashed workers go inactive, restarted
+    workers rejoin. With ``reset_joined`` (elastic membership), workers
+    transitioning inactive -> active come back as *fresh* members — no
+    feedback, no outstanding update, zero retries — mirroring the
+    simulator's controller reset on ``WorkerFault`` restart."""
+    active = jnp.asarray(active, bool)
+    prev = state.active if state.active is not None \
+        else jnp.ones_like(active)
+    joined = active & ~prev
+    last_ack, has_fb = state.last_ack, state.has_fb
+    out, sent_gen = state.outstanding, state.sent_gen
+    ddl, retries = state.deadline, state.retries
+    if reset_joined:
+        last_ack = jnp.where(joined, 0.0, last_ack)
+        has_fb = has_fb & ~joined
+        if out is not None:
+            out = out & ~joined
+            sent_gen = jnp.where(joined, -jnp.inf, sent_gen)
+            ddl = jnp.where(joined, jnp.inf, ddl)
+            retries = jnp.where(joined, 0, retries)
+    return JaxTxState(last_ack=last_ack, has_fb=has_fb,
+                      n_active=state.n_active, q_max=state.q_max,
+                      outstanding=out, sent_gen=sent_gen,
+                      deadline=ddl, retries=retries, active=active)
 
 
 def jax_send_probability(state: JaxTxState, now, delta_threshold: float,
@@ -178,7 +215,10 @@ def jax_send_probability(state: JaxTxState, now, delta_threshold: float,
     p = jnp.minimum(state.q_max / jnp.maximum(state.n_active, 1.0)
                     + v * overdue, 1.0)
     p = jnp.where(state.n_active <= state.q_max, 1.0, p)
-    return jnp.where(state.has_fb, p, 1.0)
+    p = jnp.where(state.has_fb, p, 1.0)
+    if state.active is not None:  # crashed workers never send
+        p = jnp.where(state.active, p, 0.0)
+    return p
 
 
 def jax_txctl_gate(state: JaxTxState, key, now, delta_threshold: float,
@@ -203,8 +243,11 @@ def jax_txctl_ack(state: JaxTxState, acked, now, n_active,
     retransmission state of acked workers whose outstanding ``sent_gen`` it
     covers — the vectorized mirror of the scalar
     :meth:`TransmissionController.on_ack`. ``None`` clears unconditionally
-    (legacy behaviour) when retransmission state exists."""
+    (legacy behaviour) when retransmission state exists. Crashed workers
+    (per the membership mask) miss the multicast entirely."""
     nowf = jnp.asarray(now, jnp.float32)
+    if state.active is not None:
+        acked = acked & state.active
     out = state.outstanding
     ddl = state.deadline
     if out is not None:
@@ -226,6 +269,7 @@ def jax_txctl_ack(state: JaxTxState, acked, now, n_active,
         sent_gen=state.sent_gen,
         deadline=ddl,
         retries=state.retries,
+        active=state.active,
     )
 
 
@@ -234,8 +278,12 @@ def jax_txctl_send(state: JaxTxState, sent, now, gen_time,
     """Fresh sends for workers in ``sent`` (bool (W,)): each becomes its
     worker's single outstanding update (superseding any older one) with a
     fresh ACK deadline and a reset retry budget. Mirrors the scalar
-    :meth:`TransmissionController.on_send`."""
+    :meth:`TransmissionController.on_send`. Sends claimed for crashed
+    workers are ignored (the gate already zeroes their probability; this
+    guards callers that assemble ``sent`` some other way)."""
     assert state.outstanding is not None, "state lacks retransmission buffers"
+    if state.active is not None:
+        sent = sent & state.active
     nowf = jnp.asarray(now, jnp.float32)
     return JaxTxState(
         last_ack=state.last_ack,
@@ -248,6 +296,7 @@ def jax_txctl_send(state: JaxTxState, sent, now, gen_time,
         deadline=jnp.where(sent, nowf + jnp.float32(ack_timeout),
                            state.deadline),
         retries=jnp.where(sent, 0, state.retries),
+        active=state.active,
     )
 
 
@@ -257,11 +306,15 @@ def jax_txctl_retransmit(state: JaxTxState, now, ack_timeout: float,
     ``(due, new_state)`` where ``due`` marks workers whose outstanding
     update must be retransmitted now. Their retry counters advance and
     their deadlines back off exponentially — bit-for-bit the scalar
-    :meth:`TransmissionController.poll_retransmit` per worker."""
+    :meth:`TransmissionController.poll_retransmit` per worker. A crashed
+    worker's in-flight update is treated as expired: it is never due — its
+    retransmission state died with the process."""
     assert state.outstanding is not None, "state lacks retransmission buffers"
     nowf = jnp.asarray(now, jnp.float32)
     due = (state.outstanding & (nowf >= state.deadline)
            & (state.retries < max_retries))
+    if state.active is not None:
+        due = due & state.active
     retries = jnp.where(due, state.retries + 1, state.retries)
     deadline = jnp.where(
         due,
@@ -277,4 +330,5 @@ def jax_txctl_retransmit(state: JaxTxState, now, ack_timeout: float,
         sent_gen=state.sent_gen,
         deadline=deadline,
         retries=retries,
+        active=state.active,
     )

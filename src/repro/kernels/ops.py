@@ -12,7 +12,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.olaf_queue import JaxQueueState, jax_olaf_step
+from repro.core.olaf_queue import (JaxQueueState, expire_inactive_drains,
+                                   jax_olaf_step)
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.olaf_combine import olaf_combine_pallas, olaf_enqueue_pallas
@@ -178,8 +179,9 @@ def _olaf_step_unpack(new_payload, drained, mi, mf, di, df):
     "k", "tile_q", "tile_d", "interpret", "impl"), donate_argnums=0)
 def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
               payloads, reward_threshold=jnp.inf, send=None, capacity=None,
-              *, k: int, tile_q: int = 8, tile_d: int = 512,
-              interpret: bool = _INTERPRET, impl: str = "auto"):
+              active_workers=None, *, k: int, tile_q: int = 8,
+              tile_d: int = 512, interpret: bool = _INTERPRET,
+              impl: str = "auto"):
     """Fused full-cycle data-plane step: burst enqueue → drain-k, one launch.
 
     Drop-in replacement for the composed ``jax_enqueue_burst →
@@ -196,6 +198,12 @@ def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
     executable (the fast path where the interpreter would run the kernel
     body, i.e. this CPU container); ``"auto"`` picks ``"pallas"`` when
     compiled (REPRO_PALLAS_COMPILED=1) and ``"xla"`` under interpretation.
+
+    ``active_workers`` (bool (W,)) treats drained rows of crashed workers
+    as expired — slot freed, row masked invalid so it is never applied
+    (node-churn gating). Applied as a post-drain mask on both execution
+    paths, keeping the Pallas kernel body unchanged; see
+    :func:`repro.core.olaf_queue.expire_inactive_drains`.
     """
     if impl == "auto":
         # an empty burst (drain-only final flush) has no (U, Dt) tile to
@@ -203,14 +211,18 @@ def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
         impl = "xla" if (interpret or clusters.shape[0] == 0) else "pallas"
     if impl == "xla":
         return jax_olaf_step(state, clusters, workers, gen_times, rewards,
-                             payloads, k, reward_threshold, send, capacity)
+                             payloads, k, reward_threshold, send, capacity,
+                             active_workers)
     outs = olaf_step_pallas(
         state.cluster, state.worker, state.seq, state.gen_time, state.reward,
         state.agg_count, state.replaceable, state.next_seq, state.n_dropped,
         state.n_agg, state.n_repl, state.payload,
         clusters, workers, gen_times, rewards, payloads, k, reward_threshold,
         send, capacity, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
-    return _olaf_step_unpack(*outs)
+    state, out = _olaf_step_unpack(*outs)
+    if active_workers is not None:
+        out = expire_inactive_drains(out, active_workers)
+    return state, out
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -88,10 +88,11 @@ def run_olaf_async(cfg, args) -> float:
     of ``log_every``.
     """
     from repro.core.aom import (jax_aom_average, jax_aom_init,
-                                jax_aom_update_block)
+                                jax_aom_update_block, jax_staleness_mask)
     from repro.core.olaf_queue import jax_queue_init
     from repro.core.txctl import (TxControlConfig, jax_txctl_ack,
-                                  jax_txctl_gate, jax_txctl_init)
+                                  jax_txctl_gate, jax_txctl_init,
+                                  jax_txctl_set_active)
     from repro.kernels import ops
     from repro.models.module import tree_paths
 
@@ -107,6 +108,17 @@ def run_olaf_async(cfg, args) -> float:
     capacity = getattr(args, "queue_slots", 0) or max(args.workers, 4)
     queue = jax_queue_init(capacity=capacity, dim=dim)
     drain_k = max(1, min(args.drain_k, capacity))
+
+    # node churn: a subset of workers crashes at --crash-at (their queued
+    # updates expire on the next drain, the txctl gate stops scheduling
+    # them) and optionally rejoins at --restart-at as fresh members
+    crash_set = sorted({int(s) for s in
+                        getattr(args, "crash_workers", "").split(",") if s})
+    crash_at = getattr(args, "crash_at", -1)
+    restart_at = getattr(args, "restart_at", -1)
+    churn = bool(crash_set) and crash_at >= 0
+    # hard PS staleness bound (virtual time); 0 disables admission control
+    stale_bound = getattr(args, "staleness_bound", 0.0) or None
 
     shards = [SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                      global_batch=args.batch,
@@ -144,7 +156,7 @@ def run_olaf_async(cfg, args) -> float:
     active_window = 1.0  # netsim's active-cluster sliding window (virtual)
 
     def ps_step(queue, params, opt_state, tx, aom, last_seen, key, now,
-                clusters, workers, times, rewards, payloads, losses):
+                clusters, workers, times, rewards, payloads, losses, active):
         """txctl_gate → olaf_step → weighted apply, all device-resident.
 
         The §5 send gate runs first (per-burst-row Bernoulli from the
@@ -162,8 +174,17 @@ def run_olaf_async(cfg, args) -> float:
         # each popped payload is the mean of agg_count raw gradients; the
         # applied gradient is their exact weighted mean
         queue, out = ops.olaf_step(queue, clusters, workers, times, rewards,
-                                   payloads, jnp.inf, send, k=drain_k,
-                                   impl=step_impl)
+                                   payloads, jnp.inf, send, None, active,
+                                   k=drain_k, impl=step_impl)
+        if stale_bound is not None:
+            # hard staleness bound at the PS: drained rows whose update age
+            # exceeds the bound are rejected before the apply
+            fresh = jax_staleness_mask(now, out["gen_time"], stale_bound)
+            valid = out["valid"] & fresh
+            n_stale = (out["valid"] & ~fresh).sum()
+            out = dict(out, valid=valid, n_valid=valid.sum())
+        else:
+            n_stale = jnp.int32(0)
         wts = out["valid"] * out["agg_count"].astype(jnp.float32)
         g_flat = jnp.einsum("k,kd->d", wts, out["payload"]) \
             / jnp.maximum(wts.sum(), 1.0)
@@ -186,7 +207,7 @@ def run_olaf_async(cfg, args) -> float:
         tx = jax_txctl_ack(tx, acked, now, n_active, q_max)
         stats = dict(loss=jnp.mean(losses), applied=out["n_valid"],
                      combined=wts.sum(), agg_total=queue.n_agg,
-                     deferred=(~send).sum(),
+                     deferred=(~send).sum(), stale=n_stale,
                      occupancy=(queue.cluster >= 0).sum())
         return queue, params, opt_state, tx, aom, last_seen, key, stats
 
@@ -201,13 +222,41 @@ def run_olaf_async(cfg, args) -> float:
     worker_next = np.zeros(args.workers)
     worker_step = np.zeros(args.workers, int)
     burst_size = max(1, args.burst_size)
-    tx = jax_txctl_init(args.workers)
+    # the membership mask is materialized only under churn so fault-free
+    # runs keep the legacy 4-leaf txctl pytree (bitwise-identical traces)
+    tx = jax_txctl_init(args.workers, track_active=churn)
+    active_np = np.ones(args.workers, bool)
     aom = jax_aom_init()
     last_seen = jnp.full((n_clusters,), -jnp.inf, jnp.float32)
     step_key = jax.random.key(args.seed + 101)
+
+    def snapshot_aux():
+        # the whole async training plane: device queue/txctl/AoM/feedback
+        # state, the PRNG key, and the float64 host scheduling counters
+        # (restored exactly -> resume is bitwise)
+        return dict(queue=queue, tx=tx, aom=aom, last_seen=last_seen,
+                    key=jax.random.key_data(step_key),
+                    worker_next=worker_next, worker_step=worker_step,
+                    active=active_np)
+
+    start_it = 0
+    if args.ckpt and getattr(args, "resume", False) \
+            and latest_step(args.ckpt) is not None:
+        start_it, params, opt_state, aux = restore_checkpoint(
+            args.ckpt, params_like=jax.eval_shape(lambda: params),
+            opt_like=jax.eval_shape(lambda: opt_state),
+            aux_like=snapshot_aux())
+        queue, tx, aom = aux["queue"], aux["tx"], aux["aom"]
+        last_seen = aux["last_seen"]
+        step_key = jax.random.wrap_key_data(aux["key"])
+        worker_next, worker_step = aux["worker_next"], aux["worker_step"]
+        active_np = aux["active"]
+        print(f"resumed olaf-async from step {start_it}")
+
     pending = []  # device-side per-step stats, drained in batches
     log_rows = []  # host-side (step, loss, combined) after each flush
     deferred_total = [0]  # txctl-gated (deferred) burst rows
+    stale_total = [0]  # PS-rejected rows past the staleness bound
     # logging disabled -> one flush at the end, never a mid-loop sync
     flush_every = args.log_every if args.log_every > 0 else max(args.steps, 1)
 
@@ -217,10 +266,29 @@ def run_olaf_async(cfg, args) -> float:
             step = len(log_rows) + 1
             log_rows.append((step, float(row["loss"]), int(row["combined"])))
             deferred_total[0] += int(row["deferred"])
+            stale_total[0] += int(row["stale"])
         del pending[:]
 
     t0 = time.time()
-    for it in range(args.steps):
+    for it in range(start_it, args.steps):
+        if churn and it == crash_at:
+            # crashed workers stop scheduling (inf next-finish time keeps
+            # them out of the argmin) and their queued updates expire
+            worker_next[crash_set] = np.inf
+            active_np[crash_set] = False
+            tx = jax_txctl_set_active(tx, jnp.asarray(active_np))
+            if args.log_every:
+                print(f"crash at {it}: workers {crash_set} down")
+        if churn and restart_at >= 0 and it == restart_at:
+            # elastic rejoin: fresh controller state, next finish one
+            # compute interval past the surviving frontier
+            frontier = worker_next[np.isfinite(worker_next)].max()
+            for w in crash_set:
+                worker_next[w] = frontier + worker_speed[w]
+            active_np[crash_set] = True
+            tx = jax_txctl_set_active(tx, jnp.asarray(active_np))
+            if args.log_every:
+                print(f"restart at {it}: workers {crash_set} rejoin")
         # congested PS: a burst of updates arrives between drains, so
         # same-cluster updates meet in the queue and combine (the paper's
         # opportunistic window) — pushed through the fused burst fast path.
@@ -247,7 +315,8 @@ def run_olaf_async(cfg, args) -> float:
             jnp.asarray(burst["w"], jnp.int32),
             jnp.asarray(burst["t"], jnp.float32),
             jnp.stack(burst["r"]).astype(jnp.float32),
-            jnp.stack(burst["p"]), jnp.stack(burst_losses))
+            jnp.stack(burst["p"]), jnp.stack(burst_losses),
+            jnp.asarray(active_np) if churn else None)
         pending.append(stats)
         if len(pending) >= flush_every:
             flush()
@@ -255,16 +324,25 @@ def run_olaf_async(cfg, args) -> float:
                 step, loss_v, combined = log_rows[-1]
                 print(f"applied {step}: loss {loss_v:.4f} "
                       f"(combined {combined} updates)")
+        if args.ckpt and args.ckpt_every and (it + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, it + 1, params, opt_state,
+                            aux=snapshot_aux())
     flush()
+    if args.ckpt:
+        save_checkpoint(args.ckpt, args.steps, params, opt_state,
+                        aux=snapshot_aux())
     wall = time.time() - t0
     losses = [l for _, l, _ in log_rows]
-    avg_aom = float(jax_aom_average(aom, float(worker_next.max())))
-    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}); "
-          f"queue aggregations {int(queue.n_agg)}; "
-          f"txctl deferred {deferred_total[0]}; "
-          f"avg AoM {avg_aom:.3f} (virtual); "
-          f"{args.steps / max(wall, 1e-9):.2f} steps/s")
-    return losses[-1]
+    horizon = float(worker_next[np.isfinite(worker_next)].max())
+    avg_aom = float(jax_aom_average(aom, horizon))
+    if losses:
+        print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}); "
+              f"queue aggregations {int(queue.n_agg)}; "
+              f"txctl deferred {deferred_total[0]}; "
+              f"stale rejected {stale_total[0]}; "
+              f"avg AoM {avg_aom:.3f} (virtual); "
+              f"{args.steps / max(wall, 1e-9):.2f} steps/s")
+    return losses[-1] if losses else float("nan")
 
 
 def main():
@@ -298,6 +376,21 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt; in "
+                         "olaf-async the full training plane (queue, txctl, "
+                         "AoM, PRNG key, host counters) restores bitwise")
+    ap.add_argument("--crash-workers", default="",
+                    help="comma-separated worker ids crashed at --crash-at "
+                         "(olaf-async node churn)")
+    ap.add_argument("--crash-at", type=int, default=-1,
+                    help="PS step at which --crash-workers go down")
+    ap.add_argument("--restart-at", type=int, default=-1,
+                    help="PS step at which crashed workers rejoin as fresh "
+                         "members (elastic membership)")
+    ap.add_argument("--staleness-bound", type=float, default=0.0,
+                    help="hard PS admission bound on update age in virtual "
+                         "time (0: disabled)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
     cfg = get_config(args.arch)

@@ -66,8 +66,23 @@ class AsyncTrainConfig:
     # stalls. Combined with tx_control.ack_timeout the workers retransmit
     # lost updates (stale-but-delivered beats dropped); the trainer itself
     # needs no changes — retransmitted copies re-enter the fabric with the
-    # cached payload and the PS applies whichever copy arrives.
+    # cached payload and the PS applies whichever copy arrives. Node-level
+    # faults (WorkerFault / PSFault) crash workers mid-run and bounce the
+    # PS; a PS restart triggers checkpointed recovery below.
     faults: Optional[object] = None
+    # Hard staleness admission at the PS egress (netsim): updates older
+    # than the bound are rejected outright on FIFO switches and
+    # deferred-and-recombined (one more pass through the OlafQueue, up to
+    # max_stale_defers) on OLAF switches. None disables the bound.
+    staleness_bound: Optional[float] = None
+    max_stale_defers: int = 1
+    # Checkpointed PS recovery: every ckpt_every deliveries the PS state
+    # (float64 weights + running-average gradient, gating scalars, staging
+    # queue) snapshots atomically to ckpt_dir; a PSFault restart restores
+    # the latest snapshot and drops the in-flight staging buffer (the
+    # lost-window semantics — deliveries since the snapshot are gone).
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
 
 
 @dataclasses.dataclass
@@ -111,6 +126,9 @@ class AsyncDRLTrainer:
         self._drain_k = min(max(cfg.ps_drain_k, 1), cfg.queue_slots)
         self._ps_queue = jax_queue_init(cfg.queue_slots, int(flat0.size))
         self._ps_buf: List[tuple] = []
+        self._deliver_count = 0
+        self.ps_restarts = 0
+        self.recovered_from: List[int] = []  # snapshot step per PS restart
         rng = np.random.default_rng(cfg.seed)
 
         if cfg.topology is not None:
@@ -139,10 +157,13 @@ class AsyncDRLTrainer:
             switches=switches, workers=workers, horizon=cfg.horizon,
             tx_control=cfg.tx_control, seed=cfg.seed,
             faults=cfg.faults,
+            staleness_bound=cfg.staleness_bound,
+            max_stale_defers=cfg.max_stale_defers,
             route_policy=(cfg.topology.route_policy
                           if cfg.topology is not None else "static"),
             payload_fn=self._make_payload,
-            on_deliver=self._on_deliver, on_ack=self._on_ack)
+            on_deliver=self._on_deliver, on_ack=self._on_ack,
+            on_ps_restart=self._on_ps_restart)
 
     # -- worker side --------------------------------------------------------
     def _make_payload(self, now: float, worker_id: int):
@@ -160,6 +181,7 @@ class AsyncDRLTrainer:
     # -- PS side --------------------------------------------------------------
     def _on_deliver(self, now: float, upd):
         self.deliveries_per_worker[upd.worker_id] += 1
+        self._deliver_count += 1
         n_done = min(self.deliveries_per_worker.values())
         if n_done not in self.time_to_n:
             self.time_to_n[n_done] = now
@@ -167,7 +189,54 @@ class AsyncDRLTrainer:
                              upd.reward, np.asarray(upd.payload, np.float32)))
         if len(self._ps_buf) >= self._drain_k:
             self._drain_ps_queue(now)
+        if self.cfg.ckpt_dir and self.cfg.ckpt_every \
+                and self._deliver_count % self.cfg.ckpt_every == 0:
+            self._save_ps_checkpoint(now)
         return np.asarray(self.ps.w, np.float32)
+
+    def _save_ps_checkpoint(self, now: float) -> None:
+        """Atomic snapshot of the recoverable PS state. The staging buffer
+        (``_ps_buf``) is deliberately NOT snapshotted: deliveries between
+        the snapshot and a crash are the lost window."""
+        from repro.checkpoint.ckpt import save_checkpoint
+        ps = self.ps
+        g_a = ps.g_a if ps.g_a is not None else np.zeros_like(ps.w)
+        save_checkpoint(
+            self.cfg.ckpt_dir, self._deliver_count,
+            params=dict(w=np.asarray(ps.w, np.float32)),
+            aux=dict(ps=dict(w=ps.w, g_a=g_a), queue=self._ps_queue),
+            extra=dict(r_g=ps.r_g, has_g_a=ps.g_a is not None,
+                       applied=ps.applied, rejected=ps.rejected, time=now))
+
+    def _on_ps_restart(self, now: float) -> None:
+        """PSFault recovery: the in-flight staging buffer is lost; the PS
+        rolls back to the latest snapshot (weights, running average,
+        gating scalars, staging queue). Without checkpointing configured
+        the PS keeps its current weights and only loses the buffer."""
+        self.ps_restarts += 1
+        self._ps_buf = []
+        d = self.cfg.ckpt_dir
+        if not d:
+            return
+        from repro.checkpoint.ckpt import (latest_step, read_manifest,
+                                           restore_checkpoint)
+        step = latest_step(d)
+        if step is None:
+            return
+        man = read_manifest(d, step)
+        like = dict(ps=dict(w=self.ps.w,
+                            g_a=np.zeros_like(self.ps.w)),
+                    queue=self._ps_queue)
+        _, _, _, aux = restore_checkpoint(
+            d, step, params_like=dict(w=np.asarray(self.ps.w, np.float32)),
+            aux_like=like)
+        self.ps.w = aux["ps"]["w"]
+        self.ps.g_a = aux["ps"]["g_a"] if man["extra"]["has_g_a"] else None
+        self.ps.r_g = man["extra"]["r_g"]
+        self.ps.applied = man["extra"]["applied"]
+        self.ps.rejected = man["extra"]["rejected"]
+        self._ps_queue = aux["queue"]
+        self.recovered_from.append(step)
 
     def _drain_ps_queue(self, now: float) -> int:
         """One fused ``olaf_step`` launch (burst enqueue + drain-k in a

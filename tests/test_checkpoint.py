@@ -1,0 +1,193 @@
+"""Checkpoint subsystem: aux pytrees, atomicity, elastic restore.
+
+The training-plane fault-tolerance story leans on three properties of
+``repro.checkpoint.ckpt``:
+
+  * **aux round-trip** — named auxiliary pytrees (device queue state,
+    txctl buffers, float64 host counters) restore exactly, numpy leaves
+    staying numpy with their dtype (so ``worker_next`` float64 scheduling
+    state survives bit for bit) and jax leaves coming back as jax arrays;
+  * **killed-writer atomicity** — a writer killed at ANY point during a
+    save leaves the previous checkpoint fully readable (``LATEST`` flips
+    only after blob + manifest are durable);
+  * **elastic restore** — a checkpoint saved under one sharding/padding
+    restores onto another (restart on a different mesh).
+"""
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (latest_step, read_manifest,
+                                   restore_checkpoint, save_checkpoint)
+
+
+def _params():
+    return {"layer": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "head": jnp.full((5,), 2.5, jnp.bfloat16)}
+
+
+class TestAuxRoundTrip:
+    def test_aux_pytrees_restore_exactly(self, tmp_path):
+        """Mixed aux trees: jax queue-like state, a txctl pytree with a
+        None field, float64/bool/int64 numpy host counters."""
+        from repro.core.olaf_queue import jax_queue_init
+        from repro.core.txctl import jax_txctl_init
+
+        queue = jax_queue_init(capacity=4, dim=8)
+        tx = jax_txctl_init(3, track_active=True)
+        worker_next = np.array([0.1 + 2 ** -40, np.inf, 7.25], np.float64)
+        worker_step = np.array([3, 0, 11], np.int64)
+        active = np.array([True, False, True])
+        aux = dict(queue=queue, tx=tx, worker_next=worker_next,
+                   worker_step=worker_step, active=active)
+        save_checkpoint(tmp_path, 5, _params(), aux=aux)
+
+        like = dict(queue=jax_queue_init(capacity=4, dim=8),
+                    tx=jax_txctl_init(3, track_active=True),
+                    worker_next=np.zeros(3), worker_step=np.zeros(3, np.int64),
+                    active=np.zeros(3, bool))
+        step, p2, _, a2 = restore_checkpoint(
+            tmp_path, params_like=jax.eval_shape(_params), aux_like=like)
+        assert step == 5
+        # numpy leaves stay numpy with the like dtype — float64 exact
+        assert isinstance(a2["worker_next"], np.ndarray)
+        assert a2["worker_next"].dtype == np.float64
+        np.testing.assert_array_equal(a2["worker_next"], worker_next)
+        np.testing.assert_array_equal(a2["worker_step"], worker_step)
+        np.testing.assert_array_equal(a2["active"], active)
+        # jax pytrees (incl. the Optional active leaf) come back intact
+        for got, want in zip(jax.tree_util.tree_leaves(a2["queue"]),
+                             jax.tree_util.tree_leaves(queue)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert a2["tx"].active is not None
+        np.testing.assert_array_equal(np.asarray(a2["tx"].active),
+                                      np.asarray(tx.active))
+
+    def test_prng_key_data_round_trips(self, tmp_path):
+        key = jax.random.key(42)
+        save_checkpoint(tmp_path, 1, _params(),
+                        aux=dict(key=jax.random.key_data(key)))
+        _, _, _, aux = restore_checkpoint(
+            tmp_path, params_like=jax.eval_shape(_params),
+            aux_like=dict(key=jax.random.key_data(jax.random.key(0))))
+        restored = jax.random.wrap_key_data(aux["key"])
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.uniform(restored, (4,))),
+            np.asarray(jax.random.uniform(key, (4,))))
+
+    def test_manifest_extra_round_trips_including_inf(self, tmp_path):
+        extra = dict(r_g=-float("inf"), applied=7, rejected=2, time=0.125)
+        save_checkpoint(tmp_path, 3, _params(), extra=extra)
+        man = read_manifest(tmp_path)
+        assert man["step"] == 3
+        assert man["extra"]["r_g"] == -float("inf")
+        assert man["extra"]["applied"] == 7
+        assert man["extra"]["time"] == 0.125
+
+
+class TestAtomicity:
+    def _save_good(self, d, step=1):
+        save_checkpoint(d, step, _params(),
+                        aux=dict(ctr=np.array([1.5], np.float64)))
+
+    def _restore_latest(self, d):
+        return restore_checkpoint(
+            d, params_like=jax.eval_shape(_params),
+            aux_like=dict(ctr=np.zeros(1)))
+
+    def test_killed_during_blob_write(self, tmp_path, monkeypatch):
+        """Writer dies while the npz is still a tmp file: LATEST and the
+        previous step stay intact, no partial blob is visible."""
+        self._save_good(tmp_path, 1)
+
+        def boom(*a, **kw):
+            raise KeyboardInterrupt("killed mid-save")
+        monkeypatch.setattr(np, "savez", boom)
+        with pytest.raises(KeyboardInterrupt):
+            self._save_good(tmp_path, 2)
+        monkeypatch.undo()
+        assert latest_step(tmp_path) == 1
+        step, _, _, aux = self._restore_latest(tmp_path)
+        assert step == 1 and aux["ctr"][0] == 1.5
+        assert not (Path(tmp_path) / "ckpt_00000002.npz").exists()
+
+    def test_killed_before_latest_flip(self, tmp_path, monkeypatch):
+        """Writer dies after blob+manifest but before LATEST flips: the
+        old step is still the visible checkpoint (blob 2 may exist on
+        disk but is unreferenced)."""
+        import repro.checkpoint.ckpt as ckpt_mod
+        self._save_good(tmp_path, 1)
+        real = ckpt_mod._atomic_write_text
+
+        def flaky(path, text):
+            if path.name == "LATEST" and text.strip() == "2":
+                raise KeyboardInterrupt("killed before LATEST flip")
+            real(path, text)
+        monkeypatch.setattr(ckpt_mod, "_atomic_write_text", flaky)
+        with pytest.raises(KeyboardInterrupt):
+            self._save_good(tmp_path, 2)
+        monkeypatch.undo()
+        assert latest_step(tmp_path) == 1
+        step, _, _, _ = self._restore_latest(tmp_path)
+        assert step == 1
+
+    def test_no_tmp_litter_after_kill(self, tmp_path, monkeypatch):
+        """The text writer cleans its tmp file when interrupted."""
+        import repro.checkpoint.ckpt as ckpt_mod
+
+        class Boom(Exception):
+            pass
+
+        real_replace = os.replace
+
+        def boom(src, dst):
+            if str(dst).endswith(".json"):
+                raise Boom()
+            return real_replace(src, dst)
+        monkeypatch.setattr(os, "replace", boom)
+        with pytest.raises(Boom):
+            self._save_good(tmp_path, 1)
+        monkeypatch.undo()
+        assert not list(Path(tmp_path).glob("*.tmp"))
+        assert latest_step(tmp_path) is None  # nothing half-visible
+
+    def test_manifest_is_valid_json_or_absent(self, tmp_path):
+        """A reader that follows LATEST always finds a parseable manifest
+        (atomic rename means no truncated JSON)."""
+        self._save_good(tmp_path, 9)
+        step = latest_step(tmp_path)
+        man = json.loads(
+            (Path(tmp_path) / f"ckpt_{step:08d}.json").read_text())
+        assert man["step"] == step
+
+
+class TestElasticRestore:
+    def test_restore_onto_explicit_sharding(self, tmp_path):
+        """Restore places arrays with the provided shardings (restart on a
+        different mesh); values are unchanged."""
+        from jax.sharding import SingleDeviceSharding
+        params = _params()
+        save_checkpoint(tmp_path, 2, params)
+        sh = SingleDeviceSharding(jax.devices()[0])
+        shardings = jax.tree_util.tree_map(lambda _: sh, params)
+        _, p2, _ = restore_checkpoint(
+            tmp_path, params_like=jax.eval_shape(lambda: params),
+            shardings=shardings)
+        assert p2["layer"]["w"].sharding == sh
+        np.testing.assert_array_equal(np.asarray(p2["layer"]["w"]),
+                                      np.asarray(params["layer"]["w"]))
+        assert p2["head"].dtype == jnp.bfloat16
+
+    def test_restore_across_padding_change(self, tmp_path):
+        """Same checkpoint, wider like (vocab/head padding change): the
+        overlap restores, the tail zero-fills."""
+        save_checkpoint(tmp_path, 4, {"emb": jnp.ones((6, 3))})
+        like = jax.eval_shape(lambda: {"emb": jnp.zeros((8, 3))})
+        _, p2, _ = restore_checkpoint(tmp_path, params_like=like)
+        np.testing.assert_array_equal(np.asarray(p2["emb"][:6]), 1.0)
+        np.testing.assert_array_equal(np.asarray(p2["emb"][6:]), 0.0)

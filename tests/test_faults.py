@@ -31,7 +31,8 @@ from repro.core.topology import (SwitchSpec, TopologySpec, build_sim_cfg,
                                  fattree_spec)
 from repro.core.txctl import (TransmissionController, TxControlConfig,
                               jax_txctl_ack, jax_txctl_init,
-                              jax_txctl_retransmit, jax_txctl_send)
+                              jax_txctl_retransmit, jax_txctl_send,
+                              jax_txctl_set_active)
 
 DIM = 16
 
@@ -365,6 +366,90 @@ def test_backoff_saturation_gives_up():
     assert c.retries == int(state.retries[0]) == 0
     now += _ACK_TIMEOUT
     assert c.poll_retransmit(now)
+
+
+def _replay_saturation_ops(seed, n_workers=4, n_steps=60):
+    """Drive both machines through random send/ACK/long-timeout
+    interleavings under a random retry budget; every timeout jump exceeds
+    the worst-case backed-off deadline, so the budget is actually spent.
+    Returns how often the sample observed a saturated (armed-but-silent)
+    machine — the boundary the property is about."""
+    rng = np.random.default_rng(seed)
+    max_retries = int(rng.integers(1, 5))
+    cfg = TxControlConfig(ack_timeout=_ACK_TIMEOUT, max_retries=max_retries,
+                          backoff=_BACKOFF)
+    scalars = [TransmissionController(cfg, np.random.default_rng(i))
+               for i in range(n_workers)]
+    state = jax_txctl_init(n_workers)
+    now = 0.0
+    budget_used = np.zeros(n_workers, int)
+    saturated_polls = 0
+    for _ in range(n_steps):
+        op = rng.random()
+        if op < 0.2:  # fresh send rearms the budget
+            mask = rng.random(n_workers) < 0.5
+            for i, c in enumerate(scalars):
+                if mask[i]:
+                    c.on_send(now, now)
+            state = jax_txctl_send(state, jnp.asarray(mask), now, now,
+                                   cfg.ack_timeout)
+            budget_used[mask] = 0
+        elif op < 0.35:  # covering ACK disarms
+            mask = rng.random(n_workers) < 0.5
+            for i, c in enumerate(scalars):
+                if mask[i]:
+                    c.on_ack(now, None, delivered_gen=now)
+            state = jax_txctl_ack(state, jnp.asarray(mask), now, 4.0, 8.0,
+                                  delivered_gen=now)
+            budget_used[mask] = 0
+        else:  # long jump past every armed deadline, then poll
+            now += _ACK_TIMEOUT * _BACKOFF ** max_retries
+            due_scalar = [c.poll_retransmit(now) for c in scalars]
+            due, state = jax_txctl_retransmit(
+                state, now, cfg.ack_timeout, cfg.backoff, cfg.max_retries)
+            assert list(np.asarray(due)) == due_scalar
+            budget_used += np.asarray(due)
+            # the boundary property: never more than max_retries fires
+            # per armed send, then silence until the next rearm
+            assert (budget_used <= max_retries).all()
+            saturated_polls += sum(
+                1 for i, c in enumerate(scalars)
+                if c.outstanding and not due_scalar[i]
+                and c.retries >= max_retries)
+        _assert_state_matches(scalars, state)
+    return saturated_polls
+
+
+def test_retransmit_saturation_boundary_property():
+    """Property: across random interleavings and random max_retries
+    budgets the vectorized machine matches the scalar one bit for bit at
+    the saturation boundary — the retry budget is never exceeded and a
+    saturated update stays armed but silent."""
+    saturated = 0
+    for seed in range(12):
+        saturated += _replay_saturation_ops(seed)
+    assert saturated > 0  # the sample really reached the boundary
+
+
+def test_retransmit_active_mask_suppresses_crashed():
+    """With the membership mask a crashed worker's armed retransmission
+    never fires; on rejoin (elastic membership) the machine is fresh —
+    nothing outstanding, zero retries."""
+    cfg = TxControlConfig(ack_timeout=_ACK_TIMEOUT, max_retries=_MAX_RETRIES,
+                          backoff=_BACKOFF)
+    state = jax_txctl_init(3, track_active=True)
+    state = jax_txctl_send(state, jnp.asarray([True, True, False]), 0.0, 0.0,
+                           cfg.ack_timeout)
+    state = jax_txctl_set_active(state, jnp.asarray([True, False, True]))
+    due, state = jax_txctl_retransmit(state, 16.0, cfg.ack_timeout,
+                                      cfg.backoff, cfg.max_retries)
+    assert list(np.asarray(due)) == [True, False, False]
+    # rejoin: fresh member — no outstanding update, no spent budget
+    state = jax_txctl_set_active(state, jnp.asarray([True, True, True]))
+    assert not bool(state.outstanding[1]) and int(state.retries[1]) == 0
+    due, _ = jax_txctl_retransmit(state, 32.0, cfg.ack_timeout,
+                                  cfg.backoff, cfg.max_retries)
+    assert not bool(due[1])
 
 
 def test_stale_ack_does_not_clear_outstanding():

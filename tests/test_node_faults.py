@@ -1,0 +1,416 @@
+"""Training-plane node faults: worker crash/straggler/restart, PS bounce,
+staleness admission, and checkpointed recovery.
+
+Four legs:
+
+  * **worker churn in the metadata simulator** — crash kills the
+    generation chain (and the worker's retransmission machine), restart
+    resumes it with fresh controller state, stragglers slow down; a
+    zero-probability node ``FaultSpec`` is byte-identical to no faults.
+  * **PS bounce** — deliveries inside the recovery window drop (and are
+    later covered by retransmission), the restart callback fires.
+  * **staleness admission** — a hard bound at PS egress rejects on FIFO
+    and defers-and-recombines (bounded) on OLAF.
+  * **hybrid replay** — node-fault traces replay bitwise through both the
+    per-event and windowed consumers (fast fat-tree smoke + slow
+    randomized DAG property), counters agreeing with the simulator.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.hybrid import run_hybrid_multihop
+from repro.core.netsim import (FaultSpec, LinkFault, NetworkSimulator,
+                               PSFault, WorkerFault)
+from repro.core.topology import (SwitchSpec, TopologySpec, build_sim_cfg,
+                                 fattree_spec)
+from repro.core.txctl import TxControlConfig
+
+DIM = 8
+
+
+def _assert_results_equal(a, b):
+    assert len(a.delivered) == len(b.delivered)
+    for (t0, u0, p0), (t1, u1, p1) in zip(a.delivered, b.delivered):
+        assert t0 == t1
+        assert (u0.cluster_id, u0.worker_id, u0.gen_time, u0.reward,
+                u0.agg_count, u0.seq) == \
+               (u1.cluster_id, u1.worker_id, u1.gen_time, u1.reward,
+                u1.agg_count, u1.seq)
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+    assert a.queue_stats == b.queue_stats
+    np.testing.assert_array_equal(a.final_counts, b.final_counts)
+    assert a.forwarded == b.forwarded
+    assert a.link_dropped == b.link_dropped
+    assert a.ps_dropped == b.ps_dropped
+    assert a.stale_rejected == b.stale_rejected
+    assert a.stale_deferred == b.stale_deferred
+    assert a.worker_crashes == b.worker_crashes
+    assert a.worker_restarts == b.worker_restarts
+    assert a.worker_straggles == b.worker_straggles
+
+
+def _trace_recorder():
+    events = []
+
+    def on_event(now, name, kind, upd):
+        events.append((now, name, kind,
+                       None if upd is None else upd.worker_id))
+    return events, on_event
+
+
+# ---------------------------------------------------------------------------
+# Worker churn in the metadata simulator
+# ---------------------------------------------------------------------------
+def test_zero_probability_node_faultspec_byte_identical():
+    """A node FaultSpec that schedules nothing (no crash_t, slowdown 1.0,
+    no PS faults) must not perturb the run at all — node faults are
+    scheduled deterministically and draw nothing from any RNG."""
+    spec = fattree_spec(2)
+    base = build_sim_cfg(spec, horizon=0.2, seed=3)
+    noop = FaultSpec(workers=[WorkerFault(worker=0)], ps=[], seed=9)
+    faulty = dataclasses.replace(base, faults=noop)
+    ra, rb = NetworkSimulator(base).run(), NetworkSimulator(faulty).run()
+    assert ra.deliveries == rb.deliveries
+    assert ra.queue_stats == rb.queue_stats
+    assert rb.worker_crashes == rb.worker_restarts == rb.ps_restarts == 0
+    assert rb.ps_dropped == rb.stale_rejected == rb.stale_deferred == 0
+
+
+def test_worker_crash_stops_generation():
+    spec = fattree_spec(2)
+    events, on_event = _trace_recorder()
+    cfg = build_sim_cfg(
+        spec, gen_interval=0.02, horizon=0.3, seed=5,
+        faults=FaultSpec(workers=[WorkerFault(worker=0, crash_t=0.1)]))
+    cfg = dataclasses.replace(cfg, on_queue_event=on_event)
+    ingress = cfg.workers[0].ingress_switch
+    res = NetworkSimulator(cfg).run()
+    assert res.worker_crashes == 1 and res.worker_restarts == 0
+    sends = [(t, k) for t, name, k, w in events
+             if name == ingress and k == "enqueue" and w == 0]
+    assert sends, "worker 0 sent before the crash"
+    assert max(t for t, _ in sends) <= 0.1  # nothing generated after
+    assert any(k == "crash" for _, _, k, w in events if w == 0)
+    # the rest of the fleet keeps delivering
+    assert res.received_at_ps > 0
+
+
+def test_worker_restart_resumes_generation():
+    spec = fattree_spec(2)
+    events, on_event = _trace_recorder()
+    cfg = build_sim_cfg(
+        spec, gen_interval=0.02, horizon=0.4, seed=5,
+        faults=FaultSpec(workers=[
+            WorkerFault(worker=0, crash_t=0.1, restart_delay=0.1)]))
+    cfg = dataclasses.replace(cfg, on_queue_event=on_event)
+    ingress = cfg.workers[0].ingress_switch
+    res = NetworkSimulator(cfg).run()
+    assert res.worker_crashes == 1 and res.worker_restarts == 1
+    send_times = [t for t, name, k, w in events
+                  if name == ingress and k == "enqueue" and w == 0]
+    # silent in the down window, back afterwards
+    assert not [t for t in send_times if 0.1 < t < 0.2]
+    assert [t for t in send_times if t >= 0.2]
+    kinds = [k for _, _, k, w in events if w == 0]
+    assert "crash" in kinds and "restart" in kinds
+
+
+def test_straggler_slowdown_generates_fewer():
+    spec = fattree_spec(2)
+
+    def count_sends(faults):
+        events, on_event = _trace_recorder()
+        cfg = build_sim_cfg(spec, gen_interval=0.02, horizon=0.3, seed=5,
+                            faults=faults)
+        cfg = dataclasses.replace(cfg, on_queue_event=on_event)
+        ingress = cfg.workers[0].ingress_switch
+        NetworkSimulator(cfg).run()
+        return (sum(1 for _, name, k, w in events
+                    if name == ingress and k == "enqueue" and w == 0),
+                [k for _, _, k, w in events if w == 0])
+
+    base_n, _ = count_sends(None)
+    slow_n, kinds = count_sends(
+        FaultSpec(workers=[WorkerFault(worker=0, slowdown=3.0)]))
+    assert 0 < slow_n < base_n
+    assert kinds[0] == "straggle"  # membership marker leads the trace
+
+
+# ---------------------------------------------------------------------------
+# PS bounce + recovery
+# ---------------------------------------------------------------------------
+def test_ps_restart_window_drops_then_recovers():
+    """Deliveries arriving inside the PSFault recovery window are dropped
+    (counted, traced as ``psdrop``); with ACK-timeout retransmission every
+    dropped packet is later covered — zero unrecovered — and the restart
+    callback fires at the end of the window."""
+    spec = fattree_spec(2)
+    restarts = []
+    cfg = build_sim_cfg(
+        spec, gen_interval=0.015, horizon=0.3, seed=7,
+        faults=FaultSpec(ps=[PSFault(restart_t=0.1, recovery=0.05)]),
+        tx_control=TxControlConfig(ack_timeout=0.004, max_retries=4))
+    cfg = dataclasses.replace(cfg, on_ps_restart=restarts.append)
+    res = NetworkSimulator(cfg).run()
+    assert res.ps_restarts == 1
+    assert res.ps_dropped > 0
+    assert res.retransmits > 0
+    assert res.unrecovered_drops == 0
+    assert restarts == [pytest.approx(0.15)]
+    assert res.delivery_rate <= 1.0
+
+
+def test_delivery_rate_capped_by_unique_accounting():
+    """Retransmitted copies and combine-subsumed updates are deduplicated
+    by send uid: ``delivery_rate`` can never exceed 1 even when the raw
+    counter does; on a fault-free run the two accountings coincide."""
+    spec = fattree_spec(2)
+    clean = NetworkSimulator(build_sim_cfg(
+        spec, gen_interval=0.02, horizon=0.2, seed=3)).run()
+    assert clean.delivery_rate == clean.raw_delivery_rate
+    lossy = NetworkSimulator(build_sim_cfg(
+        spec, gen_interval=0.01, horizon=0.3, seed=3,
+        faults=FaultSpec(links=[LinkFault(switch="AGG1", drop_prob=0.4)],
+                         seed=5),
+        tx_control=TxControlConfig(ack_timeout=0.01, max_retries=5))).run()
+    assert lossy.retransmits > 0
+    assert lossy.delivery_rate <= 1.0
+    assert lossy.unique_delivered <= lossy.sent
+
+
+# ---------------------------------------------------------------------------
+# Staleness admission control
+# ---------------------------------------------------------------------------
+def _stale_cfg(queue, bound, defers=1):
+    # in-fabric sojourn is ~40-60ms (three store-and-forward hops at
+    # sub-Mbps rates), so a 80ms bound admits fresh packets and rejects
+    # the congested tail
+    spec = fattree_spec(2)
+    cfg = build_sim_cfg(spec, queue=queue, gen_interval=0.008,
+                        horizon=0.3, seed=11)
+    return dataclasses.replace(cfg, staleness_bound=bound,
+                               max_stale_defers=defers)
+
+
+def test_staleness_bound_fifo_rejects():
+    res = NetworkSimulator(_stale_cfg("fifo", 0.08)).run()
+    assert res.stale_rejected > 0
+    assert res.stale_deferred == 0  # FIFO has no recombine path
+    assert res.received_at_ps > 0
+
+
+def test_staleness_bound_olaf_defers_then_rejects():
+    bounded = NetworkSimulator(_stale_cfg("olaf", 0.08, defers=1)).run()
+    assert bounded.stale_deferred > 0  # OLAF egress requeues first
+    assert bounded.received_at_ps > 0
+    none = NetworkSimulator(_stale_cfg("olaf", None)).run()
+    assert none.stale_rejected == none.stale_deferred == 0
+    # a defer budget of 0 degenerates to FIFO-style rejection
+    hard = NetworkSimulator(_stale_cfg("olaf", 0.08, defers=0)).run()
+    assert hard.stale_deferred == 0 and hard.stale_rejected > 0
+
+
+# ---------------------------------------------------------------------------
+# Hybrid replay (CI fast-lane smoke + slow randomized property)
+# ---------------------------------------------------------------------------
+def _churn_faults():
+    return FaultSpec(
+        workers=[WorkerFault(worker=0, crash_t=0.08, restart_delay=0.08),
+                 WorkerFault(worker=3, crash_t=0.12),
+                 WorkerFault(worker=1, slowdown=2.0)],
+        ps=[PSFault(restart_t=0.15, recovery=0.03)])
+
+
+def test_fattree_worker_crash_hybrid_smoke():
+    """Fast-lane smoke: a fat-tree node-churn trace (two crashes, one
+    restart, a straggler, a PS bounce, staleness bound) replays through
+    BOTH hybrid consumers bitwise-identically, all node counters agreeing
+    with the metadata simulator."""
+    spec = fattree_spec(2, spines=2, route_policy="adaptive")
+    cfg = build_sim_cfg(
+        spec, gen_interval=0.015, horizon=0.25, seed=13,
+        faults=_churn_faults(),
+        tx_control=TxControlConfig(ack_timeout=0.03, max_retries=2))
+    cfg = dataclasses.replace(cfg, staleness_bound=0.08)
+    per_event, _ = run_hybrid_multihop(DIM, sim_cfg=cfg, batched=False)
+    batched, _ = run_hybrid_multihop(DIM, sim_cfg=cfg, batched=True)
+    _assert_results_equal(per_event, batched)
+    assert len(batched.delivered) > 0
+    sim = NetworkSimulator(cfg).run()
+    assert batched.worker_crashes == sim.worker_crashes == 2
+    assert batched.worker_restarts == sim.worker_restarts == 1
+    assert batched.worker_straggles == 1
+    assert batched.ps_dropped == sim.ps_dropped
+    assert batched.stale_rejected == sim.stale_rejected
+    assert batched.stale_deferred == sim.stale_deferred
+
+
+def test_zero_probability_node_faults_hybrid_byte_identical():
+    """The zero-probability guarantee holds through the hybrid consumers
+    too: an all-no-op node FaultSpec replays identically to no faults."""
+    spec = fattree_spec(2)
+    base = build_sim_cfg(spec, gen_interval=0.02, horizon=0.2, seed=3)
+    noop = dataclasses.replace(
+        base, faults=FaultSpec(workers=[WorkerFault(worker=2)], seed=17))
+    for batched in (False, True):
+        ra, _ = run_hybrid_multihop(DIM, sim_cfg=base, batched=batched)
+        rb, _ = run_hybrid_multihop(DIM, sim_cfg=noop, batched=batched)
+        _assert_results_equal(ra, rb)
+        assert rb.worker_crashes == rb.worker_restarts == 0
+
+
+def _random_node_spec(rng):
+    """Random fan-in DAG (1-2 roots) for the randomized replay property."""
+    S = int(rng.integers(4, 8))
+    names = [f"N{i}" for i in range(S)]
+    switches = []
+    for i in range(S):
+        if i == S - 1:
+            nhs = None
+        else:
+            pool = names[i + 1:]
+            k = min(len(pool), int(rng.integers(1, 3)))
+            nhs = tuple(rng.choice(pool, size=k, replace=False))
+        switches.append(SwitchSpec(
+            names[i], next_hop=None if nhs is None else nhs[0],
+            next_hops=nhs if nhs is not None and len(nhs) > 1 else None,
+            queue_slots=int(rng.integers(3, 7)),
+            rate_gbps=float(rng.uniform(0.3e-3, 1.0e-3)),
+            reward_threshold=[None, 0.3][int(rng.integers(2))]))
+    policy = ["static", "hash", "adaptive"][int(rng.integers(3))]
+    return TopologySpec(switches, route_policy=policy)
+
+
+def _random_node_faults(rng, n_workers, horizon):
+    workers = []
+    for w in rng.choice(n_workers, size=min(3, n_workers), replace=False):
+        roll = rng.random()
+        if roll < 0.4:
+            workers.append(WorkerFault(
+                worker=int(w), crash_t=float(rng.uniform(0.2, 0.6)) * horizon,
+                restart_delay=(float(rng.uniform(0.1, 0.3)) * horizon
+                               if rng.random() < 0.5 else None)))
+        elif roll < 0.7:
+            workers.append(WorkerFault(worker=int(w),
+                                       slowdown=float(rng.uniform(1.5, 4.0))))
+    ps = []
+    if rng.random() < 0.6:
+        t0 = float(rng.uniform(0.3, 0.7)) * horizon
+        ps.append(PSFault(restart_t=t0,
+                          recovery=float(rng.uniform(0.05, 0.2)) * horizon))
+    links = []
+    if rng.random() < 0.5:
+        links.append(LinkFault(switch="N0",
+                               drop_prob=float(rng.uniform(0.0, 0.4))))
+    return FaultSpec(workers=workers, ps=ps, links=links,
+                     seed=int(rng.integers(0, 1000)))
+
+
+@pytest.mark.slow
+def test_randomized_node_fault_trace_equivalence():
+    """Property: randomized DAG traces with Worker/PS faults (plus link
+    loss and a staleness bound half the time) replay bitwise-identically
+    through the per-event and windowed consumers, node counters agreeing
+    with the simulator's."""
+    rng = np.random.default_rng(4242)
+    n_crashed = n_ps = n_stale = 0
+    for trial in range(14):
+        spec = _random_node_spec(rng)
+        horizon = float(rng.uniform(0.1, 0.2))
+        cfg = build_sim_cfg(
+            spec,
+            clusters_per_ingress=int(rng.integers(1, 3)),
+            workers_per_cluster=int(rng.integers(1, 3)),
+            gen_interval=float(rng.uniform(0.008, 0.02)),
+            horizon=horizon, seed=int(rng.integers(0, 100000)),
+            tx_control=TxControlConfig(
+                ack_timeout=float(rng.uniform(0.01, 0.05)), max_retries=3))
+        cfg = dataclasses.replace(
+            cfg,
+            faults=_random_node_faults(rng, len(cfg.workers), horizon),
+            staleness_bound=(float(rng.uniform(0.02, 0.08))
+                             if rng.random() < 0.5 else None))
+        per_event, _ = run_hybrid_multihop(DIM, sim_cfg=cfg, batched=False)
+        batched, _ = run_hybrid_multihop(DIM, sim_cfg=cfg, batched=True)
+        _assert_results_equal(per_event, batched)
+        sim = NetworkSimulator(cfg).run()
+        assert batched.worker_crashes == sim.worker_crashes, trial
+        assert batched.worker_restarts == sim.worker_restarts, trial
+        assert batched.ps_dropped == sim.ps_dropped, trial
+        assert batched.stale_rejected == sim.stale_rejected, trial
+        assert batched.stale_deferred == sim.stale_deferred, trial
+        assert sim.delivery_rate <= 1.0, trial
+        n_crashed += sim.worker_crashes > 0
+        n_ps += sim.ps_restarts > 0
+        n_stale += (sim.stale_rejected + sim.stale_deferred) > 0
+    # the sample actually exercised every fault class
+    assert n_crashed >= 4
+    assert n_ps >= 4
+    assert n_stale >= 3
+
+
+# ---------------------------------------------------------------------------
+# Checkpointed recovery end to end (slow)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_olaf_async_kill_resume_matches_uninterrupted(tmp_path):
+    """Kill ``run_olaf_async`` at step k, resume from its checkpoint, and
+    the final params match the uninterrupted run bit for bit — the whole
+    training plane (queue, txctl, AoM, PRNG key, float64 scheduling
+    counters) restores exactly, with node churn spanning the kill."""
+    import argparse
+    import os
+    from repro.configs import get_config
+    from repro.launch.train import run_olaf_async
+
+    def args(**kw):
+        base = dict(arch="smollm-360m", reduced=True, mode="olaf-async",
+                    steps=8, batch=4, seq=16, lr=1e-3, workers=4, seed=0,
+                    ckpt=None, ckpt_every=0, log_every=0, burst_size=2,
+                    drain_k=4, crash_workers="1", crash_at=2, restart_at=6,
+                    staleness_bound=3.0)
+        base.update(kw)
+        return argparse.Namespace(**base)
+
+    cfg = get_config("smollm-360m").reduced()
+    da, db = str(tmp_path / "a"), str(tmp_path / "b")
+    run_olaf_async(cfg, args(steps=4, ckpt=da))      # "killed" at step 4
+    run_olaf_async(cfg, args(steps=8, ckpt=da, resume=True))
+    run_olaf_async(cfg, args(steps=8, ckpt=db))      # uninterrupted oracle
+    a = np.load(os.path.join(da, "ckpt_00000008.npz"))
+    b = np.load(os.path.join(db, "ckpt_00000008.npz"))
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+@pytest.mark.slow
+def test_trainer_ps_checkpoint_recovery(tmp_path):
+    """AsyncDRLTrainer under node churn: a PS bounce mid-run restores the
+    latest snapshot (weights + gating scalars + staging queue), losing
+    only the un-snapshotted window; worker churn and staleness counters
+    all surface in the SimResult."""
+    from repro.rl.async_trainer import AsyncDRLTrainer, AsyncTrainConfig
+
+    faults = FaultSpec(
+        workers=[WorkerFault(worker=1, crash_t=0.4, restart_delay=0.5),
+                 WorkerFault(worker=3, crash_t=0.6),
+                 WorkerFault(worker=2, slowdown=2.0)],
+        ps=[PSFault(restart_t=0.9, recovery=0.05)])
+    cfg = AsyncTrainConfig(
+        n_clusters=2, workers_per_cluster=2, n_updates_per_worker=8,
+        queue="olaf", horizon=3.0, seed=3, out_gbps=1e-3,
+        tx_control=TxControlConfig(ack_timeout=0.3, max_retries=2),
+        faults=faults, staleness_bound=0.5, max_stale_defers=1,
+        ckpt_dir=str(tmp_path), ckpt_every=3)
+    tr = AsyncDRLTrainer(cfg)
+    res = tr.run()
+    sr = res.sim_result
+    assert sr.worker_crashes == 2 and sr.worker_restarts == 1
+    assert sr.ps_restarts == 1 and tr.ps_restarts == 1
+    assert tr.recovered_from, "PS bounce restored from a snapshot"
+    assert sr.delivery_rate <= 1.0
+    assert res.ps.applied > 0
+    assert np.isfinite(res.final_reward)
