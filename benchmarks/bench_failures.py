@@ -1,7 +1,8 @@
 """Failure suite: the fault-tolerant data plane under a mid-run link
-failure and node churn (fat-tree k=4, two spines, adaptive routing).
+failure, node churn, and payload corruption (fat-tree k=4, two spines,
+adaptive routing).
 
-Two scenarios on the same congested fabric:
+Three scenarios on the same congested fabric:
 
 * **link failure** — one scheduled outage takes a spine uplink down
   mid-run plus lossy pod-1 edges; OLAF with ACK-timeout retransmission
@@ -10,16 +11,26 @@ Two scenarios on the same congested fabric:
   later rejoin), one straggler runs slowed, and the PS itself bounces at
   60% of the horizon, all under a hard staleness bound applied equally
   to both queues.
+* **payload corruption** — mixed send-time corruption (NaN injection,
+  bit flips, norm explosions) under identical fault draws on three arms:
+  FIFO, OLAF unscreened, OLAF with ingress screening + ACK-timeout
+  retransmission. Real payload rows flow end to end (``payload_fn`` /
+  ``on_deliver``) and accumulate into a PS parameter vector — the
+  screened arm's parameters must stay finite.
 
 Gated floors (``check_regression.py --floors``):
 
-* ``failure_aom_advantage`` / ``node_churn_aom_advantage`` — FIFO AoM /
-  OLAF AoM under identical faults. Structural (same run, same faults),
-  so the floors are tight.
+* ``failure_aom_advantage`` / ``node_churn_aom_advantage`` /
+  ``corruption_aom_advantage`` — FIFO AoM / OLAF AoM under identical
+  faults. Structural (same run, same faults), so the floors are tight.
 * ``failure_recovery`` / ``node_churn_recovery`` — 1.0 when OLAF loses
   zero recoverable updates for good AND the uid-deduplicated delivery
   rate stays <= 1.0 (and, for churn, above the recovery floor), else
   0.0. Hard pass/fail encoded as a speedup.
+* ``corruption_screen`` — 1.0 when the screened arm admits zero tainted
+  deliveries, keeps its PS parameters finite, recovers every screened
+  send, AND the unscreened arm really delivered tainted payloads (the
+  faults were live), else 0.0.
 """
 from __future__ import annotations
 
@@ -28,8 +39,8 @@ import time
 
 import numpy as np
 
-from repro.core.netsim import (FaultSpec, LinkFault, NetworkSimulator,
-                               PSFault, WorkerFault)
+from repro.core.netsim import (CorruptionFault, FaultSpec, LinkFault,
+                               NetworkSimulator, PSFault, WorkerFault)
 from repro.core.topology import build_sim_cfg, fattree_spec
 from repro.core.txctl import TxControlConfig
 
@@ -139,6 +150,78 @@ def failure_sweep() -> dict:
     return rows
 
 
+# payload corruption: every mode detectable by the ingress screen (NaN
+# injection, checksum-class bit flips, a 1000x norm explosion), moderate
+# per-send probabilities so ACK-timeout retransmission (6 retries from
+# the worker's clean cache, each re-drawing corruption independently)
+# recovers every screened copy within the drain window
+CORRUPTION_DIM = 16
+
+
+def _corruption_faults() -> FaultSpec:
+    return FaultSpec(corruption=[
+        CorruptionFault(worker=0, prob=0.15, mode="nan"),
+        CorruptionFault(prob=0.08, mode="bitflip"),
+        CorruptionFault(switch="EDGE12", prob=0.15, mode="scale",
+                        factor=1e3),
+    ], seed=31)
+
+
+def _corruption_scenario(queue: str, *, tx: bool, screen: bool,
+                         seed: int = 29):
+    spec = fattree_spec(4, spines=2, route_policy="adaptive")
+    cfg = build_sim_cfg(
+        spec, queue=queue, clusters_per_ingress=1, workers_per_cluster=2,
+        gen_interval=0.02, size_bits=8192, horizon=HORIZON,
+        n_updates=N_UPDATES, faults=_corruption_faults(), seed=seed,
+        tx_control=TxControlConfig(ack_timeout=0.04, max_retries=6)
+        if tx else None)
+    return dataclasses.replace(cfg, ingress_screen=screen)
+
+
+def corruption_sweep() -> dict:
+    """Three arms under identical corruption draws: FIFO baseline, OLAF
+    without screening (tainted payloads reach the PS), OLAF with ingress
+    screening + retransmission (they must not). Real payload rows ride
+    the sim and accumulate into per-arm PS parameters."""
+    rows = {}
+    arms = (("FIFO", "fifo", False, False),
+            ("OLAF_unscreened", "olaf", True, False),
+            ("OLAF_screened", "olaf", True, True))
+    for name, queue, tx, screen in arms:
+        rng = np.random.default_rng(101)
+        params = np.zeros(CORRUPTION_DIM, np.float64)
+
+        def payload_fn(now, worker_id):
+            return (rng.normal(size=CORRUPTION_DIM).astype(np.float32),
+                    float(rng.normal()))
+
+        def on_deliver(now, upd):
+            if upd.payload is not None:
+                params[:] += np.asarray(upd.payload, np.float64)
+            return None
+
+        cfg = dataclasses.replace(
+            _corruption_scenario(queue, tx=tx, screen=screen),
+            payload_fn=payload_fn, on_deliver=on_deliver)
+        t0 = time.time()
+        # unscreened arms knowingly average NaN/Inf payloads end to end —
+        # that propagation is the point, not a numerical accident
+        with np.errstate(invalid="ignore", over="ignore"):
+            r = NetworkSimulator(cfg).run()
+        aom = float(np.mean(list(r.per_cluster_aom().values()))) * 1e3
+        rows[name] = dict(
+            wall_s=time.time() - t0, aom_ms=aom,
+            fairness=float(r.aom_fairness()),
+            delivery_rate=float(r.delivery_rate),
+            corrupted=r.corrupted, screened=r.screened,
+            tainted_delivered=r.tainted_delivered,
+            retransmits=r.retransmits,
+            unrecovered_drops=r.unrecovered_drops,
+            params_finite=bool(np.isfinite(params).all()))
+    return rows
+
+
 # the churn run must still land at least this fraction of unique sends
 # at the PS (uid-deduplicated) — set conservatively below the recorded
 # value so scenario-constant tweaks don't flake the gate
@@ -159,6 +242,16 @@ def main(report):
         colaf["unrecovered_drops"] == 0
         and colaf["delivery_rate"] <= 1.0
         and colaf["delivery_rate"] >= CHURN_DELIVERY_FLOOR) else 0.0
+    corr = corruption_sweep()
+    kfifo, kraw, kscr = (corr["FIFO"], corr["OLAF_unscreened"],
+                         corr["OLAF_screened"])
+    corr_aom_advantage = kfifo["aom_ms"] / max(kscr["aom_ms"], 1e-9)
+    corr_screen = 1.0 if (
+        kscr["tainted_delivered"] == 0
+        and kscr["params_finite"]
+        and kscr["unrecovered_drops"] == 0
+        and kscr["delivery_rate"] <= 1.0
+        and kraw["tainted_delivered"] > 0) else 0.0
     report("failure_sweep_fifo", fifo["wall_s"] * 1e6,
            f"aom {fifo['aom_ms']:.0f}ms J={fifo['fairness']:.2f} "
            f"delivery {100 * fifo['delivery_rate']:.0f}% "
@@ -183,6 +276,24 @@ def main(report):
            f"crashes {colaf['worker_crashes']} "
            f"restarts {colaf['worker_restarts']} "
            f"unrecovered {colaf['unrecovered_drops']}")
+    report("corruption_fifo", kfifo["wall_s"] * 1e6,
+           f"aom {kfifo['aom_ms']:.0f}ms "
+           f"corrupted {kfifo['corrupted']} "
+           f"tainted {kfifo['tainted_delivered']} "
+           f"finite {kfifo['params_finite']}")
+    report("corruption_olaf_unscreened", kraw["wall_s"] * 1e6,
+           f"aom {kraw['aom_ms']:.0f}ms "
+           f"corrupted {kraw['corrupted']} "
+           f"tainted {kraw['tainted_delivered']} "
+           f"finite {kraw['params_finite']}")
+    report("corruption_olaf_screened", kscr["wall_s"] * 1e6,
+           f"aom {kscr['aom_ms']:.0f}ms "
+           f"corrupted {kscr['corrupted']} "
+           f"screened {kscr['screened']} "
+           f"tainted {kscr['tainted_delivered']} "
+           f"retx {kscr['retransmits']} "
+           f"unrecovered {kscr['unrecovered_drops']} "
+           f"finite {kscr['params_finite']}")
     return dict(
         failure_sweep=rows,
         node_churn_sweep=churn,
@@ -204,4 +315,16 @@ def main(report):
             delivery_floor=CHURN_DELIVERY_FLOOR,
             ps_dropped=colaf["ps_dropped"],
             stale_rejected=colaf["stale_rejected"],
-            unrecovered_drops=colaf["unrecovered_drops"]))
+            unrecovered_drops=colaf["unrecovered_drops"]),
+        corruption_sweep=corr,
+        corruption_aom_advantage=dict(
+            speedup=corr_aom_advantage,
+            fifo_aom_ms=kfifo["aom_ms"], olaf_aom_ms=kscr["aom_ms"]),
+        corruption_screen=dict(
+            speedup=corr_screen,
+            screened=kscr["screened"],
+            tainted_screened=kscr["tainted_delivered"],
+            tainted_unscreened=kraw["tainted_delivered"],
+            params_finite=kscr["params_finite"],
+            unrecovered_drops=kscr["unrecovered_drops"],
+            delivery_rate=kscr["delivery_rate"]))

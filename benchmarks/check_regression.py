@@ -71,9 +71,16 @@ SPEEDUP_FLOORS = {
     # elastic rejoins, a straggler, a mid-run PS bounce, hard staleness
     # bound): OLAF must keep its AoM advantage (recorded ~9.3x) and land
     # >= the delivery floor of unique sends with zero unrecovered drops.
+    # ``corruption_*`` gate the payload-integrity scenario (mixed NaN /
+    # bit-flip / norm-explosion corruption on three arms): screened OLAF
+    # keeps its AoM advantage over FIFO (recorded ~6.4x) and the screen
+    # admits zero tainted deliveries with finite PS parameters while the
+    # unscreened arm demonstrably delivers tainted payloads.
     "failures": {"failure_aom_advantage": 1.02, "failure_recovery": 1.0,
                  "node_churn_aom_advantage": 1.02,
-                 "node_churn_recovery": 1.0},
+                 "node_churn_recovery": 1.0,
+                 "corruption_aom_advantage": 1.02,
+                 "corruption_screen": 1.0},
 }
 
 

@@ -35,7 +35,10 @@ def main() -> None:
         ("train", bench_train), ("step", bench_step),
         ("training", bench_training),
         ("verifier", bench_verifier), ("kernels", bench_kernels),
-        ("roofline", bench_roofline), ("failures", bench_failures),
+        ("roofline", bench_roofline),
+        # link failure + node churn + payload corruption all ride the one
+        # failures suite (BENCH_failures.json carries every gated row)
+        ("failures", bench_failures),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     if only and only not in {n for n, _ in modules}:

@@ -53,6 +53,11 @@ class Update:
     #   the number of fresh sends (the delivery_rate <= 1 invariant).
     defers: int = 0  # times this update was deferred by the PS staleness
     #   admission control and re-queued at the egress switch to recombine
+    corrupt: Optional[tuple] = None  # payload-corruption marker
+    #   ``(mode, seed, factor)`` stamped by a CorruptionFault at send time.
+    #   ``None`` = clean. The marker travels with the metadata trace so
+    #   both hybrid consumers can apply the identical byte damage
+    #   (``apply_corruption`` in netsim) without shipping payloads.
 
     def clone(self) -> "Update":
         return dataclasses.replace(
@@ -100,6 +105,10 @@ def aggregate(waiting: Update, incoming: Update) -> Update:
         replaceable=False,  # an aggregation disables same-worker replacement
         uids=_merge_uids(waiting.uids, incoming.uids),
         defers=max(waiting.defers, incoming.defers),
+        # averaging a tainted payload taints the merge — either side's
+        # corruption survives (incoming's marker wins for determinism)
+        corrupt=incoming.corrupt if incoming.corrupt is not None
+        else waiting.corrupt,
     )
 
 
@@ -112,6 +121,9 @@ def replace(waiting: Update, incoming: Update) -> Update:
     # delivery also covers the waiting update's fresh sends
     out.uids = _merge_uids(waiting.uids, incoming.uids)
     out.defers = max(waiting.defers, incoming.defers)
+    # replacement discards the waiting payload bytes entirely, so only the
+    # incoming update's corruption marker (already on ``out``) survives —
+    # a clean replacement *heals* a tainted slot.
     return out
 
 
@@ -121,3 +133,65 @@ def _merge_uids(a: Optional[frozenset], b: Optional[frozenset]) -> Optional[froz
     if b is None:
         return a
     return a | b
+
+
+# ---------------------------------------------------------------------------
+# Robust combining (payload-integrity fallback at PS egress)
+# ---------------------------------------------------------------------------
+# When ingress screening flags a large fraction of a drained block, the
+# trainer falls back from the plain weighted mean to a *winsorized*
+# (per-coordinate trimmed) combine: every coordinate is clipped into the
+# [trim, 1-trim] weighted-sample quantile band of the valid rows before
+# averaging, so a single exploding or non-finite row cannot dominate the
+# merged gradient. The numpy versions are the sequential oracle; the jax
+# twin is jit-safe and is what ``run_olaf_async``'s PS step calls.
+
+def coordinate_clip(rows: np.ndarray, bound: float) -> np.ndarray:
+    """Clip every coordinate of every row into ``[-bound, bound]``
+    (non-finite coordinates collapse to the nearest bound / zero)."""
+    out = np.nan_to_num(rows, nan=0.0, posinf=bound, neginf=-bound)
+    return np.clip(out, -bound, bound)
+
+
+def trimmed_combine(rows: np.ndarray, weights: np.ndarray,
+                    trim: float = 0.25) -> np.ndarray:
+    """Winsorized weighted mean over the rows with ``weights > 0``.
+
+    Per coordinate, values are clipped into the [trim, 1-trim] quantile
+    band of the *valid* rows, then averaged with the original weights.
+    With no valid rows the combine is all-zero (a skipped PS step).
+    """
+    rows = np.asarray(rows, np.float64)
+    weights = np.asarray(weights, np.float64)
+    valid = weights > 0
+    if not valid.any():
+        return np.zeros(rows.shape[-1], rows.dtype)
+    masked = np.where(valid[:, None], rows, np.nan)
+    lo = np.nanquantile(masked, trim, axis=0)
+    hi = np.nanquantile(masked, 1.0 - trim, axis=0)
+    clipped = np.clip(np.nan_to_num(rows, nan=0.0, posinf=0.0,
+                                    neginf=0.0), lo, hi)
+    wts = weights * valid
+    return (wts[:, None] * clipped).sum(0) / max(wts.sum(), 1.0)
+
+
+def jax_trimmed_combine(rows, weights, trim: float = 0.25):
+    """Jit-safe twin of :func:`trimmed_combine` for the device PS step.
+
+    ``rows`` is the drained ``(K, D)`` payload block, ``weights`` the
+    ``valid * agg_count`` weighting the plain path uses. Returns the
+    winsorized weighted mean as ``(D,)`` float32.
+    """
+    import jax.numpy as jnp
+
+    valid = weights > 0
+    masked = jnp.where(valid[:, None], rows, jnp.nan)
+    lo = jnp.nanquantile(masked, trim, axis=0)
+    hi = jnp.nanquantile(masked, 1.0 - trim, axis=0)
+    # non-finite coordinates are zeroed before the quantile clip so NaNs
+    # cannot propagate through the mean even when a row slips the screen
+    safe = jnp.where(jnp.isfinite(rows), rows, 0.0)
+    clipped = jnp.clip(safe, jnp.nan_to_num(lo, nan=0.0),
+                       jnp.nan_to_num(hi, nan=0.0))
+    wts = weights * valid
+    return jnp.einsum("k,kd->d", wts, clipped) / jnp.maximum(wts.sum(), 1.0)

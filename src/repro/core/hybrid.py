@@ -81,7 +81,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.aggregation import Update
-from repro.core.netsim import NetworkSimulator, SimCfg, multihop_cfg
+from repro.core.netsim import NetworkSimulator, SimCfg, apply_corruption, \
+    multihop_cfg
 from repro.core.olaf_queue import PyOlafQueue, burst_contribution_mask
 from repro.core.topology import TopologySpec, resolve_sim_cfg, \
     spec_from_switch_cfgs
@@ -176,6 +177,10 @@ class HybridResult:
     worker_crashes: int = 0
     worker_restarts: int = 0
     worker_straggles: int = 0
+    # ---- payload-integrity accounting (mirrors SimResult's) --------------
+    corrupted: int = 0  # sends stamped by a CorruptionFault
+    screened: int = 0  # corrupted sends rejected at the ingress screen
+    tainted_delivered: int = 0  # deliveries still carrying a marker
 
 
 class HybridMultiSwitchDataPlane:
@@ -250,6 +255,9 @@ class HybridMultiSwitchDataPlane:
         self.worker_crashes = 0
         self.worker_restarts = 0
         self.worker_straggles = 0
+        self.corrupted = 0
+        self.screened = 0
+        self.tainted_delivered = 0
 
     # -- flush cadence ------------------------------------------------------
     def _flush_names(self, sw_name: str) -> Tuple[str, ...]:
@@ -285,9 +293,16 @@ class HybridMultiSwitchDataPlane:
             row_host = np.asarray(self._rows[self._next_row], np.float32)
             self._next_row += 1
             self._last_row[meta.worker_id] = row_host
+        if meta.corrupt is not None:
+            # replay the identical byte damage the simulator applied at
+            # send time; ``_last_row`` keeps the CLEAN bytes (the
+            # worker-side cache), so a later retransmission of this
+            # update starts from clean data again
+            row_host = apply_corruption(row_host, meta.corrupt)
         upd = Update(cluster_id=meta.cluster_id, worker_id=meta.worker_id,
                      gen_time=meta.gen_time, reward=meta.reward,
-                     size_bits=meta.size_bits, retx=meta.retx)
+                     size_bits=meta.size_bits, retx=meta.retx,
+                     corrupt=meta.corrupt)
         if batched:  # stays host-side until the window's single block put
             return upd, row_host
         self.h2d_transfers += 1  # per-event reference path: one put per row
@@ -348,6 +363,14 @@ class HybridMultiSwitchDataPlane:
     # never interleave into a dequeue's pending departure — the simulator
     # emits dequeue and its routing event inside one heap callback)
     NODE_KINDS = frozenset({"crash", "restart", "straggle"})
+    # payload-integrity markers, emitted before any enqueue of the send:
+    # "corrupt" is counter-only (the marker itself rides the subsequent
+    # enqueue/screen event's metadata); "screen" means the send never
+    # reaches a queue but its payload row must still be consumed so the
+    # ingress row budget stays aligned with the simulator's payload_fn
+    # call order. Like NODE_KINDS they fire inside the worker's own heap
+    # callback, never between a dequeue and its routing event.
+    INTEGRITY_KINDS = frozenset({"corrupt", "screen"})
 
     def _node_event(self, kind: str) -> None:
         if kind == "crash":
@@ -357,6 +380,17 @@ class HybridMultiSwitchDataPlane:
         else:
             self.worker_straggles += 1
 
+    def _integrity_event(self, sw_name: str, kind: str,
+                         meta: Update) -> None:
+        if kind == "corrupt":
+            self.corrupted += 1
+            return
+        # screened: consume (and discard) the send's payload row host-side
+        # — batched=True resolution never touches the device, which is the
+        # point: a screened row costs zero h2d traffic in either consumer
+        self._resolve_incoming(sw_name, meta, batched=True)
+        self.screened += 1
+
     # -- per-event reference replay ----------------------------------------
     def feed(self, now: float, sw_name: str, kind: str,
              meta: Optional[Update]) -> None:
@@ -364,6 +398,9 @@ class HybridMultiSwitchDataPlane:
         :meth:`feed_window` is property-tested against."""
         if kind in self.NODE_KINDS:
             self._node_event(kind)
+            return
+        if kind in self.INTEGRITY_KINDS:
+            self._integrity_event(sw_name, kind, meta)
             return
         if kind in self.ROUTE_KINDS:  # the deferred departure's routing
             self._route(kind, sw_name)  # decision ("forward" names the dst)
@@ -410,6 +447,11 @@ class HybridMultiSwitchDataPlane:
         for now, sw_name, kind, meta in events:
             if kind in self.NODE_KINDS:
                 self._node_event(kind)
+                continue
+            if kind in self.INTEGRITY_KINDS:
+                # resolved eagerly, like enqueues: a screened send's row
+                # consumption must stay in event order
+                self._integrity_event(sw_name, kind, meta)
                 continue
             if kind in self.ROUTE_KINDS:
                 self._route(kind, sw_name)
@@ -497,6 +539,8 @@ class HybridMultiSwitchDataPlane:
             self.stale_rejected += 1
             return
         if kind == "deliver":
+            if upd.corrupt is not None:
+                self.tainted_delivered += 1
             self.delivered.append((now, upd, row))
             return
         if kind == "stalerequeue":
@@ -683,7 +727,10 @@ class HybridMultiSwitchDataPlane:
             stale_deferred=self.stale_deferred,
             worker_crashes=self.worker_crashes,
             worker_restarts=self.worker_restarts,
-            worker_straggles=self.worker_straggles)
+            worker_straggles=self.worker_straggles,
+            corrupted=self.corrupted,
+            screened=self.screened,
+            tainted_delivered=self.tainted_delivered)
 
 
 def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
@@ -759,9 +806,12 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
             # exactly one row per fresh ingress enqueue in the trace (a
             # fresh update's metadata snapshot carries seq == -1; see
             # HybridMultiSwitchDataPlane._resolve_incoming)
+            # a screened fresh send never emits an "enqueue" but its
+            # payload row was still generated (and consumed) — count it
             n_fresh = sum(1 for _, _, kind, m in events
-                          if kind == "enqueue" and m.seq < 0
-                          and m.retx == 0)
+                          if (kind == "enqueue" and m.seq < 0
+                              and m.retx == 0)
+                          or (kind == "screen" and m.retx == 0))
             rng = np.random.default_rng(seed + 1)
             payload_rows = rng.normal(
                 size=(n_fresh, dim)).astype(np.float32)

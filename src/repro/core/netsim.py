@@ -85,6 +85,75 @@ class LinkFault:
 
 
 @dataclasses.dataclass
+class CorruptionFault:
+    """Payload corruption on the worker → ingress first hop.
+
+    Fires at *send time* (fresh sends and retransmitted copies draw
+    independently — the worker-side cache keeps the clean bytes, so a
+    retransmission can recover a screened original). ``worker`` scopes to
+    one worker id, ``switch`` to every worker whose ingress is that
+    switch; both ``None`` covers every send. ``prob`` corrupts each
+    departing copy i.i.d. from the dedicated fault RNG stream, so a
+    zero-probability CorruptionFault is byte-identical to no fault.
+
+    ``mode`` selects the damage:
+
+      * ``"bitflip"`` — XOR a high exponent bit of one payload element
+        (silent memory/wire bit damage);
+      * ``"nan"`` / ``"inf"`` — overwrite one element with NaN / ±Inf
+        (a poisoned gradient);
+      * ``"scale"`` — multiply the whole payload by ``factor`` (the
+        exploding-update straggler).
+    """
+
+    worker: Optional[int] = None
+    switch: Optional[str] = None
+    prob: float = 0.0
+    mode: str = "bitflip"
+    factor: float = 1e4
+
+
+CORRUPTION_MODES = ("bitflip", "nan", "inf", "scale")
+
+
+def apply_corruption(row: np.ndarray, marker: Tuple[str, int, float]) -> np.ndarray:
+    """Apply a ``(mode, seed, factor)`` corruption marker to a payload row.
+
+    Pure function of ``(row, marker)`` — the marker rides the control-plane
+    trace, so every consumer (netsim with real payloads, both hybrid
+    consumers, tests) reproduces the identical damaged bytes without
+    shipping payloads host-side."""
+    mode, seed, factor = marker
+    out = np.asarray(row, np.float32).copy()
+    if out.size == 0:
+        return out
+    i = int(seed) % out.size
+    if mode == "nan":
+        out.flat[i] = np.nan
+    elif mode == "inf":
+        out.flat[i] = np.inf if (int(seed) >> 8) % 2 == 0 else -np.inf
+    elif mode == "scale":
+        out *= np.float32(factor)
+    elif mode == "bitflip":
+        out.view(np.uint32).flat[i] ^= np.uint32(1 << 30)
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    return out
+
+
+def corruption_detectable(marker: Tuple[str, int, float],
+                          screen_factor: float) -> bool:
+    """Whether the ingress screen catches this marker. Bit damage and
+    non-finite injection model checksum / isfinite checks (always
+    caught); a ``scale`` fault only trips the norm gate when the factor
+    reaches the configured ratio."""
+    mode, _seed, factor = marker
+    if mode in ("bitflip", "nan", "inf"):
+        return True
+    return abs(factor) >= screen_factor
+
+
+@dataclasses.dataclass
 class SwitchStall:
     """The switch starts no new transmissions in ``[from_t, until_t)``;
     arrivals still enqueue (and combine, for OLAF queues) meanwhile."""
@@ -136,12 +205,15 @@ class FaultSpec:
     a zero-probability FaultSpec leaves a run byte-identical to the
     fault-free baseline. Node faults (``workers`` / ``ps``) are scheduled
     deterministically and consume no randomness at all, so a WorkerFault
-    with no crash and unit slowdown is likewise a no-op."""
+    with no crash and unit slowdown is likewise a no-op; a
+    zero-probability ``corruption`` entry draws nothing either."""
 
     links: List[LinkFault] = dataclasses.field(default_factory=list)
     stalls: List[SwitchStall] = dataclasses.field(default_factory=list)
     workers: List[WorkerFault] = dataclasses.field(default_factory=list)
     ps: List[PSFault] = dataclasses.field(default_factory=list)
+    corruption: List[CorruptionFault] = dataclasses.field(
+        default_factory=list)
     seed: int = 0
 
     def _match(self, src: str, dst: Optional[str]):
@@ -177,6 +249,14 @@ class FaultSpec:
     def ps_down(self, t: float) -> bool:
         return any(pf.down(t) for pf in self.ps)
 
+    def corruption_candidates(self, worker_id: int, ingress: str):
+        """CorruptionFaults matching one worker's send, in declaration
+        order (the draw order — deterministic given the spec)."""
+        for cf in self.corruption:
+            if (cf.worker is None or cf.worker == worker_id) and \
+                    (cf.switch is None or cf.switch == ingress):
+                yield cf
+
 
 @dataclasses.dataclass
 class SimCfg:
@@ -196,6 +276,15 @@ class SimCfg:
     # fresher same-cluster traffic before a final rejection.
     staleness_bound: Optional[float] = None
     max_stale_defers: int = 1
+    # Payload-integrity screening at the ingress pipeline: when enabled, a
+    # send whose corruption marker is detectable (checksum-class bit
+    # damage / non-finite injection always; norm-class "scale" faults when
+    # |factor| >= screen_factor) is screened out before it reaches the
+    # combine queue. No ACK ever covers a screened send, so the worker's
+    # armed ACK-timeout retransmission recovers it (a NACK by silence) —
+    # the same recovery contract as a PSFault window drop.
+    ingress_screen: bool = False
+    screen_factor: float = 16.0
     # on_ps_restart(now): fires when a PSFault recovery window closes, so
     # the trainer can restore PS state from its latest checkpoint.
     on_ps_restart: Optional[Callable[[float], None]] = None
@@ -230,6 +319,13 @@ class SimCfg:
     # kinds "crash" / "restart" / "straggle" fire at the worker's ingress
     # switch with a metadata-only update naming the worker; they carry no
     # queue effect and exist so node churn replays through the trace.
+    # The payload-integrity kinds fire at the worker's ingress switch
+    # *before* any enqueue: "corrupt" records that a CorruptionFault
+    # stamped this send (the marker rides ``update.corrupt``, so replay
+    # consumers apply the identical byte damage via ``apply_corruption``);
+    # "screen" records that ingress screening rejected the send — the
+    # update never enqueues, and the consumer must still consume its
+    # payload row (fresh sends) so row budgets stay aligned.
     on_queue_event: Optional[Callable[[float, str, str, Optional[Update]], None]] = None
 
 
@@ -306,6 +402,12 @@ class SimResult:
     worker_crashes: int = 0
     worker_restarts: int = 0
     ps_restarts: int = 0
+    # ---- payload-integrity accounting ------------------------------------
+    corrupted: int = 0  # sends stamped by a CorruptionFault
+    screened: int = 0  # corrupted sends rejected by ingress screening
+    tainted_delivered: int = 0  # deliveries still carrying a corruption
+    #   marker (with screening on, only undetectable sub-threshold scale
+    #   faults should ever land here)
 
     # ---- derived metrics -------------------------------------------------
     @property
@@ -454,6 +556,10 @@ class NetworkSimulator:
         self.worker_crashes = 0
         self.worker_restarts = 0
         self.ps_restarts = 0
+        # payload-integrity accounting
+        self.corrupted = 0
+        self.screened = 0
+        self.tainted_delivered = 0
 
     # -- event plumbing ----------------------------------------------------
     def _at(self, t: float, fn: Callable[[], None]) -> None:
@@ -501,6 +607,9 @@ class NetworkSimulator:
             worker_crashes=self.worker_crashes,
             worker_restarts=self.worker_restarts,
             ps_restarts=self.ps_restarts,
+            corrupted=self.corrupted,
+            screened=self.screened,
+            tainted_delivered=self.tainted_delivered,
         )
 
     # -- node faults (worker crash/restart/straggle, PS restart) -----------
@@ -624,7 +733,7 @@ class NetworkSimulator:
                 self._last_sent[w.worker_id] = (self.now, reward, payload, uid)
                 ctl.on_send(self.now, self.now)
                 self._at(ctl.deadline, lambda: self._maybe_retransmit(w))
-            self._arrive_at_switch(w.ingress_switch, upd)
+            self._send_update(w, upd)
         else:
             self.deferred += 1  # worker keeps training; next update subsumes
         self._schedule_generation(w)
@@ -647,12 +756,52 @@ class NetworkSimulator:
                      payload=None if payload is None else payload.copy(),
                      size_bits=w.size_bits, retx=ctl.retries,
                      uids=frozenset((uid,)))
-        self._arrive_at_switch(w.ingress_switch, upd)
+        self._send_update(w, upd)
         self._at(ctl.deadline, lambda: self._maybe_retransmit(w))
 
     def _queue_event(self, name: str, kind: str, upd: Optional[Update]) -> None:
         if self.cfg.on_queue_event is not None:
             self.cfg.on_queue_event(self.now, name, kind, upd)
+
+    # -- payload integrity (send-time corruption + ingress screening) -------
+    def _draw_corruption(self, w: WorkerCfg) -> Optional[Tuple[str, int, float]]:
+        """Draw a corruption marker for one departing send, or None. One
+        RNG draw per matching positive-probability fault (first firing
+        wins), so zero-probability specs consume no randomness."""
+        if self.faults is None or not self.faults.corruption:
+            return None
+        for cf in self.faults.corruption_candidates(
+                w.worker_id, w.ingress_switch):
+            if cf.prob > 0.0 and self.fault_rng.random() < cf.prob:
+                seed = int(self.fault_rng.integers(0, 2 ** 31 - 1))
+                return (cf.mode, seed, cf.factor)
+        return None
+
+    def _send_update(self, w: WorkerCfg, upd: Update) -> None:
+        """Last hop before the ingress switch: apply send-time corruption,
+        then ingress screening. ``_last_sent`` cached the clean payload
+        *before* this point, so a screened (or lost) copy is recoverable
+        by retransmission with fresh corruption draws."""
+        marker = self._draw_corruption(w)
+        if marker is not None:
+            upd.corrupt = marker
+            if upd.payload is not None:
+                upd.payload = apply_corruption(upd.payload, marker)
+            self.corrupted += 1
+            self._queue_event(w.ingress_switch, "corrupt",
+                              dataclasses.replace(upd, payload=None))
+            if self.cfg.ingress_screen and corruption_detectable(
+                    marker, self.cfg.screen_factor):
+                # screened before the combine queue: no ACK will ever
+                # cover this send, so the worker's armed ACK-timeout
+                # retransmission recovers it — a NACK by silence, the
+                # same contract as a PSFault recovery-window drop
+                self.screened += 1
+                self._dropped_info.append((upd.cluster_id, upd.gen_time))
+                self._queue_event(w.ingress_switch, "screen",
+                                  dataclasses.replace(upd, payload=None))
+                return
+        self._arrive_at_switch(w.ingress_switch, upd)
 
     # -- switch / queue path -------------------------------------------------
     def _arrive_at_switch(self, name: str, upd: Update) -> None:
@@ -796,6 +945,8 @@ class NetworkSimulator:
         self.deliveries[upd.cluster_id].append((self.now, upd.gen_time))
         self.delivered_updates.append(upd)
         self.agg_counts.append(upd.agg_count)
+        if upd.corrupt is not None:
+            self.tainted_delivered += 1
         if upd.uids is not None:
             self._delivered_uids |= upd.uids
         prev = self._max_delivered_gen.get(upd.cluster_id, -math.inf)

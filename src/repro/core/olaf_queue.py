@@ -256,6 +256,11 @@ class JaxQueueState:
     n_dropped: jnp.ndarray
     n_agg: jnp.ndarray
     n_repl: jnp.ndarray
+    # payload-integrity counter: burst rows rejected by the ingress screen
+    # (non-finite / norm-gate); defaulted so pre-screening constructions
+    # stay valid pytrees
+    n_screened: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32))
 
 
 _EMPTY_SEQ = jnp.iinfo(jnp.int32).max
@@ -275,6 +280,7 @@ def jax_queue_init(capacity: int, dim: int, dtype=jnp.float32) -> JaxQueueState:
         n_dropped=jnp.zeros((), jnp.int32),
         n_agg=jnp.zeros((), jnp.int32),
         n_repl=jnp.zeros((), jnp.int32),
+        n_screened=jnp.zeros((), jnp.int32),
     )
 
 
@@ -343,6 +349,7 @@ def jax_enqueue(state: JaxQueueState, cluster: jnp.ndarray, worker: jnp.ndarray,
         n_dropped=state.n_dropped + (do_drop_full | do_reward_drop).astype(jnp.int32),
         n_agg=state.n_agg + do_aggregate.astype(jnp.int32),
         n_repl=state.n_repl + (same_worker_replace | do_reward_replace).astype(jnp.int32),
+        n_screened=state.n_screened,
     )
     return new_state
 
@@ -454,7 +461,7 @@ _EV_RESET = 2  # slot payload restarts from this update (append / replace)
 
 
 def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
-                   reward_threshold, send=None, capacity=None):
+                   reward_threshold, send=None, capacity=None, screen=None):
     """Scalar half of the burst: Algorithm 1 decisions for U updates.
 
     A ``lax.scan`` over the burst carrying only the ``(Q,)`` metadata columns
@@ -469,34 +476,44 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
     (§5): a masked-out update is *deferred*, not dropped — it touches neither
     the queue nor the drop counter (the worker keeps training locally and its
     next update subsumes this one).
+
+    ``screen`` is an optional (U,) ingress-screening mask (True = screened
+    out as corrupt — non-finite or norm-gate rejection, see
+    :func:`jax_screen_mask`): a screened update never touches the queue
+    either, but it is counted in ``n_screened`` — and, unlike a deferred
+    one, the worker-side txctl machinery treats the missing ACK as a NACK
+    and retransmits the clean cached copy.
     """
     if send is None:
         send = jnp.ones(clusters.shape, bool)
+    if screen is None:
+        screen = jnp.zeros(clusters.shape, bool)
     Q = state.cluster.shape[0]
     # logical-slot mask: slots >= capacity never host an append, so one
     # padded (Qmax,) buffer serves heterogeneous per-switch slot counts
     valid_slot = jnp.arange(Q) < (Q if capacity is None else capacity)
     carry = (state.cluster, state.worker, state.seq, state.gen_time,
              state.reward, state.agg_count, state.replaceable, state.next_seq,
-             state.n_dropped, state.n_agg, state.n_repl)
+             state.n_dropped, state.n_agg, state.n_repl, state.n_screened)
 
     def body(carry, xs):
-        cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr = carry
-        c, w, t, r, snd = xs
+        cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns = carry
+        c, w, t, r, snd, scr = xs
+        act = snd & ~scr  # sent AND admitted by the ingress screen
         occupied = cl >= 0
         same_cluster = occupied & (cl == c)
         hit = jnp.any(same_cluster)
         slot_hit = jnp.argmax(same_cluster)
 
-        same_worker_replace = snd & hit & rp[slot_hit] & (wk[slot_hit] == w)
+        same_worker_replace = act & hit & rp[slot_hit] & (wk[slot_hit] == w)
         rdiff = r - rw[slot_hit]
-        do_reward_replace = snd & hit & ~same_worker_replace & (rdiff > reward_threshold)
-        do_reward_drop = snd & hit & ~same_worker_replace & (rdiff < -reward_threshold)
-        do_aggregate = snd & hit & ~same_worker_replace & ~do_reward_replace & ~do_reward_drop
+        do_reward_replace = act & hit & ~same_worker_replace & (rdiff > reward_threshold)
+        do_reward_drop = act & hit & ~same_worker_replace & (rdiff < -reward_threshold)
+        do_aggregate = act & hit & ~same_worker_replace & ~do_reward_replace & ~do_reward_drop
 
         full = jnp.all(occupied | ~valid_slot)
-        do_append = snd & ~hit & ~full
-        do_drop_full = snd & ~hit & full
+        do_append = act & ~hit & ~full
+        do_drop_full = act & ~hit & full
 
         slot = jnp.where(hit, slot_hit, jnp.argmax(~occupied & valid_slot))
         write = same_worker_replace | do_reward_replace | do_aggregate | do_append
@@ -519,18 +536,19 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
             nd + (do_drop_full | do_reward_drop).astype(jnp.int32),
             na + do_aggregate.astype(jnp.int32),
             nr + (same_worker_replace | do_reward_replace).astype(jnp.int32),
+            ns + (snd & scr).astype(jnp.int32),
         )
         return new_carry, (slot.astype(jnp.int32), event.astype(jnp.int32))
 
     carry, (slots, events) = jax.lax.scan(
         body, carry, (clusters, workers, gen_times, rewards,
-                      send.astype(bool)))
+                      send.astype(bool), screen.astype(bool)))
     return carry, slots, events
 
 
 def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
                       rewards, payloads, reward_threshold: float = jnp.inf,
-                      send=None, capacity=None) -> JaxQueueState:
+                      send=None, capacity=None, screen=None) -> JaxQueueState:
     """Fused fast path: resolve a whole U-update incast burst in one pass.
 
     Semantics match ``jax_enqueue_batch`` (sequential Algorithm 1) exactly on
@@ -551,8 +569,8 @@ def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
         return state
     carry, slots, events = _burst_resolve(
         state, clusters, workers, gen_times, rewards, reward_threshold, send,
-        capacity)
-    (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr) = carry
+        capacity, screen)
+    (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns) = carry
 
     u_idx = jnp.arange(U, dtype=jnp.int32)
     onehot = slots[:, None] == jnp.arange(Q, dtype=jnp.int32)[None, :]  # (U, Q)
@@ -578,7 +596,7 @@ def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
     return JaxQueueState(
         cluster=cl, worker=wk, seq=sq, gen_time=gt, reward=rw, agg_count=cnt,
         replaceable=rp, payload=new_payload, next_seq=nseq,
-        n_dropped=nd, n_agg=na, n_repl=nr)
+        n_dropped=nd, n_agg=na, n_repl=nr, n_screened=ns)
 
 
 def expire_inactive_drains(out: Dict[str, jnp.ndarray], active_workers
@@ -597,7 +615,7 @@ def expire_inactive_drains(out: Dict[str, jnp.ndarray], active_workers
 
 def jax_olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
                  payloads, k: int, reward_threshold: float = jnp.inf,
-                 send=None, capacity=None, active_workers=None
+                 send=None, capacity=None, active_workers=None, screen=None
                  ) -> Tuple[JaxQueueState, Dict[str, jnp.ndarray]]:
     """One full data-plane cycle: burst enqueue then drain-k, in one trace.
 
@@ -610,14 +628,60 @@ def jax_olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
     logical slot count below the padded buffer size (heterogeneous
     per-switch slot vectors, see :func:`jax_enqueue`). ``active_workers``
     (bool (W,)) expires drained rows of crashed workers — see
-    :func:`expire_inactive_drains`.
+    :func:`expire_inactive_drains`. ``screen`` (bool (U,), True = screened
+    out) rejects corrupt burst rows at the ingress before they can combine
+    — see :func:`jax_screen_mask` and ``_burst_resolve``.
     """
     state = jax_enqueue_burst(state, clusters, workers, gen_times, rewards,
-                              payloads, reward_threshold, send, capacity)
+                              payloads, reward_threshold, send, capacity,
+                              screen)
     state, out = jax_dequeue_burst(state, k)
     if active_workers is not None:
         out = expire_inactive_drains(out, active_workers)
     return state, out
+
+
+def jax_screen_mask(payloads, med, *, factor: float = 16.0, mask=None):
+    """Device-resident ingress screen for one burst of payload rows.
+
+    Per row: reject (``True``) when any coordinate is non-finite, or when
+    the row's L2 norm exceeds ``factor ×`` a running robust scale estimate
+    of the admitted traffic. The estimate ``med`` (a float32 scalar; start
+    at 0.0) is a clipped exponential estimator of the admitted-row norm —
+    each admitted row moves it at most ±10%, so a burst of exploding rows
+    cannot drag the gate open, and screened rows never update it. A
+    ``lax.scan`` over the burst keeps the decision order sequential (row
+    ``u`` is judged against the estimate *after* rows ``< u``), matching
+    how a switch pipeline would see the traffic.
+
+    ``mask`` (bool (U,), default all-True) limits screening to real
+    burst rows: a masked-out row (padding, or a transmission-control
+    deferral) is never screened and never moves the scale estimate.
+
+    Returns ``(screen (U,) bool, new_med)``.
+    """
+    payloads = jnp.asarray(payloads, jnp.float32)
+    norms = jnp.sqrt(jnp.sum(
+        jnp.where(jnp.isfinite(payloads), payloads, 0.0) ** 2, axis=-1))
+    finite = jnp.all(jnp.isfinite(payloads), axis=-1)
+    if mask is None:
+        mask = jnp.ones(norms.shape, bool)
+
+    def body(m, xs):
+        n, fin, act = xs
+        big = (m > 0.0) & (n > factor * m)
+        scr = act & (~fin | big)
+        # admitted rows nudge the scale estimate by at most +-10%; the
+        # first admitted row initializes it
+        m_new = jnp.where(m == 0.0, n,
+                          m + jnp.clip(n - m, -0.1 * m, 0.1 * m))
+        m = jnp.where(act & ~scr, m_new, m)
+        return m, scr
+
+    med, screen = jax.lax.scan(
+        body, jnp.asarray(med, jnp.float32),
+        (norms, finite, jnp.asarray(mask, bool)))
+    return screen, med
 
 
 # ---------------------------------------------------------------------------

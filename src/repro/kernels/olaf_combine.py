@@ -159,7 +159,7 @@ _EV_RESET = 2
 
 
 def alg1_resolve(cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
-                 thr, U, read_update, qidx, uidx, cap=None):
+                 ns0, thr, U, read_update, qidx, uidx, cap=None):
     """In-kernel Algorithm 1 scalar resolve over a U-update burst.
 
     The same sequential walk as ``olaf_queue._burst_resolve``, written to
@@ -169,12 +169,16 @@ def alg1_resolve(cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
     ``olaf_step`` kernels (``repro.kernels.olaf_step``), which differ only
     in where the burst scalars come from and what runs after the resolve.
 
-    ``read_update(u) -> (cluster, worker, gen_time, reward, send)`` reads
-    one update's scalars (typically from SMEM scalar-prefetch refs);
+    ``read_update(u) -> (cluster, worker, gen_time, reward, send, screen)``
+    reads one update's scalars (typically from SMEM scalar-prefetch refs);
     ``send`` is the transmission-control gate — a masked-out update is
     deferred: no queue writes, no counter changes, event ``_EV_DROP``.
+    ``screen`` is the ingress payload-integrity gate (§ payload hardening):
+    a sent-but-screened update is withheld exactly like a deferred one,
+    except it bumps the ``n_screened`` counter so the trainer can see the
+    rejected fraction.
 
-    Returns ``(cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, slots_v,
+    Returns ``(cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns, slots_v,
     events_v, contributes, last_reset)``: the post-burst metadata columns
     and counters, the per-update slot/event assignment, and the
     telescoped-mean bookkeeping consumed by the payload pass.
@@ -188,9 +192,10 @@ def alg1_resolve(cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
     valid_slot = qidx < (Q if cap is None else cap)
 
     def body(u, carry):
-        (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+        (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns,
          slots_v, events_v) = carry
-        c, w, t, r, snd = read_update(u)
+        c, w, t, r, snd, scr = read_update(u)
+        act = snd & ~scr  # screened sends are withheld before the queue
         occupied = cl >= 0
         same = occupied & (cl == c)
         hit = jnp.any(same)
@@ -203,14 +208,14 @@ def alg1_resolve(cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
         w_reward = jnp.sum(jnp.where(same, rw, 0.0))
         w_gt = jnp.sum(jnp.where(same, gt, 0.0))
 
-        swr = snd & hit & w_repl & (w_worker == w)
+        swr = act & hit & w_repl & (w_worker == w)
         rdiff = r - w_reward
-        do_rr = snd & hit & ~swr & (rdiff > thr)
-        do_rd = snd & hit & ~swr & (rdiff < -thr)
-        do_agg = snd & hit & ~swr & ~do_rr & ~do_rd
+        do_rr = act & hit & ~swr & (rdiff > thr)
+        do_rd = act & hit & ~swr & (rdiff < -thr)
+        do_agg = act & hit & ~swr & ~do_rr & ~do_rd
         full = jnp.all(occupied | ~valid_slot)
-        do_append = snd & ~hit & ~full
-        do_dropf = snd & ~hit & full
+        do_append = act & ~hit & ~full
+        do_dropf = act & ~hit & full
 
         # min-index in place of argmax (lowers without gather support)
         slot_hit = jnp.min(jnp.where(same, qidx, Q))
@@ -236,13 +241,14 @@ def alg1_resolve(cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
             nd + (do_dropf | do_rd).astype(jnp.int32),
             na + do_agg.astype(jnp.int32),
             nr + (swr | do_rr).astype(jnp.int32),
+            ns + (snd & scr).astype(jnp.int32),
             jnp.where(uidx == u, slot, slots_v),
             jnp.where(uidx == u, event.astype(jnp.int32), events_v),
         )
 
-    carry0 = (cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
+    carry0 = (cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0, ns0,
               jnp.zeros((U,), jnp.int32), jnp.zeros((U,), jnp.int32))
-    (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+    (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns,
      slots_v, events_v) = jax.lax.fori_loop(0, U, body, carry0)
 
     # telescoped-mean bookkeeping: which updates survive into the slot
@@ -255,7 +261,7 @@ def alg1_resolve(cl0, wk0, sq0, gt0, rw0, cnt0, rp0, nseq0, nd0, na0, nr0,
     lr_u = jnp.sum(jnp.where(onehot_uq, last_reset[None, :], 0), axis=1)
     contributes = ((is_agg & (uidx > lr_u))
                    | (is_reset & (uidx == lr_u)))
-    return (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+    return (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns,
             slots_v, events_v, contributes, last_reset)
 
 
@@ -268,13 +274,15 @@ def _enqueue_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
     Scalar-prefetch SMEM operands:
       qi_ref: (5, Q) int32 — queue [cluster, worker, seq, agg_count, replaceable]
       qf_ref: (2, Q) f32   — queue [gen_time, reward]
-      qc_ref: (1, 5) int32 — [next_seq, n_dropped, n_agg, n_repl, capacity]
-                 (capacity = the logical slot count; Q when not capped)
-      ui_ref: (2, U) int32 — burst [clusters, workers]
+      qc_ref: (1, 6) int32 — [next_seq, n_dropped, n_agg, n_repl, capacity,
+                 n_screened] (capacity = the logical slot count; Q when not
+                 capped)
+      ui_ref: (3, U) int32 — burst [clusters, workers, screen]
       uf_ref: (3, U) f32   — burst [gen_times, rewards, reward_threshold row]
     VMEM tiles: updates (U, Dt), slotpay (Qt, Dt).
-    Outputs: new payload tile (Qt, Dt); meta_i (9, Q) int32 (rows 0-4 the qi
-    columns, rows 5-8 the counters broadcast across Q); meta_f (2, Q) f32.
+    Outputs: new payload tile (Qt, Dt); meta_i (10, Q) int32 (rows 0-4 the
+    qi columns, rows 5-9 the counters broadcast across Q); meta_f (2, Q)
+    f32.
     SMEM scratch: per-update slot / contributes (1, U) and per-slot
     last-reset index (1, Q), written once at the first grid step and reused
     by every later (j, i) step — TPU grid steps run sequentially on one
@@ -297,13 +305,14 @@ def _enqueue_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
     def _resolve():
         def read_update(u):
             return (ui_ref[0, u], ui_ref[1, u], uf_ref[0, u], uf_ref[1, u],
-                    jnp.bool_(True))
+                    jnp.bool_(True), ui_ref[2, u] != 0)
 
-        (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+        (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns,
          slots_v, events_v, contributes, last_reset) = alg1_resolve(
             qi_ref[0, :], qi_ref[1, :], qi_ref[2, :], qf_ref[0, :],
             qf_ref[1, :], qi_ref[3, :], qi_ref[4, :],
             qc_ref[0, 0], qc_ref[0, 1], qc_ref[0, 2], qc_ref[0, 3],
+            qc_ref[0, 5],
             uf_ref[2, 0], U, read_update, qidx, uidx, cap=qc_ref[0, 4])
 
         slots_scr[0, :] = slots_v
@@ -319,6 +328,7 @@ def _enqueue_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
         meta_i_ref[6, :] = jnp.zeros((Q,), jnp.int32) + nd
         meta_i_ref[7, :] = jnp.zeros((Q,), jnp.int32) + na
         meta_i_ref[8, :] = jnp.zeros((Q,), jnp.int32) + nr
+        meta_i_ref[9, :] = jnp.zeros((Q,), jnp.int32) + ns
         meta_f_ref[0, :] = gt
         meta_f_ref[1, :] = rw
 
@@ -347,15 +357,15 @@ def olaf_enqueue_pallas(cluster, worker, seq, gen_time, reward, agg_count,
                         replaceable, next_seq, n_dropped, n_agg, n_repl,
                         payload, clusters, workers, gen_times, rewards,
                         payloads, reward_threshold=float("inf"),
-                        capacity=None, *,
+                        capacity=None, n_screened=0, screen=None, *,
                         tile_q: int = DEFAULT_TILE_Q,
                         tile_d: int = DEFAULT_TILE_D,
                         interpret: bool = True):
     """Single-launch fused burst enqueue over raw queue-state arrays.
 
-    Returns ``(new_payload (Q, D), meta_i (9, Q) int32, meta_f (2, Q) f32)``
-    — see :func:`_enqueue_kernel` for the packing. The JaxQueueState-typed
-    wrapper lives in ``repro.kernels.ops.olaf_enqueue``.
+    Returns ``(new_payload (Q, D), meta_i (10, Q) int32, meta_f (2, Q)
+    f32)`` — see :func:`_enqueue_kernel` for the packing. The
+    JaxQueueState-typed wrapper lives in ``repro.kernels.ops.olaf_enqueue``.
     """
     if pltpu is None:
         raise ImportError("olaf_enqueue needs jax.experimental.pallas.tpu "
@@ -368,13 +378,17 @@ def olaf_enqueue_pallas(cluster, worker, seq, gen_time, reward, agg_count,
     i32, f32 = jnp.int32, jnp.float32
     if capacity is None:
         capacity = Q
+    if screen is None:
+        screen = jnp.zeros((U,), i32)
     qi = jnp.stack([cluster.astype(i32), worker.astype(i32), seq.astype(i32),
                     agg_count.astype(i32), replaceable.astype(i32)])
     qf = jnp.stack([gen_time.astype(f32), reward.astype(f32)])
     qc = jnp.stack([jnp.asarray(next_seq, i32), jnp.asarray(n_dropped, i32),
                     jnp.asarray(n_agg, i32), jnp.asarray(n_repl, i32),
-                    jnp.asarray(capacity, i32)])[None]
-    ui = jnp.stack([clusters.astype(i32), workers.astype(i32)])
+                    jnp.asarray(capacity, i32),
+                    jnp.asarray(n_screened, i32)])[None]
+    ui = jnp.stack([clusters.astype(i32), workers.astype(i32),
+                    screen.astype(i32)])
     uf = jnp.stack([gen_times.astype(f32), rewards.astype(f32),
                     jnp.full((U,), reward_threshold, f32)])
 
@@ -391,7 +405,7 @@ def olaf_enqueue_pallas(cluster, worker, seq, gen_time, reward, agg_count,
             ],
             out_specs=[
                 pl.BlockSpec((tile_q, tile_d), lambda j, i, *prefetch: (i, j)),
-                pl.BlockSpec((9, Q), lambda j, i, *prefetch: (0, 0)),
+                pl.BlockSpec((10, Q), lambda j, i, *prefetch: (0, 0)),
                 pl.BlockSpec((2, Q), lambda j, i, *prefetch: (0, 0)),
             ],
             scratch_shapes=[
@@ -402,7 +416,7 @@ def olaf_enqueue_pallas(cluster, worker, seq, gen_time, reward, agg_count,
         ),
         out_shape=[
             jax.ShapeDtypeStruct((Q, D), payload.dtype),
-            jax.ShapeDtypeStruct((9, Q), jnp.int32),
+            jax.ShapeDtypeStruct((10, Q), jnp.int32),
             jax.ShapeDtypeStruct((2, Q), jnp.float32),
         ],
         interpret=interpret,

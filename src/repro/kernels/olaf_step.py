@@ -64,18 +64,18 @@ def _olaf_step_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
     Scalar-prefetch SMEM operands (leading S axis on all of them):
       qi_ref: (S, 5, Q) int32 — [cluster, worker, seq, agg_count, replaceable]
       qf_ref: (S, 2, Q) f32   — [gen_time, reward]
-      qc_ref: (S, 1, 5) int32 — [next_seq, n_dropped, n_agg, n_repl,
-                 capacity] (capacity = the per-switch logical slot count —
-                 heterogeneous ``TopologySpec.queue_slots`` ride in one
-                 padded (S, Qmax) launch; Q when not capped)
-      ui_ref: (S, 3, U) int32 — burst [clusters, workers, send]
+      qc_ref: (S, 1, 6) int32 — [next_seq, n_dropped, n_agg, n_repl,
+                 capacity, n_screened] (capacity = the per-switch logical
+                 slot count — heterogeneous ``TopologySpec.queue_slots``
+                 ride in one padded (S, Qmax) launch; Q when not capped)
+      ui_ref: (S, 4, U) int32 — burst [clusters, workers, send, screen]
       uf_ref: (S, 3, U) f32   — burst [gen_times, rewards, threshold row]
     VMEM tiles: updates (1, U, Dt), slotpay (1, Qt, Dt).
     Outputs:
       out_ref     (1, Qt, Dt) — post-enqueue, post-drain slot payload tile
       drained_ref (1, K, Dt)  — drained rows, accumulated across Q-tiles
-      meta_i_ref  (1, 9, Q)   — post-drain metadata (rows 0-4) + counters
-                                broadcast across Q (rows 5-8)
+      meta_i_ref  (1, 10, Q)  — post-drain metadata (rows 0-4) + counters
+                                broadcast across Q (rows 5-9)
       meta_f_ref  (1, 2, Q)   — post-drain [gen_time, reward]
       drain_i_ref (1, 4, K)   — per drained row [cluster, worker,
                                 agg_count, valid], read pre-clear
@@ -95,15 +95,16 @@ def _olaf_step_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
         # ---- 1. burst-enqueue scalar resolve (Algorithm 1) --------------
         def read_update(u):
             return (ui_ref[s, 0, u], ui_ref[s, 1, u], uf_ref[s, 0, u],
-                    uf_ref[s, 1, u], ui_ref[s, 2, u] != 0)
+                    uf_ref[s, 1, u], ui_ref[s, 2, u] != 0,
+                    ui_ref[s, 3, u] != 0)
 
-        (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr,
+        (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns,
          slots_v, events_v, contributes, last_reset) = alg1_resolve(
             qi_ref[s, 0, :], qi_ref[s, 1, :], qi_ref[s, 2, :],
             qf_ref[s, 0, :], qf_ref[s, 1, :], qi_ref[s, 3, :],
             qi_ref[s, 4, :],
             qc_ref[s, 0, 0], qc_ref[s, 0, 1], qc_ref[s, 0, 2],
-            qc_ref[s, 0, 3],
+            qc_ref[s, 0, 3], qc_ref[s, 0, 5],
             uf_ref[s, 2, 0], U, read_update, qidx, uidx,
             cap=qc_ref[s, 0, 4])
 
@@ -162,6 +163,7 @@ def _olaf_step_kernel(qi_ref, qf_ref, qc_ref, ui_ref, uf_ref,
         meta_i_ref[0, 6, :] = jnp.zeros((Q,), jnp.int32) + nd
         meta_i_ref[0, 7, :] = jnp.zeros((Q,), jnp.int32) + na
         meta_i_ref[0, 8, :] = jnp.zeros((Q,), jnp.int32) + nr
+        meta_i_ref[0, 9, :] = jnp.zeros((Q,), jnp.int32) + ns
         meta_f_ref[0, 0, :] = gt
         meta_f_ref[0, 1, :] = jnp.where(popped, _NEG_INF, rw)
 
@@ -214,14 +216,15 @@ def olaf_step_pallas(cluster, worker, seq, gen_time, reward, agg_count,
                      replaceable, next_seq, n_dropped, n_agg, n_repl,
                      payload, clusters, workers, gen_times, rewards,
                      payloads, k: int, reward_threshold=float("inf"),
-                     send=None, capacity=None, *, tile_q: int = 8,
-                     tile_d: int = 512, interpret: bool = True):
+                     send=None, capacity=None, n_screened=0, screen=None,
+                     *, tile_q: int = 8, tile_d: int = 512,
+                     interpret: bool = True):
     """Single-launch fused enqueue→drain cycle over raw queue-state arrays.
 
     Rank-2 ``payload (Q, D)`` runs one queue; a leading S axis on every
     operand (``payload (S, Q, D)``, scalars ``(S,)``) batches S independent
     queues in one launch with the switch axis folded into the Pallas grid.
-    Returns ``(new_payload, drained_payload (…, K, D), meta_i (…, 9, Q),
+    Returns ``(new_payload, drained_payload (…, K, D), meta_i (…, 10, Q),
     meta_f (…, 2, Q), drain_i (…, 4, K), drain_f (…, 2, K))`` — see
     :func:`_olaf_step_kernel` for the packing. The JaxQueueState-typed
     wrapper lives in ``repro.kernels.ops.olaf_step``.
@@ -237,11 +240,13 @@ def olaf_step_pallas(cluster, worker, seq, gen_time, reward, agg_count,
             x[None] for x in (cluster, worker, seq, gen_time, reward,
                               agg_count, replaceable, payload, clusters,
                               workers, gen_times, rewards, payloads))
-        next_seq, n_dropped, n_agg, n_repl = (
+        next_seq, n_dropped, n_agg, n_repl, n_screened = (
             jnp.asarray(x)[None] for x in (next_seq, n_dropped, n_agg,
-                                           n_repl))
+                                           n_repl, n_screened))
         if send is not None:
             send = send[None]
+        if screen is not None:
+            screen = screen[None]
     S, Q, D = payload.shape
     U = clusters.shape[1]
     k = min(int(k), Q)
@@ -250,16 +255,19 @@ def olaf_step_pallas(cluster, worker, seq, gen_time, reward, agg_count,
     i32, f32 = jnp.int32, jnp.float32
     if send is None:
         send = jnp.ones((S, U), i32)
+    if screen is None:
+        screen = jnp.zeros((S, U), i32)
     cap = jnp.broadcast_to(
         jnp.asarray(Q if capacity is None else capacity, i32), (S,))
+    nscr = jnp.broadcast_to(jnp.asarray(n_screened, i32), (S,))
     qi = jnp.stack([cluster.astype(i32), worker.astype(i32), seq.astype(i32),
                     agg_count.astype(i32), replaceable.astype(i32)], axis=1)
     qf = jnp.stack([gen_time.astype(f32), reward.astype(f32)], axis=1)
     qc = jnp.stack([jnp.asarray(next_seq, i32), jnp.asarray(n_dropped, i32),
-                    jnp.asarray(n_agg, i32), jnp.asarray(n_repl, i32), cap],
-                   axis=1)[:, None, :]
+                    jnp.asarray(n_agg, i32), jnp.asarray(n_repl, i32), cap,
+                    nscr], axis=1)[:, None, :]
     ui = jnp.stack([clusters.astype(i32), workers.astype(i32),
-                    send.astype(i32)], axis=1)
+                    send.astype(i32), screen.astype(i32)], axis=1)
     uf = jnp.stack([gen_times.astype(f32), rewards.astype(f32),
                     jnp.full((S, U), reward_threshold, f32)], axis=1)
 
@@ -279,7 +287,7 @@ def olaf_step_pallas(cluster, worker, seq, gen_time, reward, agg_count,
                 pl.BlockSpec((1, tile_q, tile_d),
                              lambda s, j, i, *p: (s, i, j)),
                 pl.BlockSpec((1, k, tile_d), lambda s, j, i, *p: (s, 0, j)),
-                pl.BlockSpec((1, 9, Q), lambda s, j, i, *p: (s, 0, 0)),
+                pl.BlockSpec((1, 10, Q), lambda s, j, i, *p: (s, 0, 0)),
                 pl.BlockSpec((1, 2, Q), lambda s, j, i, *p: (s, 0, 0)),
                 pl.BlockSpec((1, 4, k), lambda s, j, i, *p: (s, 0, 0)),
                 pl.BlockSpec((1, 2, k), lambda s, j, i, *p: (s, 0, 0)),
@@ -295,7 +303,7 @@ def olaf_step_pallas(cluster, worker, seq, gen_time, reward, agg_count,
         out_shape=[
             jax.ShapeDtypeStruct((S, Q, D), payload.dtype),
             jax.ShapeDtypeStruct((S, k, D), payload.dtype),
-            jax.ShapeDtypeStruct((S, 9, Q), jnp.int32),
+            jax.ShapeDtypeStruct((S, 10, Q), jnp.int32),
             jax.ShapeDtypeStruct((S, 2, Q), jnp.float32),
             jax.ShapeDtypeStruct((S, 4, k), jnp.int32),
             jax.ShapeDtypeStruct((S, 2, k), jnp.float32),

@@ -126,8 +126,8 @@ def olaf_forward(slots, counts, updates, clusters, gate, reset_slots,
 
 @functools.partial(jax.jit, static_argnames=("tile_q", "tile_d", "interpret"))
 def olaf_enqueue(state: JaxQueueState, clusters, workers, gen_times, rewards,
-                 payloads, reward_threshold=jnp.inf, capacity=None, *,
-                 tile_q: int = 8, tile_d: int = 512,
+                 payloads, reward_threshold=jnp.inf, capacity=None,
+                 screen=None, *, tile_q: int = 8, tile_d: int = 512,
                  interpret: bool = _INTERPRET) -> JaxQueueState:
     """Fused single-launch burst enqueue (Algorithm 1 for U updates).
 
@@ -136,19 +136,21 @@ def olaf_enqueue(state: JaxQueueState, clusters, workers, gen_times, rewards,
     inside the kernel from SMEM scalar-prefetch operands and the payload
     telescoped-mean runs on the MXU over the same (Q-tile × D-tile) grid as
     ``olaf_combine`` — one kernel launch for the whole burst instead of a
-    scan + einsum + blend pipeline.
+    scan + einsum + blend pipeline. ``screen`` optionally withholds rows
+    flagged by the ingress integrity gate (``jax_screen_mask``).
     """
     new_payload, mi, mf = olaf_enqueue_pallas(
         state.cluster, state.worker, state.seq, state.gen_time, state.reward,
         state.agg_count, state.replaceable, state.next_seq, state.n_dropped,
         state.n_agg, state.n_repl, state.payload,
         clusters, workers, gen_times, rewards, payloads, reward_threshold,
-        capacity, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+        capacity, state.n_screened, screen, tile_q=tile_q, tile_d=tile_d,
+        interpret=interpret)
     return JaxQueueState(
         cluster=mi[0], worker=mi[1], seq=mi[2], gen_time=mf[0], reward=mf[1],
         agg_count=mi[3], replaceable=mi[4].astype(bool), payload=new_payload,
         next_seq=mi[5, 0], n_dropped=mi[6, 0], n_agg=mi[7, 0],
-        n_repl=mi[8, 0])
+        n_repl=mi[8, 0], n_screened=mi[9, 0])
 
 
 def _olaf_step_unpack(new_payload, drained, mi, mf, di, df):
@@ -158,7 +160,7 @@ def _olaf_step_unpack(new_payload, drained, mi, mf, di, df):
     (leading S axis) layouts; ``mi``/``mf``/``di``/``df`` carry the packing
     documented in :func:`repro.kernels.olaf_step._olaf_step_kernel`.
     """
-    lead = mi.ndim == 3  # (S, 9, Q) vs (9, Q)
+    lead = mi.ndim == 3  # (S, 10, Q) vs (10, Q)
     row = (lambda a, r: a[:, r]) if lead else (lambda a, r: a[r])
     ctr = (lambda a, r: a[:, r, 0]) if lead else (lambda a, r: a[r, 0])
     valid = row(di, 3).astype(bool)
@@ -167,7 +169,7 @@ def _olaf_step_unpack(new_payload, drained, mi, mf, di, df):
         gen_time=row(mf, 0), reward=row(mf, 1), agg_count=row(mi, 3),
         replaceable=row(mi, 4).astype(bool),
         payload=new_payload, next_seq=ctr(mi, 5), n_dropped=ctr(mi, 6),
-        n_agg=ctr(mi, 7), n_repl=ctr(mi, 8))
+        n_agg=ctr(mi, 7), n_repl=ctr(mi, 8), n_screened=ctr(mi, 9))
     out = dict(valid=valid, n_valid=valid.sum(axis=-1),
                cluster=row(di, 0), worker=row(di, 1),
                gen_time=row(df, 0), reward=row(df, 1),
@@ -179,7 +181,7 @@ def _olaf_step_unpack(new_payload, drained, mi, mf, di, df):
     "k", "tile_q", "tile_d", "interpret", "impl"), donate_argnums=0)
 def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
               payloads, reward_threshold=jnp.inf, send=None, capacity=None,
-              active_workers=None, *, k: int, tile_q: int = 8,
+              active_workers=None, screen=None, *, k: int, tile_q: int = 8,
               tile_d: int = 512, interpret: bool = _INTERPRET,
               impl: str = "auto"):
     """Fused full-cycle data-plane step: burst enqueue → drain-k, one launch.
@@ -204,6 +206,10 @@ def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
     (node-churn gating). Applied as a post-drain mask on both execution
     paths, keeping the Pallas kernel body unchanged; see
     :func:`repro.core.olaf_queue.expire_inactive_drains`.
+
+    ``screen`` (bool (U,)) is the ingress payload-integrity gate: flagged
+    rows are withheld before the queue exactly like transmission-control
+    deferrals, except they bump the state's ``n_screened`` counter.
     """
     if impl == "auto":
         # an empty burst (drain-only final flush) has no (U, Dt) tile to
@@ -212,13 +218,14 @@ def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
     if impl == "xla":
         return jax_olaf_step(state, clusters, workers, gen_times, rewards,
                              payloads, k, reward_threshold, send, capacity,
-                             active_workers)
+                             active_workers, screen)
     outs = olaf_step_pallas(
         state.cluster, state.worker, state.seq, state.gen_time, state.reward,
         state.agg_count, state.replaceable, state.next_seq, state.n_dropped,
         state.n_agg, state.n_repl, state.payload,
         clusters, workers, gen_times, rewards, payloads, k, reward_threshold,
-        send, capacity, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+        send, capacity, state.n_screened, screen, tile_q=tile_q,
+        tile_d=tile_d, interpret=interpret)
     state, out = _olaf_step_unpack(*outs)
     if active_workers is not None:
         out = expire_inactive_drains(out, active_workers)
@@ -229,7 +236,7 @@ def olaf_step(state: JaxQueueState, clusters, workers, gen_times, rewards,
     "k", "tile_q", "tile_d", "interpret", "impl"), donate_argnums=0)
 def olaf_step_multi(states: JaxQueueState, clusters, workers, gen_times,
                     rewards, payloads, reward_threshold=jnp.inf, send=None,
-                    capacity=None, *, k: int, tile_q: int = 8,
+                    capacity=None, screen=None, *, k: int, tile_q: int = 8,
                     tile_d: int = 512, interpret: bool = _INTERPRET,
                     impl: str = "auto"):
     """Multi-queue fused cycle: every operand carries a leading S axis.
@@ -246,22 +253,25 @@ def olaf_step_multi(states: JaxQueueState, clusters, workers, gen_times,
     if impl == "xla":
         if send is None:
             send = jnp.ones(clusters.shape, bool)
+        if screen is None:
+            screen = jnp.zeros(clusters.shape, bool)
         thr = jnp.broadcast_to(jnp.asarray(reward_threshold, jnp.float32),
                                (clusters.shape[0],))
         cap = jnp.broadcast_to(
             jnp.asarray(states.cluster.shape[1] if capacity is None
                         else capacity, jnp.int32), (clusters.shape[0],))
         return jax.vmap(
-            lambda st, c, w, t, r, p, th, sn, cp: jax_olaf_step(
-                st, c, w, t, r, p, k, th, sn, cp)
+            lambda st, c, w, t, r, p, th, sn, cp, scr: jax_olaf_step(
+                st, c, w, t, r, p, k, th, sn, cp, None, scr)
         )(states, clusters, workers, gen_times, rewards, payloads, thr, send,
-          cap)
+          cap, screen)
     outs = olaf_step_pallas(
         states.cluster, states.worker, states.seq, states.gen_time,
         states.reward, states.agg_count, states.replaceable, states.next_seq,
         states.n_dropped, states.n_agg, states.n_repl, states.payload,
         clusters, workers, gen_times, rewards, payloads, k, reward_threshold,
-        send, capacity, tile_q=tile_q, tile_d=tile_d, interpret=interpret)
+        send, capacity, states.n_screened, screen, tile_q=tile_q,
+        tile_d=tile_d, interpret=interpret)
     return _olaf_step_unpack(*outs)
 
 

@@ -87,9 +87,10 @@ def run_olaf_async(cfg, args) -> float:
     syncs. Only buffered scalar logs cross the host boundary, in batches
     of ``log_every``.
     """
+    from repro.core.aggregation import jax_trimmed_combine
     from repro.core.aom import (jax_aom_average, jax_aom_init,
                                 jax_aom_update_block, jax_staleness_mask)
-    from repro.core.olaf_queue import jax_queue_init
+    from repro.core.olaf_queue import jax_queue_init, jax_screen_mask
     from repro.core.txctl import (TxControlConfig, jax_txctl_ack,
                                   jax_txctl_gate, jax_txctl_init,
                                   jax_txctl_set_active)
@@ -119,6 +120,13 @@ def run_olaf_async(cfg, args) -> float:
     churn = bool(crash_set) and crash_at >= 0
     # hard PS staleness bound (virtual time); 0 disables admission control
     stale_bound = getattr(args, "staleness_bound", 0.0) or None
+    # payload-integrity hardening: the device ingress screen (non-finite /
+    # norm-outlier rows withheld before the queue) plus the winsorized
+    # robust combine the PS falls back to when the screened fraction of a
+    # burst exceeds --robust-threshold
+    screen_on = bool(getattr(args, "ingress_screen", False))
+    screen_factor = getattr(args, "screen_factor", 16.0)
+    robust_threshold = getattr(args, "robust_threshold", 0.25)
 
     shards = [SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                      global_batch=args.batch,
@@ -155,7 +163,7 @@ def run_olaf_async(cfg, args) -> float:
     q_max = float(capacity)
     active_window = 1.0  # netsim's active-cluster sliding window (virtual)
 
-    def ps_step(queue, params, opt_state, tx, aom, last_seen, key, now,
+    def ps_step(queue, params, opt_state, tx, aom, last_seen, key, med, now,
                 clusters, workers, times, rewards, payloads, losses, active):
         """txctl_gate → olaf_step → weighted apply, all device-resident.
 
@@ -171,11 +179,21 @@ def run_olaf_async(cfg, args) -> float:
         key, sub = jax.random.split(key)
         send, _ = jax_txctl_gate(tx, sub, now, tx_cfg.delta_threshold,
                                  tx_cfg.v, worker_ids=workers)
+        if screen_on:
+            # device ingress screen: non-finite rows and norm outliers vs
+            # the running robust scale estimate are withheld before the
+            # queue (deferred rows neither screen nor move the estimate)
+            screen, med = jax_screen_mask(payloads, med,
+                                          factor=screen_factor, mask=send)
+            n_screen = (send & screen).sum()
+        else:
+            screen = None
+            n_screen = jnp.int32(0)
         # each popped payload is the mean of agg_count raw gradients; the
         # applied gradient is their exact weighted mean
         queue, out = ops.olaf_step(queue, clusters, workers, times, rewards,
                                    payloads, jnp.inf, send, None, active,
-                                   k=drain_k, impl=step_impl)
+                                   screen, k=drain_k, impl=step_impl)
         if stale_bound is not None:
             # hard staleness bound at the PS: drained rows whose update age
             # exceeds the bound are rejected before the apply
@@ -186,8 +204,19 @@ def run_olaf_async(cfg, args) -> float:
         else:
             n_stale = jnp.int32(0)
         wts = out["valid"] * out["agg_count"].astype(jnp.float32)
-        g_flat = jnp.einsum("k,kd->d", wts, out["payload"]) \
+        g_mean = jnp.einsum("k,kd->d", wts, out["payload"]) \
             / jnp.maximum(wts.sum(), 1.0)
+        if screen_on:
+            # robust fallback: when the screen flags more than
+            # --robust-threshold of this burst, distrust the drained block
+            # too and apply the winsorized combine instead of the plain mean
+            frac = n_screen.astype(jnp.float32) \
+                / jnp.maximum(send.sum().astype(jnp.float32), 1.0)
+            g_flat = jnp.where(frac > robust_threshold,
+                               jax_trimmed_combine(out["payload"], wts),
+                               g_mean)
+        else:
+            g_flat = g_mean
         g = unflatten_like(g_flat, params)
         params, opt_state = apply_updates(params, g, opt_state, opt)
         # device AoM accumulator: drained rows delivered at virtual `now`
@@ -208,8 +237,9 @@ def run_olaf_async(cfg, args) -> float:
         stats = dict(loss=jnp.mean(losses), applied=out["n_valid"],
                      combined=wts.sum(), agg_total=queue.n_agg,
                      deferred=(~send).sum(), stale=n_stale,
+                     screened=n_screen,
                      occupancy=(queue.cluster >= 0).sum())
-        return queue, params, opt_state, tx, aom, last_seen, key, stats
+        return queue, params, opt_state, tx, aom, last_seen, key, med, stats
 
     # donated buffers: the O(Q·D) queue payload, the params/opt trees and
     # the feedback states are updated in place instead of copied every step
@@ -228,6 +258,7 @@ def run_olaf_async(cfg, args) -> float:
     active_np = np.ones(args.workers, bool)
     aom = jax_aom_init()
     last_seen = jnp.full((n_clusters,), -jnp.inf, jnp.float32)
+    med = jnp.zeros((), jnp.float32)  # screen's running scale estimate
     step_key = jax.random.key(args.seed + 101)
 
     def snapshot_aux():
@@ -235,7 +266,7 @@ def run_olaf_async(cfg, args) -> float:
         # state, the PRNG key, and the float64 host scheduling counters
         # (restored exactly -> resume is bitwise)
         return dict(queue=queue, tx=tx, aom=aom, last_seen=last_seen,
-                    key=jax.random.key_data(step_key),
+                    med=med, key=jax.random.key_data(step_key),
                     worker_next=worker_next, worker_step=worker_step,
                     active=active_np)
 
@@ -247,7 +278,7 @@ def run_olaf_async(cfg, args) -> float:
             opt_like=jax.eval_shape(lambda: opt_state),
             aux_like=snapshot_aux())
         queue, tx, aom = aux["queue"], aux["tx"], aux["aom"]
-        last_seen = aux["last_seen"]
+        last_seen, med = aux["last_seen"], aux["med"]
         step_key = jax.random.wrap_key_data(aux["key"])
         worker_next, worker_step = aux["worker_next"], aux["worker_step"]
         active_np = aux["active"]
@@ -257,6 +288,7 @@ def run_olaf_async(cfg, args) -> float:
     log_rows = []  # host-side (step, loss, combined) after each flush
     deferred_total = [0]  # txctl-gated (deferred) burst rows
     stale_total = [0]  # PS-rejected rows past the staleness bound
+    screened_total = [0]  # ingress-screened (integrity-rejected) burst rows
     # logging disabled -> one flush at the end, never a mid-loop sync
     flush_every = args.log_every if args.log_every > 0 else max(args.steps, 1)
 
@@ -267,6 +299,7 @@ def run_olaf_async(cfg, args) -> float:
             log_rows.append((step, float(row["loss"]), int(row["combined"])))
             deferred_total[0] += int(row["deferred"])
             stale_total[0] += int(row["stale"])
+            screened_total[0] += int(row["screened"])
         del pending[:]
 
     t0 = time.time()
@@ -307,9 +340,9 @@ def run_olaf_async(cfg, args) -> float:
             burst_losses.append(loss)
             worker_step[w] += 1
             worker_next[w] += worker_speed[w]
-        queue, params, opt_state, tx, aom, last_seen, step_key, stats = \
-            ps_step(
-            queue, params, opt_state, tx, aom, last_seen, step_key,
+        (queue, params, opt_state, tx, aom, last_seen, step_key, med,
+         stats) = ps_step(
+            queue, params, opt_state, tx, aom, last_seen, step_key, med,
             jnp.float32(max(burst["t"])),
             jnp.asarray(burst["c"], jnp.int32),
             jnp.asarray(burst["w"], jnp.int32),
@@ -340,6 +373,7 @@ def run_olaf_async(cfg, args) -> float:
               f"queue aggregations {int(queue.n_agg)}; "
               f"txctl deferred {deferred_total[0]}; "
               f"stale rejected {stale_total[0]}; "
+              f"screened {screened_total[0]}; "
               f"avg AoM {avg_aom:.3f} (virtual); "
               f"{args.steps / max(wall, 1e-9):.2f} steps/s")
     return losses[-1] if losses else float("nan")
@@ -391,6 +425,17 @@ def main():
     ap.add_argument("--staleness-bound", type=float, default=0.0,
                     help="hard PS admission bound on update age in virtual "
                          "time (0: disabled)")
+    ap.add_argument("--ingress-screen", action="store_true",
+                    help="device ingress integrity screen: withhold "
+                         "non-finite / norm-outlier burst rows before the "
+                         "queue (olaf-async)")
+    ap.add_argument("--screen-factor", type=float, default=16.0,
+                    help="screen rejects rows with L2 norm above factor x "
+                         "the running robust scale estimate")
+    ap.add_argument("--robust-threshold", type=float, default=0.25,
+                    help="screened burst fraction above which the PS "
+                         "applies the winsorized (trimmed) combine instead "
+                         "of the plain weighted mean")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
     cfg = get_config(args.arch)

@@ -61,8 +61,16 @@ class ErrorFeedback:
 # int8 linear quantization
 # ---------------------------------------------------------------------------
 def int8_quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    # non-finite coordinates would make ``max(|g|)`` (and thus every
+    # quantized value) NaN — an undefined int8 cast; quantize the finite
+    # part and pin the rest to the clip bounds (NaN -> 0)
+    finite = jnp.isfinite(g)
+    g0 = jnp.where(finite, g, 0.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(g0)), 1e-12) / 127.0
+    pinned = jnp.where(jnp.isnan(g), 0.0,
+                       jnp.where(g > 0, 127.0, -127.0))
+    q_f = jnp.where(finite, jnp.round(g0 / scale), pinned)
+    q = jnp.clip(q_f, -127, 127).astype(jnp.int8)
     return q, scale
 
 

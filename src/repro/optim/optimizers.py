@@ -51,8 +51,15 @@ def apply_updates(params, grads, state: OptState, cfg: OptConfig
                   ) -> Tuple[Any, OptState]:
     if cfg.grad_clip > 0:
         gn = _global_norm(grads)
-        scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
-        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        # a non-finite global norm (corrupted / exploded gradient) would
+        # make ``scale`` NaN and wipe the whole parameter tree through the
+        # optimizer update — zero the gradient instead (a skipped step)
+        scale = jnp.where(jnp.isfinite(gn),
+                          jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9)),
+                          0.0)
+        grads = jax.tree.map(lambda g: jnp.where(
+            jnp.isfinite(g), g * scale.astype(g.dtype),
+            jnp.zeros_like(g)), grads)
     step = state.step + 1
     if cfg.kind == "adamw":
         b1, b2 = cfg.b1, cfg.b2

@@ -25,8 +25,8 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core.hybrid import run_hybrid_multihop
-from repro.core.netsim import (FaultSpec, LinkFault, NetworkSimulator,
-                               SwitchStall)
+from repro.core.netsim import (CorruptionFault, FaultSpec, LinkFault,
+                               NetworkSimulator, SwitchStall)
 from repro.core.topology import (SwitchSpec, TopologySpec, build_sim_cfg,
                                  fattree_spec)
 from repro.core.txctl import (TransmissionController, TxControlConfig,
@@ -195,6 +195,38 @@ def test_fattree_midrun_failure_zero_lost():
     assert res.unrecovered_drops == 0  # nothing was lost for good
     assert res.delivery_rate > 0.0
     # the decomposition: combine absorption and link loss add up
+    assert abs(res.loss_pct - res.link_loss_pct - res.absorbed_pct) < 1e-9
+
+
+def test_loss_decomposition_with_corruption_and_drops():
+    """SimResult loss accounting stays exact when corruption screening,
+    link drops, and ACK-timeout retransmission all fire in one run: a
+    screened send is absorbed (recoverable), not link loss, so
+    ``loss_pct == link_loss_pct + absorbed_pct`` holds by construction."""
+    spec = fattree_spec(4, spines=2, route_policy="adaptive")
+    faults = FaultSpec(
+        links=[LinkFault(switch="AGG1", drop_prob=0.2)],
+        corruption=[
+            CorruptionFault(worker=0, prob=0.5, mode="nan"),
+            CorruptionFault(prob=0.15, mode="scale", factor=1e3),
+        ], seed=21)
+    cfg = build_sim_cfg(
+        spec, clusters_per_ingress=1, workers_per_cluster=2,
+        gen_interval=0.02, horizon=0.3, faults=faults, seed=9,
+        tx_control=TxControlConfig(ack_timeout=0.02, max_retries=6))
+    res = NetworkSimulator(
+        dataclasses.replace(cfg, ingress_screen=True)).run()
+    # every fault class actually fired in this run
+    assert res.corrupted > 0
+    assert res.screened > 0
+    assert res.link_dropped > 0
+    assert res.retransmits > 0
+    assert res.received_at_ps > 0
+    # screening admits nothing detectable
+    assert res.tainted_delivered == 0
+    # retransmission covered the screened copies: delivery counting stays
+    # uid-deduplicated and the decomposition stays exact
+    assert res.delivery_rate <= 1.0
     assert abs(res.loss_pct - res.link_loss_pct - res.absorbed_pct) < 1e-9
 
 
