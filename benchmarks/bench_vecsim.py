@@ -1,0 +1,96 @@
+"""Vectorized device-resident simulator benchmarks (BENCH_vecsim.json).
+
+Two rows:
+
+  * ``vecsim_h2d`` — the §8.3 congested SW1/SW2/SW3 trace through the
+    windowed hybrid replay vs the vectorized consumer
+    (``run_hybrid_multihop(sim_impl="vectorized")``): the whole scenario
+    advances as one jitted ``lax.scan`` with a single staged payload
+    upload, so host→device transfers per delivered update collapse from
+    one block put per transmission window to a handful of staged arrays
+    for the entire run. The transfer ratio is structural (a property of
+    the trace, not the machine), so ``check_regression.py --floors``
+    gates it at ≥ 5×.
+  * ``vecsim_scan_rate`` — raw scan throughput: grid boundaries resolved
+    per second by the warm jitted runner on the same congested scenario
+    (informational; absolute, so not floor-gated).
+"""
+from __future__ import annotations
+
+import time
+
+
+def vecsim_replay_micro(dim: int = 512, reps: int = 3) -> dict:
+    """Windowed batch replay vs the one-dispatch vectorized scan on the
+    identical congested multihop trace."""
+    from repro.core.hybrid import run_hybrid_multihop
+    from repro.core.netsim import multihop_cfg
+
+    kw = dict(n_clusters_per_group=3, workers_per_cluster=6, horizon=0.3,
+              interval_s1=0.008, interval_s2=0.009, x1_gbps=0.4e-3,
+              x2_gbps=0.4e-3, sw3_gbps=0.6e-3, size_bits=8192,
+              sw12_slots=6, sw3_slots=6)
+
+    def run(sim_impl):
+        best, res = float("inf"), None
+        for _ in range(reps):
+            cfg = multihop_cfg("olaf", seed=7, **kw)
+            t0 = time.time()
+            res, _ = run_hybrid_multihop(dim, sim_cfg=cfg,
+                                         sim_impl=sim_impl)
+            best = min(best, time.time() - t0)
+        return best, res
+
+    win_s, win = run("window")  # warm-compiles the combine variants
+    vec_s, vec = run("vectorized")
+    n = max(len(vec.delivered), 1)
+    assert len(win.delivered) == len(vec.delivered)
+    return dict(
+        dim=dim, delivered=len(vec.delivered),
+        windowed_launches=win.launches, vectorized_launches=vec.launches,
+        windowed_s=win_s, vectorized_s=vec_s,
+        windowed_h2d=win.h2d_transfers, vectorized_h2d=vec.h2d_transfers,
+        windowed_h2d_per_delivery=win.h2d_transfers / n,
+        vectorized_h2d_per_delivery=vec.h2d_transfers / n,
+        wall_speedup=win_s / vec_s,
+        speedup=win.h2d_transfers / max(vec.h2d_transfers, 1))
+
+
+def vecsim_scan_rate(reps: int = 3) -> dict:
+    """Warm-runner scan throughput: boundaries resolved per second on the
+    congested multihop scenario (oracle-aligned exact grid)."""
+    from repro.core import vecsim
+    from repro.core.netsim import multihop_cfg
+
+    cfg = multihop_cfg("olaf", seed=7, n_clusters_per_group=3,
+                       workers_per_cluster=6, horizon=0.3,
+                       interval_s1=0.008, interval_s2=0.009,
+                       x1_gbps=0.4e-3, x2_gbps=0.4e-3, sw3_gbps=0.6e-3,
+                       size_bits=8192, sw12_slots=6, sw3_slots=6)
+    grid, _ = vecsim.oracle_event_times(cfg)
+    res = vecsim.run_vecsim(cfg, grid=grid)  # compile + correctness pass
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        res = vecsim.run_vecsim(cfg, grid=grid)
+        best = min(best, time.time() - t0)
+    return dict(n_steps=res.n_steps, delivered=len(res.sim.delivered_updates),
+                wall_s=best, steps_per_s=res.n_steps / best)
+
+
+def main(report):
+    hyb = vecsim_replay_micro()
+    report("vecsim_replay_d512", hyb["vectorized_s"] * 1e6,
+           f"windowed {hyb['windowed_s'] * 1e3:.0f}ms vs vectorized "
+           f"{hyb['vectorized_s'] * 1e3:.0f}ms "
+           f"({hyb['wall_speedup']:.2f}x wall); h2d/delivery "
+           f"{hyb['windowed_h2d_per_delivery']:.1f} -> "
+           f"{hyb['vectorized_h2d_per_delivery']:.3f} = "
+           f"{hyb['speedup']:.1f}x fewer transfers; launches "
+           f"{hyb['windowed_launches']} -> {hyb['vectorized_launches']}")
+    rate = vecsim_scan_rate()
+    report("vecsim_scan_rate", rate["wall_s"] * 1e6,
+           f"{rate['n_steps']} grid steps in {rate['wall_s'] * 1e3:.0f}ms "
+           f"= {rate['steps_per_s']:.0f} steps/s (warm runner, "
+           f"{rate['delivered']} delivered)")
+    return dict(vecsim_h2d=hyb, vecsim_scan_rate=rate)

@@ -60,6 +60,11 @@ SPEEDUP_FLOORS = {
     # per-row host path too).
     "step": {"olaf_step_cycle": 2.0, "hybrid_replay": 2.0,
              "topology_fattree": 2.0},
+    # ``vecsim_h2d`` is h2d transfers per delivered update, windowed
+    # replay vs the one-dispatch vectorized scan on the same congested
+    # trace — structural: the scan stages its arrays once, so the ratio
+    # only regresses if a per-window host round-trip sneaks back in.
+    "vecsim": {"vecsim_h2d": 5.0},
     # ``failure_aom_advantage`` is FIFO AoM / OLAF AoM on the SAME faulty
     # fat-tree run (mid-run spine outage + lossy edges) — structural, so
     # any inversion is a real fault-tolerance regression (recorded ~6.8x).

@@ -19,7 +19,8 @@ OUT_DIR = Path(__file__).resolve().parents[1] / "experiments"
 def main() -> None:
     from benchmarks import (bench_failures, bench_kernels, bench_multihop,
                             bench_queue, bench_roofline, bench_step,
-                            bench_train, bench_training, bench_verifier)
+                            bench_train, bench_training, bench_vecsim,
+                            bench_verifier)
     results = {}
     print("name,us_per_call,derived")
 
@@ -33,6 +34,7 @@ def main() -> None:
     modules = [
         ("queue", bench_queue), ("multihop", bench_multihop),
         ("train", bench_train), ("step", bench_step),
+        ("vecsim", bench_vecsim),
         ("training", bench_training),
         ("verifier", bench_verifier), ("kernels", bench_kernels),
         ("roofline", bench_roofline),

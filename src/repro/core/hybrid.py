@@ -82,11 +82,18 @@ import jax.numpy as jnp
 
 from repro.core.aggregation import Update
 from repro.core.netsim import NetworkSimulator, SimCfg, apply_corruption, \
-    multihop_cfg
-from repro.core.olaf_queue import PyOlafQueue, burst_contribution_mask
+    generation_schedule, multihop_cfg
+from repro.core.olaf_queue import EVENT_OF_CLASS, PyOlafQueue, \
+    burst_contribution_mask, _EV_AGG, _EV_DROP, _EV_RESET
 from repro.core.topology import TopologySpec, resolve_sim_cfg, \
     spec_from_switch_cfgs
 from repro.kernels.olaf_combine import _pick_tile_q as _largest_tile
+
+
+# Algorithm 1 class label -> device window event, through the shared
+# classification table (olaf_queue.EVENT_OF_CLASS) so the replay and the
+# device kernel can never disagree on what each class means
+_EVENT_STR = {_EV_DROP: "drop", _EV_AGG: "agg", _EV_RESET: "reset"}
 
 
 class _SwitchMirror:
@@ -115,17 +122,18 @@ class _SwitchMirror:
         each classification to its ``(device_slot, event)`` assignment."""
         out: List[Tuple[Optional[int], str]] = []
         for cls, upd in zip(self.queue.classify_batch(upds), upds):
+            event = _EVENT_STR[EVENT_OF_CLASS[cls]]
             if cls == "drop":
-                out.append((None, "drop"))
+                out.append((None, event))
             elif cls == "append":  # fresh append -> allocate a slot
                 slot = self.free_slots.pop()
                 self.slot_of_cluster.setdefault(upd.cluster_id,
                                                 deque()).append(slot)
-                out.append((slot, "reset"))
+                out.append((slot, event))
             else:
                 # combine into the *unlocked* waiting update = newest slot
                 slot = self.slot_of_cluster[upd.cluster_id][-1]
-                out.append((slot, "reset" if cls == "replace" else "agg"))
+                out.append((slot, event))
         return out
 
     def classify(self, upd: Update) -> Tuple[Optional[int], str]:
@@ -742,6 +750,7 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
                         sharded: bool = False,
                         batched: bool = True,
                         flush_cadence: bool = True,
+                        sim_impl: Optional[str] = None,
                         **cfg_kw) -> Tuple[HybridResult, SimCfg]:
     """Hybrid run over any topology: metadata trace from the event-driven
     sim, payload combining + forwarding on device in one fused dispatch per
@@ -765,6 +774,15 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
     ``batched=False`` replays one Python call per queue event — the
     reference path the batched one is property-tested against.
 
+    ``sim_impl`` selects the network-model backend explicitly:
+    ``"event"`` (per-event replay, alias for ``batched=False``),
+    ``"window"`` (windowed batch replay, alias for ``batched=True``), or
+    ``"vectorized"`` — the whole scenario runs as ONE jitted
+    ``lax.scan`` through :mod:`repro.core.vecsim` (payload combining,
+    forwarding, AoM and transmission gating all device-resident; the
+    event heap runs once, metadata-only, to lay down the step grid).
+    ``None`` keeps the legacy ``batched`` selection.
+
     ``payload_rows`` (N, dim) are consumed in worker-generation order (pass
     the same array to a payload-carrying oracle sim to cross-check).
     Alternatively ``payload_source(now, worker_id) -> (row, reward)``
@@ -778,6 +796,13 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
     switch or a deferred-heavy transmission-control run can never overrun
     the row budget).
     """
+    if sim_impl not in (None, "event", "window", "vectorized"):
+        raise ValueError(f"unknown sim_impl {sim_impl!r}; expected "
+                         f"'event', 'window' or 'vectorized'")
+    if sim_impl == "event":
+        batched = False
+    elif sim_impl == "window":
+        batched = True
     if sim_cfg is not None:
         cfg = sim_cfg
     elif topology is not None:
@@ -788,6 +813,7 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
     trace_cfg = dataclasses.replace(
         cfg, on_queue_event=lambda now, sw, kind, upd: events.append(
             (now, sw, kind, upd)))
+    rew_acc: List[Tuple[float, int, float]] = []
     if payload_source is not None:
         assert payload_rows is None, "pass payload_rows or payload_source"
         rows_acc: List[np.ndarray] = []
@@ -795,6 +821,7 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
         def _collect(now, worker_id):
             row, reward = payload_source(now, worker_id)
             rows_acc.append(row)
+            rew_acc.append((now, worker_id, reward))
             return None, reward  # metadata-only sim; rows stay host-side
 
         trace_cfg = dataclasses.replace(trace_cfg, payload_fn=_collect)
@@ -815,6 +842,9 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
             rng = np.random.default_rng(seed + 1)
             payload_rows = rng.normal(
                 size=(n_fresh, dim)).astype(np.float32)
+    if sim_impl == "vectorized":
+        return _run_hybrid_vectorized(cfg, events, dim, payload_rows,
+                                      rew_acc), cfg
     plane = HybridMultiSwitchDataPlane(
         cfg.switches, {w.ingress_switch for w in cfg.workers}, dim,
         payload_rows, interpret=interpret, sharded=sharded,
@@ -825,3 +855,70 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
         for now, sw, kind, meta in events:
             plane.feed(now, sw, kind, meta)
     return plane.result(), cfg
+
+
+def _run_hybrid_vectorized(cfg: SimCfg, events, dim: int, payload_rows,
+                           rewards) -> HybridResult:
+    """Consume the metadata trace through the device-resident vectorized
+    model (:mod:`repro.core.vecsim`): one jitted scan replaces the whole
+    per-window replay, so the payload path costs a single staged upload
+    and zero per-window host round-trips. Rows are consumed in global
+    send order — identical to the trace's fresh-enqueue order."""
+    from repro.core import vecsim
+
+    gen_rewards = None
+    if rewards:
+        gen_times, _ = generation_schedule(cfg)
+        widx = {w.worker_id: i for i, w in enumerate(cfg.workers)}
+        g_max = max((len(t) for t in gen_times.values()), default=1)
+        gen_rewards = np.zeros((len(cfg.workers), g_max), np.float32)
+        ptr = {wid: 0 for wid in gen_times}
+        for now, wid, rw in rewards:
+            ts_w = gen_times[wid]
+            k = ptr[wid]
+            while k < len(ts_w) and ts_w[k] < now - 1e-9:
+                k += 1
+            if k >= len(ts_w) or abs(ts_w[k] - now) > 1e-6:
+                raise RuntimeError(
+                    f"reward at t={now} does not align with worker {wid}'s "
+                    f"generation schedule")
+            gen_rewards[widx[wid], k] = rw
+            ptr[wid] = k + 1
+    rows = None
+    if payload_rows is not None and len(payload_rows):
+        rows = np.asarray(payload_rows, np.float32).reshape(-1, dim)
+    vres = vecsim.run_vecsim(
+        cfg, grid=vecsim.grid_from_trace(cfg, events), dim=dim,
+        payload_rows=rows, gen_rewards=gen_rewards)
+    sim = vres.sim
+    delivered = [
+        (float(t), u, jnp.asarray(p))
+        for t, u, p in zip(vres.delivery_times, sim.delivered_updates,
+                           vres.delivered_payloads)]
+    residual_slot_counts = {
+        sw.name: {slot: int(c)
+                  for slot, c in enumerate(vres.final_counts[i]) if int(c)}
+        for i, sw in enumerate(cfg.switches)}
+    return HybridResult(
+        delivered=delivered,
+        launches=1,  # the whole scenario is one fused scan dispatch
+        combined_updates=sum(qs["enqueued"]
+                             for qs in sim.queue_stats.values()),
+        queue_stats=sim.queue_stats,
+        final_counts=vres.final_counts,
+        residual_slot_counts=residual_slot_counts,
+        h2d_transfers=vres.h2d_transfers,
+        forward_launches=0,
+        switch_launches={},
+        forwarded=vres.forwarded,
+        link_dropped=sim.link_dropped,
+        rerouted=sim.reroutes,
+        drops_by_switch=sim.drops_by_switch,
+        ps_dropped=sim.ps_dropped,
+        stale_rejected=sim.stale_rejected,
+        stale_deferred=sim.stale_deferred,
+        worker_crashes=sim.worker_crashes,
+        worker_restarts=sim.worker_restarts,
+        corrupted=sim.corrupted,
+        screened=sim.screened,
+        tainted_delivered=sim.tainted_delivered)

@@ -483,6 +483,91 @@ class SimResult:
         return xs, ys
 
 
+# --------------------------------------------------------------------------
+# Shared per-event semantics (the oracle role). The event-driven simulator
+# below and the vectorized device-resident model (``core/vecsim.py``) both
+# consume these pure helpers, so the two implementations cannot drift on
+# the rules they encode.
+# --------------------------------------------------------------------------
+def next_gen_time(w: WorkerCfg, k: int, now: float, rng,
+                  faults: Optional[FaultSpec]) -> Optional[float]:
+    """The k-th generation time of worker ``w`` (None = chain exhausted):
+    trace lookup, or jittered/slowed interval pacing from ``now`` (the
+    predecessor's pop time; the first interval paces from t=0). ``rng`` is
+    the simulator's shared jitter stream — one ``random()`` draw iff
+    ``gen_jitter > 0``."""
+    if w.n_updates is not None and k >= w.n_updates:
+        return None
+    if w.trace is not None:
+        return w.trace[k] if k < len(w.trace) else None
+    base = w.gen_interval
+    if faults is not None:
+        slow = faults.worker_slowdown(w.worker_id)
+        if slow != 1.0:  # guard: keep unit-slowdown byte-identical
+            base *= slow
+    if w.gen_jitter > 0:
+        base *= 1.0 + w.gen_jitter * (2 * rng.random() - 1)
+    return (now if k else 0.0) + base
+
+
+def generation_schedule(cfg: SimCfg) -> Tuple[Dict[int, List[float]],
+                                              List[Tuple[int, int]]]:
+    """Replay *only* the generation chains of ``cfg``'s event heap.
+
+    Returns ``(times, order)``: per-worker lists of executed generation
+    times (every generation with ``t <= horizon``), and the global
+    execution order as ``(worker_id, k)`` pairs — the heap pop order the
+    event simulator processes them in, which is also the payload-row
+    consumption order of the hybrid consumers.
+
+    Exactness: the simulator's jitter stream (``default_rng(cfg.seed)``)
+    is consumed *only* by :func:`next_gen_time`, in heap pop order of
+    generation events. Removing all foreign events from the heap preserves
+    the relative order of the generation events (their ``eseq``
+    tie-breakers form a monotone subsequence of the original counter), so
+    this replay draws the identical jitter sequence and reproduces the
+    exact times — the precomputed send schedule of the vectorized model.
+    Only valid without worker churn (a crash/restart reorders chain pops);
+    the vectorized model's feature envelope enforces that.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    heap: List[Tuple[float, int, WorkerCfg]] = []
+    eseq = itertools.count()
+    counts: Dict[int, int] = defaultdict(int)
+    times: Dict[int, List[float]] = {w.worker_id: [] for w in cfg.workers}
+    order: List[Tuple[int, int]] = []
+
+    def schedule(w: WorkerCfg, now: float) -> None:
+        t = next_gen_time(w, counts[w.worker_id], now, rng, cfg.faults)
+        if t is None:
+            return
+        # mirror _schedule_generation: never regress virtual time
+        heapq.heappush(heap, (max(t, now), next(eseq), w))
+
+    for w in cfg.workers:
+        schedule(w, 0.0)
+    while heap:
+        t, _, w = heapq.heappop(heap)
+        if t > cfg.horizon:
+            break  # pops are time-ordered: nothing executable remains
+        order.append((w.worker_id, counts[w.worker_id]))
+        times[w.worker_id].append(t)
+        counts[w.worker_id] += 1
+        schedule(w, t)
+    return times, order
+
+
+def link_stream_index(spec, src: str, dst: Optional[str]) -> int:
+    """Stable per-link index for the i.i.d. loss RNG streams: one row per
+    directed (src -> candidate) pair plus one per (src -> PS) egress.
+    Shared by :meth:`NetworkSimulator._link_rng` and the vectorized
+    model's precomputed per-link uniform tables, so both draw the same
+    loss sequence for the same link."""
+    S = spec.num_switches
+    return spec.index[src] * (S + 1) + (spec.index[dst]
+                                        if dst is not None else S)
+
+
 class NetworkSimulator:
     """Event-driven simulator; see module docstring."""
 
@@ -516,8 +601,12 @@ class NetworkSimulator:
         # FaultSpec cannot perturb the fault-free event sequence
         self.faults = cfg.faults
         fseed = (cfg.faults.seed if cfg.faults is not None else 0)
-        self.fault_rng = np.random.default_rng(
-            fseed * 104729 + cfg.seed * 7919 + 11)
+        self._fault_seed_base = fseed * 104729 + cfg.seed * 7919 + 11
+        self.fault_rng = np.random.default_rng(self._fault_seed_base)
+        # per-link i.i.d. loss streams (created lazily, only for links with
+        # a positive drop probability): keyed by link_stream_index so the
+        # vectorized model can precompute the identical uniform tables
+        self._link_rngs: Dict[Tuple[str, Optional[str]], np.random.Generator] = {}
         # worker-side retransmission cache: last sent
         # (gen, reward, payload, uid)
         self._last_sent: Dict[
@@ -682,19 +771,8 @@ class NetworkSimulator:
 
     # -- worker side ---------------------------------------------------------
     def _next_gen_time(self, w: WorkerCfg) -> Optional[float]:
-        k = self._gen_count[w.worker_id]
-        if w.n_updates is not None and k >= w.n_updates:
-            return None
-        if w.trace is not None:
-            return w.trace[k] if k < len(w.trace) else None
-        base = w.gen_interval
-        if self.faults is not None:
-            slow = self.faults.worker_slowdown(w.worker_id)
-            if slow != 1.0:  # guard: keep unit-slowdown byte-identical
-                base *= slow
-        if w.gen_jitter > 0:
-            base *= 1.0 + w.gen_jitter * (2 * self.rng.random() - 1)
-        return (self.now if k else 0.0) + base
+        return next_gen_time(w, self._gen_count[w.worker_id], self.now,
+                             self.rng, self.faults)
 
     def _schedule_generation(self, w: WorkerCfg, first: bool = False) -> None:
         t = self._next_gen_time(w)
@@ -921,17 +999,29 @@ class NetworkSimulator:
         self._at(arrive,
                  lambda u=upd, n=dst_name: self._arrive_at_switch(n, u))
 
+    def _link_rng(self, src: str, dst: Optional[str]) -> np.random.Generator:
+        key = (src, dst)
+        rng = self._link_rngs.get(key)
+        if rng is None:
+            rng = np.random.default_rng(
+                [self._fault_seed_base, link_stream_index(self.spec, src, dst)])
+            self._link_rngs[key] = rng
+        return rng
+
     def _link_faulted(self, src: str, dst: Optional[str]) -> bool:
         """True if the (src → dst) departure is lost: the link is inside
-        an outage window, or the i.i.d. drop probability fires. The RNG is
-        only consulted when a positive drop probability is configured, so
-        fault-free runs stay byte-identical."""
+        an outage window, or the i.i.d. drop probability fires. Each lossy
+        link draws from its own seeded stream (see ``link_stream_index``)
+        — consulted only when a positive drop probability is configured,
+        so fault-free runs stay byte-identical — which is what lets the
+        vectorized model precompute per-link uniform tables that replay
+        the identical loss sequence with zero host round-trips."""
         if self.faults is None:
             return False
         if self.faults.link_down(src, dst, self.now):
             return True
         p = self.faults.drop_prob(src, dst)
-        return p > 0.0 and self.fault_rng.random() < p
+        return p > 0.0 and self._link_rng(src, dst).random() < p
 
     def _record_drop(self, name: str, upd: Update) -> None:
         self.link_dropped += 1

@@ -461,7 +461,8 @@ _EV_RESET = 2  # slot payload restarts from this update (append / replace)
 
 
 def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
-                   reward_threshold, send=None, capacity=None, screen=None):
+                   reward_threshold, send=None, capacity=None, screen=None,
+                   in_counts=None, in_replaceable=None):
     """Scalar half of the burst: Algorithm 1 decisions for U updates.
 
     A ``lax.scan`` over the burst carrying only the ``(Q,)`` metadata columns
@@ -483,22 +484,37 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
     either, but it is counted in ``n_screened`` — and, unlike a deferred
     one, the worker-side txctl machinery treats the missing ACK as a NACK
     and retransmits the clean cached copy.
+
+    ``in_counts`` is an optional (U,) int vector of per-update aggregation
+    weights: an incoming row that is itself the running mean of ``k``
+    worker updates (a multi-hop forward out of an upstream switch)
+    contributes with weight ``k`` to the slot mean and adds ``k`` to the
+    slot's ``agg_count``. The default of all-ones reproduces the
+    single-hop semantics bitwise.
     """
     if send is None:
         send = jnp.ones(clusters.shape, bool)
     if screen is None:
         screen = jnp.zeros(clusters.shape, bool)
+    if in_counts is None:
+        in_counts = jnp.ones(clusters.shape, jnp.int32)
+    if in_replaceable is None:
+        in_replaceable = jnp.ones(clusters.shape, bool)
     Q = state.cluster.shape[0]
-    # logical-slot mask: slots >= capacity never host an append, so one
-    # padded (Qmax,) buffer serves heterogeneous per-switch slot counts
-    valid_slot = jnp.arange(Q) < (Q if capacity is None else capacity)
+    # capacity is a COUNT, not a slot region: one padded (Qmax,) buffer
+    # serves heterogeneous per-switch slot counts, and a caller whose
+    # effective capacity fluctuates (vecsim reserves one unit for the
+    # in-service packet) may leave holes at any index — the full check
+    # must match the count-based `len(queue) >= capacity` of the Python
+    # reference, not "every slot below capacity occupied"
+    cap_count = Q if capacity is None else capacity
     carry = (state.cluster, state.worker, state.seq, state.gen_time,
              state.reward, state.agg_count, state.replaceable, state.next_seq,
              state.n_dropped, state.n_agg, state.n_repl, state.n_screened)
 
     def body(carry, xs):
         cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns = carry
-        c, w, t, r, snd, scr = xs
+        c, w, t, r, snd, scr, icnt, irp = xs
         act = snd & ~scr  # sent AND admitted by the ingress screen
         occupied = cl >= 0
         same_cluster = occupied & (cl == c)
@@ -511,11 +527,11 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
         do_reward_drop = act & hit & ~same_worker_replace & (rdiff < -reward_threshold)
         do_aggregate = act & hit & ~same_worker_replace & ~do_reward_replace & ~do_reward_drop
 
-        full = jnp.all(occupied | ~valid_slot)
+        full = jnp.sum(occupied) >= cap_count
         do_append = act & ~hit & ~full
         do_drop_full = act & ~hit & full
 
-        slot = jnp.where(hit, slot_hit, jnp.argmax(~occupied & valid_slot))
+        slot = jnp.where(hit, slot_hit, jnp.argmax(~occupied))
         write = same_worker_replace | do_reward_replace | do_aggregate | do_append
         onehot = (jnp.arange(cl.shape[0]) == slot) & write
 
@@ -530,8 +546,13 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
             put(sq, jnp.where(hit, sq[slot_hit], nseq)),
             put(gt, jnp.where(do_aggregate, jnp.maximum(t, gt[slot_hit]), t)),
             put(rw, jnp.where(do_aggregate, jnp.maximum(r, rw[slot_hit]), r)),
-            put(cnt, jnp.where(do_aggregate, cnt[slot_hit] + 1, 1)),
-            put(rp, same_worker_replace | do_append),
+            put(cnt, jnp.where(do_aggregate, cnt[slot_hit] + icnt, icnt)),
+            # replaceable after the write: same-worker replace restores True
+            # (still one un-aggregated update); appends inherit the incoming
+            # update's own flag (a multi-hop forward that is already a merge
+            # arrives un-replaceable); aggregation and reward-replace are
+            # combine events and always clear it
+            put(rp, same_worker_replace | (do_append & irp)),
             nseq + do_append.astype(jnp.int32),
             nd + (do_drop_full | do_reward_drop).astype(jnp.int32),
             na + do_aggregate.astype(jnp.int32),
@@ -542,8 +563,65 @@ def _burst_resolve(state: JaxQueueState, clusters, workers, gen_times, rewards,
 
     carry, (slots, events) = jax.lax.scan(
         body, carry, (clusters, workers, gen_times, rewards,
-                      send.astype(bool), screen.astype(bool)))
+                      send.astype(bool), screen.astype(bool),
+                      in_counts.astype(jnp.int32),
+                      in_replaceable.astype(bool)))
     return carry, slots, events
+
+
+def jax_enqueue_burst_ex(state: JaxQueueState, clusters, workers, gen_times,
+                         rewards, payloads, reward_threshold: float = jnp.inf,
+                         send=None, capacity=None, screen=None, in_counts=None,
+                         in_replaceable=None):
+    """:func:`jax_enqueue_burst` plus the per-update ``(slots, events)``
+    assignment from :func:`_burst_resolve` — the raw Algorithm 1 decisions
+    consumers like the vectorized network simulator (``core/vecsim.py``)
+    need to derive append/replace/subsumption accounting without a second
+    rule set (see :func:`classify_slot_events`). Returns
+    ``(new_state, slots, events)``.
+    """
+    Q = state.cluster.shape[0]
+    U = clusters.shape[0]
+    if U == 0:  # empty burst (drain-only cycle): nothing to resolve
+        empty = jnp.zeros((0,), jnp.int32)
+        return state, empty, empty
+    if in_counts is None:
+        in_counts = jnp.ones(clusters.shape, jnp.int32)
+    carry, slots, events = _burst_resolve(
+        state, clusters, workers, gen_times, rewards, reward_threshold, send,
+        capacity, screen, in_counts, in_replaceable)
+    (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns) = carry
+
+    u_idx = jnp.arange(U, dtype=jnp.int32)
+    onehot = slots[:, None] == jnp.arange(Q, dtype=jnp.int32)[None, :]  # (U, Q)
+    is_reset = events == _EV_RESET
+    is_agg = events == _EV_AGG
+    # Last reset per slot: everything written before it was overwritten.
+    last_reset = jnp.max(
+        jnp.where(is_reset[:, None] & onehot, u_idx[:, None], -1), axis=0)  # (Q,)
+    contributes = ((is_agg & (u_idx > last_reset[slots]))
+                   | (is_reset & (u_idx == last_reset[slots])))
+    # Weight every contribution by its own aggregation count, so a forward
+    # that is already the mean of k updates re-enters the slot mean with
+    # weight k (all-ones in_counts degenerates to the 0/1 segment matrix).
+    seg = ((onehot & contributes[:, None]).astype(jnp.float32)
+           * in_counts.astype(jnp.float32)[:, None])  # (U, Q)
+    sums = jnp.einsum("uq,ud->qd", seg,
+                      payloads.astype(jnp.float32))  # the one-hot matmul
+
+    n_contrib = seg.sum(axis=0)  # (Q,)
+    base_n = jnp.where(last_reset < 0, state.agg_count, 0).astype(jnp.float32)
+    touched = (last_reset >= 0) | (n_contrib > 0)
+    denom = jnp.maximum(base_n + n_contrib, 1.0)
+    combined = ((state.payload.astype(jnp.float32) * base_n[:, None] + sums)
+                / denom[:, None])
+    new_payload = jnp.where(touched[:, None], combined.astype(state.payload.dtype),
+                            state.payload)
+    new_state = JaxQueueState(
+        cluster=cl, worker=wk, seq=sq, gen_time=gt, reward=rw, agg_count=cnt,
+        replaceable=rp, payload=new_payload, next_seq=nseq,
+        n_dropped=nd, n_agg=na, n_repl=nr, n_screened=ns)
+    return new_state, slots, events
 
 
 def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
@@ -563,40 +641,44 @@ def jax_enqueue_burst(state: JaxQueueState, clusters, workers, gen_times,
     segment-sum (an MXU matmul on TPU) plus one ``(Q, D)`` blend, instead of
     U sequential ``(Q, D)`` re-materializations.
     """
-    Q = state.cluster.shape[0]
-    U = clusters.shape[0]
-    if U == 0:  # empty burst (drain-only cycle): nothing to resolve
-        return state
-    carry, slots, events = _burst_resolve(
-        state, clusters, workers, gen_times, rewards, reward_threshold, send,
-        capacity, screen)
-    (cl, wk, sq, gt, rw, cnt, rp, nseq, nd, na, nr, ns) = carry
+    state, _, _ = jax_enqueue_burst_ex(
+        state, clusters, workers, gen_times, rewards, payloads,
+        reward_threshold, send, capacity, screen)
+    return state
 
-    u_idx = jnp.arange(U, dtype=jnp.int32)
-    onehot = slots[:, None] == jnp.arange(Q, dtype=jnp.int32)[None, :]  # (U, Q)
-    is_reset = events == _EV_RESET
-    is_agg = events == _EV_AGG
-    # Last reset per slot: everything written before it was overwritten.
-    last_reset = jnp.max(
-        jnp.where(is_reset[:, None] & onehot, u_idx[:, None], -1), axis=0)  # (Q,)
-    contributes = ((is_agg & (u_idx > last_reset[slots]))
-                   | (is_reset & (u_idx == last_reset[slots])))
-    seg = (onehot & contributes[:, None]).astype(jnp.float32)  # (U, Q)
-    sums = jnp.einsum("uq,ud->qd", seg,
-                      payloads.astype(jnp.float32))  # the one-hot matmul
 
-    n_contrib = seg.sum(axis=0)  # (Q,)
-    base_n = jnp.where(last_reset < 0, state.agg_count, 0).astype(jnp.float32)
-    touched = (last_reset >= 0) | (n_contrib > 0)
-    denom = jnp.maximum(base_n + n_contrib, 1.0)
-    combined = ((state.payload.astype(jnp.float32) * base_n[:, None] + sums)
-                / denom[:, None])
-    new_payload = jnp.where(touched[:, None], combined.astype(state.payload.dtype),
-                            state.payload)
-    return JaxQueueState(
-        cluster=cl, worker=wk, seq=sq, gen_time=gt, reward=rw, agg_count=cnt,
-        replaceable=rp, payload=new_payload, next_seq=nseq,
-        n_dropped=nd, n_agg=na, n_repl=nr, n_screened=ns)
+#: Algorithm 1 classification label -> queue event, one place. The hybrid
+#: window replay maps ``PyOlafQueue.classify_batch`` labels onto device
+#: events through this table; :func:`classify_slot_events` inverts it for
+#: consumers that start from the device-side ``(slots, events)`` stream.
+EVENT_OF_CLASS = {"append": _EV_RESET, "replace": _EV_RESET,
+                  "agg": _EV_AGG, "drop": _EV_DROP}
+
+
+def classify_slot_events(slots, events, pre_occupied) -> List[str]:
+    """Host-side inverse of the Algorithm 1 event stream: recover the
+    ``classify_batch`` labels (``append`` / ``replace`` / ``agg`` / ``drop``)
+    from the per-update ``(slot, event)`` assignment of
+    :func:`_burst_resolve` / :func:`jax_enqueue_burst_ex`.
+
+    ``pre_occupied`` is the (Q,) bool occupancy *before* the burst; the walk
+    replays occupancy forward so a RESET into a vacant slot is an append and
+    a RESET into an occupied slot is a replace — the single rule shared by
+    ``PyOlafQueue.classify_batch`` (stats deltas), ``_SwitchMirror``
+    (hybrid replay) and the vectorized simulator's subsumption scan.
+    """
+    occ = [bool(v) for v in np.asarray(pre_occupied)]
+    labels: List[str] = []
+    for slot, event in zip(np.asarray(slots), np.asarray(events)):
+        slot, event = int(slot), int(event)
+        if event == _EV_DROP:
+            labels.append("drop")
+        elif event == _EV_AGG:
+            labels.append("agg")
+        else:  # _EV_RESET
+            labels.append("replace" if occ[slot] else "append")
+            occ[slot] = True
+    return labels
 
 
 def expire_inactive_drains(out: Dict[str, jnp.ndarray], active_workers

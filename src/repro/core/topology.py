@@ -234,6 +234,49 @@ class TopologySpec:
                 f"some worker's path to a PS")
 
     # -- derived views ------------------------------------------------------
+    def scan_arrays(self) -> Dict[str, np.ndarray]:
+        """Compile the spec into the dense per-link tensors the vectorized
+        simulator's ``lax.scan`` consumes (``core/vecsim.py``):
+
+          * ``cand_matrix``  — ``(S, Cmax)`` int32 candidate next hops,
+            primary first, right-padded with −1 (a pure-egress switch has an
+            all-−1 row, mirroring ``next_hop == -1``);
+          * ``cand_count``   — ``(S,)`` int32 live candidate count per row;
+          * ``next_hop`` / ``queue_slots`` / ``rate_bps`` / ``prop_delay``
+            — the existing per-switch vectors, re-exported so one call
+            stages every static array; ``queue_slots`` is what the scan
+            pads the shared ``(S, Qmax)`` queue buffer against;
+          * ``is_egress``    — ``(S,)`` bool, True where ``next_hop == -1``
+            (the PS egress rows of a multi-PS fabric);
+          * ``is_fifo``      — ``(S,)`` bool per-switch queue discipline;
+          * ``reward_threshold`` — ``(S,)`` float64, ``+inf`` where the
+            switch declares no reward gate (Algorithm 1 then never
+            reward-replaces/drops, matching ``reward_threshold=None``).
+
+        ``Cmax`` is at least 1 so single-path and single-switch specs still
+        produce a well-formed (non-empty) candidate axis.
+        """
+        S = self.num_switches
+        cmax = max([len(c) for c in self.candidates] + [1])
+        cand_matrix = np.full((S, cmax), -1, np.int32)
+        for u, c in enumerate(self.candidates):
+            cand_matrix[u, :len(c)] = c
+        return dict(
+            cand_matrix=cand_matrix,
+            cand_count=np.asarray([len(c) for c in self.candidates],
+                                  np.int32),
+            next_hop=self.next_hop.copy(),
+            queue_slots=self.queue_slots.copy(),
+            rate_bps=self.rate_bps.copy(),
+            prop_delay=self.prop_delay.copy(),
+            is_egress=self.next_hop < 0,
+            is_fifo=np.asarray([s.queue == "fifo" for s in self.switches],
+                               bool),
+            reward_threshold=np.asarray(
+                [np.inf if s.reward_threshold is None else s.reward_threshold
+                 for s in self.switches], np.float64),
+        )
+
     def flush_set(self, name: str) -> Tuple[str, ...]:
         """The per-switch flush cadence: the departing switch plus its
         upstream frontier, in topological (upstream-first) order."""

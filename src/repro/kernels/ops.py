@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.olaf_queue import (JaxQueueState, expire_inactive_drains,
-                                   jax_olaf_step)
+                                   jax_enqueue_burst_ex, jax_olaf_step)
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.olaf_combine import olaf_combine_pallas, olaf_enqueue_pallas
@@ -273,6 +273,41 @@ def olaf_step_multi(states: JaxQueueState, clusters, workers, gen_times,
         send, capacity, states.n_screened, screen, tile_q=tile_q,
         tile_d=tile_d, interpret=interpret)
     return _olaf_step_unpack(*outs)
+
+
+def olaf_burst_multi(states: JaxQueueState, clusters, workers, gen_times,
+                     rewards, payloads, reward_threshold=jnp.inf, send=None,
+                     capacity=None, in_counts=None, in_replaceable=None):
+    """Multi-queue enqueue-only burst with per-slot event reporting.
+
+    Every operand carries a leading S (switch) axis: ``states`` is a
+    JaxQueueState of (S, Q)/(S, Q, D)/(S,) arrays; burst operands are
+    (S, U)/(S, U, D); ``reward_threshold``/``capacity`` are (S,).
+    Returns ``(new_states, slots (S, U), events (S, U))`` with the
+    Algorithm 1 outcome codes of :func:`jax_enqueue_burst_ex` — the entry
+    the vectorized network simulator (:mod:`repro.core.vecsim`) routes its
+    per-step arrival bursts through. Unlike :func:`olaf_step_multi` this
+    does not drain: dequeue is driven separately by link service.
+    """
+    S = clusters.shape[0]
+    thr = jnp.broadcast_to(
+        jnp.asarray(reward_threshold, jnp.float32), (S,))
+    if send is None:
+        send = jnp.ones(clusters.shape, bool)
+    if capacity is None:
+        capacity = jnp.full((S,), states.cluster.shape[1], jnp.int32)
+    else:
+        capacity = jnp.broadcast_to(jnp.asarray(capacity, jnp.int32), (S,))
+    if in_counts is None:
+        in_counts = jnp.ones(clusters.shape, jnp.int32)
+    if in_replaceable is None:
+        in_replaceable = jnp.ones(clusters.shape, bool)
+    return jax.vmap(
+        lambda st, c, w, t, r, p, th, sn, cp, ic, ir: jax_enqueue_burst_ex(
+            st, c, w, t, r, p, reward_threshold=th, send=sn, capacity=cp,
+            in_counts=ic, in_replaceable=ir)
+    )(states, clusters, workers, gen_times, rewards, payloads,
+      thr, send, capacity, in_counts, in_replaceable)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -12,6 +12,8 @@ Examples:
       --reduced --ckpt /tmp/ckpt
   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
       --mode olaf-async --workers 4 --steps 30
+  PYTHONPATH=src python -m repro.launch.train --mode scenario \
+      --topology fattree --fattree-k 2 --sim-impl vectorized
 """
 from __future__ import annotations
 
@@ -379,12 +381,64 @@ def run_olaf_async(cfg, args) -> float:
     return losses[-1] if losses else float("nan")
 
 
+def run_scenario(args):
+    """Replay a network topology scenario through the multi-switch hybrid
+    data plane with the selected simulator backend (``--sim-impl``).
+
+    ``event`` replays the metadata trace one event at a time, ``window``
+    batches it per transmission window, and ``vectorized`` retires the
+    host loop entirely: the whole scenario advances as one jitted
+    ``lax.scan`` on device (``repro.core.vecsim``) with a single staged
+    payload upload.
+    """
+    from repro.core.hybrid import run_hybrid_multihop
+    from repro.core.topology import fattree_cfg, multirack_cfg
+
+    if args.topology == "fattree":
+        sim_cfg = fattree_cfg(args.fattree_k, seed=args.seed)
+    elif args.topology == "multirack":
+        sim_cfg = multirack_cfg(seed=args.seed)
+    else:
+        sim_cfg = None  # §8.3 SW1/SW2/SW3 multihop default
+    t0 = time.time()
+    hyb, cfg = run_hybrid_multihop(args.sim_dim, seed=args.seed,
+                                   sim_cfg=sim_cfg,
+                                   sim_impl=args.sim_impl)
+    wall = time.time() - t0
+    enq = sum(qs["enqueued"] for qs in hyb.queue_stats.values())
+    agg = sum(qs["aggregations"] for qs in hyb.queue_stats.values())
+    drp = sum(qs["dropped"] for qs in hyb.queue_stats.values())
+    impl = args.sim_impl or "window"
+    print(f"scenario {args.topology} [{impl}]: "
+          f"{len(hyb.delivered)} delivered, {hyb.forwarded} forwarded, "
+          f"{enq} enqueued / {agg} aggregated / {drp} dropped; "
+          f"{hyb.launches} combine launches, "
+          f"{hyb.h2d_transfers} h2d transfers; {wall:.2f}s wall")
+    return hyb
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="model config name (required outside --mode "
+                         "scenario)")
     ap.add_argument("--reduced", action="store_true",
                     help="tiny same-family config (CPU-runnable)")
-    ap.add_argument("--mode", default="sync", choices=["sync", "olaf-async"])
+    ap.add_argument("--mode", default="sync",
+                    choices=["sync", "olaf-async", "scenario"])
+    ap.add_argument("--sim-impl", default=None,
+                    choices=["event", "window", "vectorized"],
+                    help="network simulator backend for --mode scenario: "
+                         "per-event replay, per-window batched replay, or "
+                         "the device-resident vectorized scan "
+                         "(repro.core.vecsim)")
+    ap.add_argument("--topology", default="multihop",
+                    choices=["multihop", "fattree", "multirack"],
+                    help="scenario topology preset (--mode scenario)")
+    ap.add_argument("--fattree-k", type=int, default=2,
+                    help="fat-tree arity for --topology fattree")
+    ap.add_argument("--sim-dim", type=int, default=64,
+                    help="payload row width for --mode scenario")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -438,6 +492,11 @@ def main():
                          "of the plain weighted mean")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+    if args.mode == "scenario":
+        run_scenario(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --mode scenario")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -298,7 +298,8 @@ def run_hybrid_ppo(*, env: str = "cartpole", ppo_cfg: Optional[PPOConfig] = None
                    local_lr: float = 5e-3, seed: int = 0,
                    interpret: bool = True, sharded: bool = True,
                    batched: bool = True, topology=None,
-                   flush_cadence: bool = True, **multihop_kw):
+                   flush_cadence: bool = True,
+                   sim_impl: Optional[str] = None, **multihop_kw):
     """Multi-switch hybrid run fed by **real PPO gradients** end to end.
 
     Every generated update's payload is a real flattened PPO gradient (and
@@ -316,6 +317,11 @@ def run_hybrid_ppo(*, env: str = "cartpole", ppo_cfg: Optional[PPOConfig] = None
     TopologySpec`` (worker clusters spread over its source switches) or a
     prebuilt ``SimCfg`` preset; the default is the §8.3 SW1/SW2/SW3
     fan-in via ``multihop_cfg(**multihop_kw)``.
+
+    ``sim_impl`` selects the trace consumer: ``"event"`` (per-event
+    replay), ``"window"`` (batched windows, the default) or
+    ``"vectorized"`` — the device-resident ``repro.core.vecsim`` scan
+    that replays the whole scenario in one fused dispatch.
 
     Returns ``(HybridResult, ParameterServer, SimCfg)``.
     """
@@ -354,7 +360,8 @@ def run_hybrid_ppo(*, env: str = "cartpole", ppo_cfg: Optional[PPOConfig] = None
                                    payload_source=payload_source,
                                    sim_cfg=cfg, sharded=sharded,
                                    batched=batched,
-                                   flush_cadence=flush_cadence)
+                                   flush_cadence=flush_cadence,
+                                   sim_impl=sim_impl)
     ps = ParameterServer(np.asarray(flat0), ps_cfg or PSConfig())
     for t, upd, row in hyb.delivered:  # deliveries -> reward-gated PS apply
         ps.on_updates(t, np.asarray(row, np.float32)[None],
