@@ -64,7 +64,17 @@ SPEEDUP_FLOORS = {
     # replay vs the one-dispatch vectorized scan on the same congested
     # trace — structural: the scan stages its arrays once, so the ratio
     # only regresses if a per-window host round-trip sneaks back in.
-    "vecsim": {"vecsim_h2d": 5.0},
+    # ``vecsim_scale`` is the fat-tree k=8 (80-switch, ~1k-worker) scale
+    # row: sharded 8-device boundaries/s over single-device, measured in
+    # the same child process — the ratio reflects the per-shard transit
+    # rings shrinking the arrival-sort axis, not the machine, so the 2x
+    # scale-out acceptance floor gates as-is (recorded 2.4x).
+    # ``vecsim_scale_base`` guards the single-device k=8 rate itself
+    # against a conservatively recorded baseline (K8_BASE_RATE in
+    # bench_vecsim.py) so the sharded ratio can't stay green by the
+    # baseline regressing.
+    "vecsim": {"vecsim_h2d": 5.0, "vecsim_scale": 2.0,
+               "vecsim_scale_base": 1.0},
     # ``failure_aom_advantage`` is FIFO AoM / OLAF AoM on the SAME faulty
     # fat-tree run (mid-run spine outage + lossy edges) — structural, so
     # any inversion is a real fault-tolerance regression (recorded ~6.8x).

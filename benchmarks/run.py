@@ -34,6 +34,8 @@ def main() -> None:
     modules = [
         ("queue", bench_queue), ("multihop", bench_multihop),
         ("train", bench_train), ("step", bench_step),
+        # vecsim also carries the multi-device vecsim_scale rows (fat-tree
+        # k=4/k=8 sharded over 8 forced host devices in a child process)
         ("vecsim", bench_vecsim),
         ("training", bench_training),
         ("verifier", bench_verifier), ("kernels", bench_kernels),

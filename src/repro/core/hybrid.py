@@ -751,6 +751,8 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
                         batched: bool = True,
                         flush_cadence: bool = True,
                         sim_impl: Optional[str] = None,
+                        sim_dt=None,  # float | "auto"; vectorized only
+                        sim_mesh=None,  # device mesh; vectorized only
                         **cfg_kw) -> Tuple[HybridResult, SimCfg]:
     """Hybrid run over any topology: metadata trace from the event-driven
     sim, payload combining + forwarding on device in one fused dispatch per
@@ -783,6 +785,16 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
     event heap runs once, metadata-only, to lay down the step grid).
     ``None`` keeps the legacy ``batched`` selection.
 
+    ``sim_dt`` (vectorized only) replaces the trace-derived exact grid
+    with a uniform one: a float is the step directly
+    (``allow_coarse``, so AoM becomes approximate), the string
+    ``"auto"`` picks the largest step whose per-cluster AoM error on a
+    short prefix stays within :func:`repro.core.vecsim.auto_dt`'s
+    default tolerance. With ``sim_dt`` set and no ``payload_source``
+    the oracle event heap is skipped entirely — the scenario never
+    runs on the host. ``sim_mesh`` (vectorized only) shards the scan
+    across devices; see :func:`repro.core.vecsim.run_vecsim`.
+
     ``payload_rows`` (N, dim) are consumed in worker-generation order (pass
     the same array to a payload-carrying oracle sim to cross-check).
     Alternatively ``payload_source(now, worker_id) -> (row, reward)``
@@ -799,6 +811,9 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
     if sim_impl not in (None, "event", "window", "vectorized"):
         raise ValueError(f"unknown sim_impl {sim_impl!r}; expected "
                          f"'event', 'window' or 'vectorized'")
+    if sim_impl != "vectorized" and (sim_dt is not None
+                                     or sim_mesh is not None):
+        raise ValueError("sim_dt/sim_mesh require sim_impl='vectorized'")
     if sim_impl == "event":
         batched = False
     elif sim_impl == "window":
@@ -809,6 +824,21 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
         cfg = resolve_sim_cfg(topology, seed=seed, **cfg_kw)
     else:
         cfg = multihop_cfg("olaf", seed=seed, **cfg_kw)
+    if (sim_impl == "vectorized" and sim_dt is not None
+            and payload_source is None):
+        # Coarse-grid fast path: the uniform grid needs no oracle trace,
+        # so the host event heap never runs — rows are sized by the
+        # generation schedule (an upper bound on fresh sends; unused
+        # tail rows are never uploaded).
+        if payload_rows is None:
+            gen_times, _ = generation_schedule(cfg)
+            n_gen = sum(len(t) for t in gen_times.values())
+            rng = np.random.default_rng(seed + 1)
+            payload_rows = rng.normal(
+                size=(max(n_gen, 1), dim)).astype(np.float32)
+        return _run_hybrid_vectorized(
+            cfg, None, dim, payload_rows, [], sim_dt=sim_dt,
+            sim_mesh=sim_mesh), cfg
     events: List[Tuple[float, str, str, Optional[Update]]] = []
     trace_cfg = dataclasses.replace(
         cfg, on_queue_event=lambda now, sw, kind, upd: events.append(
@@ -844,7 +874,8 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
                 size=(n_fresh, dim)).astype(np.float32)
     if sim_impl == "vectorized":
         return _run_hybrid_vectorized(cfg, events, dim, payload_rows,
-                                      rew_acc), cfg
+                                      rew_acc, sim_dt=sim_dt,
+                                      sim_mesh=sim_mesh), cfg
     plane = HybridMultiSwitchDataPlane(
         cfg.switches, {w.ingress_switch for w in cfg.workers}, dim,
         payload_rows, interpret=interpret, sharded=sharded,
@@ -858,7 +889,8 @@ def run_hybrid_multihop(dim: int = 256, *, seed: int = 0,
 
 
 def _run_hybrid_vectorized(cfg: SimCfg, events, dim: int, payload_rows,
-                           rewards) -> HybridResult:
+                           rewards, sim_dt=None,
+                           sim_mesh=None) -> HybridResult:
     """Consume the metadata trace through the device-resident vectorized
     model (:mod:`repro.core.vecsim`): one jitted scan replaces the whole
     per-window replay, so the payload path costs a single staged upload
@@ -887,9 +919,15 @@ def _run_hybrid_vectorized(cfg: SimCfg, events, dim: int, payload_rows,
     rows = None
     if payload_rows is not None and len(payload_rows):
         rows = np.asarray(payload_rows, np.float32).reshape(-1, dim)
+    if sim_dt is None:
+        grid_kw = dict(grid=vecsim.grid_from_trace(cfg, events))
+    else:
+        dt = (vecsim.auto_dt(cfg, dim=dim) if sim_dt == "auto"
+              else float(sim_dt))
+        grid_kw = dict(dt=dt, allow_coarse=True)
     vres = vecsim.run_vecsim(
-        cfg, grid=vecsim.grid_from_trace(cfg, events), dim=dim,
-        payload_rows=rows, gen_rewards=gen_rewards)
+        cfg, dim=dim, payload_rows=rows, gen_rewards=gen_rewards,
+        mesh=sim_mesh, **grid_kw)
     sim = vres.sim
     delivered = [
         (float(t), u, jnp.asarray(p))

@@ -277,6 +277,17 @@ class TopologySpec:
                  for s in self.switches], np.float64),
         )
 
+    def wire_packets(self, size_bits: int) -> np.ndarray:
+        """Per-switch bound on packets concurrently on the uplink wire:
+        serialization spaces departures at least one service time apart,
+        so at most ``prop_delay * rate / size`` packets (plus slack for
+        the boundary cases) are in flight per uplink. The vectorized
+        simulator sizes its transit/PS rings from the sum of these — and
+        its sharded runner sizes each shard's local ring from the subset
+        of sources that can reach the shard."""
+        size = max(int(size_bits), 1)
+        return (self.prop_delay * self.rate_bps / size).astype(np.int64) + 3
+
     def flush_set(self, name: str) -> Tuple[str, ...]:
         """The per-switch flush cadence: the departing switch plus its
         upstream frontier, in topological (upstream-first) order."""

@@ -277,6 +277,31 @@ def switch_mesh(n_switches) -> Mesh:
     return Mesh(np.asarray(devs[:n]).reshape(n), ("switch",))
 
 
+def _pow2_at_most(n: int) -> int:
+    return 1 << max(int(n), 1).bit_length() - 1
+
+
+def vecsim_mesh(n_switches=None, *, n_clusters: Optional[int] = None,
+                worker_shards: int = 1) -> Mesh:
+    """2-D ``("switch", "worker")`` mesh for the sharded vectorized
+    simulator (``repro.core.vecsim.run_vecsim(..., mesh=...)``): per-switch
+    scan state partitions over ``"switch"``, worker generation / txctl /
+    AoM state over ``"worker"``. Shard counts are powers of two, which
+    always divide vecsim's power-of-two padded axes: the worker axis gets
+    at most ``worker_shards`` devices (capped by ``n_clusters`` so the
+    AoM rows still split), the switch axis the largest power of two that
+    fits the remaining devices and the switch count. Accepts a count or a
+    ``TopologySpec`` for ``n_switches``."""
+    n_switches = int(getattr(n_switches, "num_switches", n_switches or 1))
+    devs = jax.devices()
+    nw = _pow2_at_most(min(worker_shards, len(devs)))
+    if n_clusters is not None:
+        nw = min(nw, _pow2_at_most(n_clusters))
+    ns = _pow2_at_most(min(n_switches, len(devs) // nw))
+    return Mesh(np.asarray(devs[:ns * nw]).reshape(ns, nw),
+                ("switch", "worker"))
+
+
 def _shard_switch_axis(fn, mesh: Mesh, n_in: int, n_out: int):
     """shard_map ``fn`` (every operand/result leading-S) over ``"switch"``."""
     from jax.experimental.shard_map import shard_map

@@ -395,15 +395,26 @@ def run_scenario(args):
     from repro.core.topology import fattree_cfg, multirack_cfg
 
     if args.topology == "fattree":
-        sim_cfg = fattree_cfg(args.fattree_k, seed=args.seed)
+        sim_cfg = fattree_cfg(args.fattree_k, seed=args.seed,
+                              spec_kw=dict(spines=args.fattree_spines))
     elif args.topology == "multirack":
         sim_cfg = multirack_cfg(seed=args.seed)
     else:
         sim_cfg = None  # §8.3 SW1/SW2/SW3 multihop default
+    sim_dt = args.sim_dt
+    if sim_dt not in (None, "auto"):
+        sim_dt = float(sim_dt)
+    sim_mesh = None
+    if args.sim_shards > 1 or args.sim_worker_shards > 1:
+        from repro.distributed.sharding import vecsim_mesh
+        n_sw = len(sim_cfg.switches) if sim_cfg is not None else 3
+        sim_mesh = vecsim_mesh(min(n_sw, args.sim_shards),
+                               worker_shards=args.sim_worker_shards)
     t0 = time.time()
     hyb, cfg = run_hybrid_multihop(args.sim_dim, seed=args.seed,
                                    sim_cfg=sim_cfg,
-                                   sim_impl=args.sim_impl)
+                                   sim_impl=args.sim_impl,
+                                   sim_dt=sim_dt, sim_mesh=sim_mesh)
     wall = time.time() - t0
     enq = sum(qs["enqueued"] for qs in hyb.queue_stats.values())
     agg = sum(qs["aggregations"] for qs in hyb.queue_stats.values())
@@ -437,6 +448,21 @@ def main():
                     help="scenario topology preset (--mode scenario)")
     ap.add_argument("--fattree-k", type=int, default=2,
                     help="fat-tree arity for --topology fattree")
+    ap.add_argument("--fattree-spines", type=int, default=1,
+                    help="core switches for --topology fattree "
+                         "(k=8 --fattree-spines 8 is the 80-switch pod)")
+    ap.add_argument("--sim-dt", default=None,
+                    help="uniform step for --sim-impl vectorized: a float "
+                         "or 'auto' (largest dt within the AoM tolerance, "
+                         "bisected against the exact grid on a prefix); "
+                         "skips the host oracle trace entirely")
+    ap.add_argument("--sim-shards", type=int, default=1,
+                    help="shard the vectorized scan's switch axis over "
+                         "this many devices (repro.distributed.sharding"
+                         ".vecsim_mesh)")
+    ap.add_argument("--sim-worker-shards", type=int, default=1,
+                    help="shard the worker/cluster axis over this many "
+                         "devices (multiplies --sim-shards)")
     ap.add_argument("--sim-dim", type=int, default=64,
                     help="payload row width for --mode scenario")
     ap.add_argument("--steps", type=int, default=50)

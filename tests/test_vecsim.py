@@ -201,8 +201,14 @@ def test_uniform_grid_dt_assert():
     cfg = multihop_cfg("olaf", seed=0)
     min_service = min(w.size_bits for w in cfg.workers) / max(
         s.uplink.capacity_bps for s in cfg.switches)
-    with pytest.raises(ValueError, match="allow_coarse"):
+    with pytest.raises(ValueError, match="allow_coarse") as exc:
         vecsim.uniform_grid(cfg, 4 * min_service)
+    # the error must name the offending link and its service time so the
+    # caller can see *which* switch sets the exact-regime bound
+    msg = str(exc.value)
+    fastest = max(cfg.switches, key=lambda s: s.uplink.capacity_bps)
+    assert f"({fastest.name} ->" in msg
+    assert f"{min_service:g}s" in msg
     grid = vecsim.uniform_grid(cfg, 4 * min_service, allow_coarse=True)
     assert grid[-1] >= cfg.horizon
     fine = vecsim.uniform_grid(cfg, min_service / 2)
@@ -299,3 +305,87 @@ def test_run_vecsim_auto_grid():
     ref = NetworkSimulator(cfg).run()
     assert len(res.sim.delivered_updates) == len(ref.delivered_updates)
     assert res.sim.queue_stats == ref.queue_stats
+
+
+# ---------------------------------------------------------------------------
+# vectorized ring insertion, donation, auto-dt (scale-out satellites)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("trial", range(4))
+def test_ring_insert_vec_matches_sequential(trial):
+    """The one-shot vectorized first-free insert must land every masked
+    row in exactly the slot the sequential scan would pick (no frees
+    happen intra-batch, so the two are provably identical)."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(50 + trial)
+    R, N = 16, 12
+    t = np.full(R, np.inf, np.float32)
+    occupied = rng.random(R) < 0.5
+    t[occupied] = rng.random(occupied.sum()).astype(np.float32)
+    ring_a = {"time": jnp.asarray(t),
+              "val": jnp.asarray(rng.integers(0, 99, R), jnp.int32)}
+    ring_b = {k: v for k, v in ring_a.items()}
+    mask = jnp.asarray(rng.random(N) < 0.6)
+    rows = {"time": jnp.asarray(rng.random(N), jnp.float32),
+            "val": jnp.asarray(rng.integers(100, 199, N), jnp.int32)}
+    ovf0 = jnp.asarray(False)
+    ra, oa = vecsim._ring_insert(ring_a, ovf0, mask, rows)
+    rb, ob, slot = vecsim._ring_insert_vec(ring_b, ovf0, mask, rows)
+    np.testing.assert_array_equal(np.asarray(ra["time"]),
+                                  np.asarray(rb["time"]))
+    np.testing.assert_array_equal(np.asarray(ra["val"]),
+                                  np.asarray(rb["val"]))
+    assert bool(oa) == bool(ob)
+    # returned landing slots point at the inserted rows
+    for i in np.nonzero(np.asarray(mask))[0]:
+        s = int(np.asarray(slot)[i])
+        if s < R:
+            assert int(np.asarray(rb["val"])[s]) >= 100
+
+
+def test_scan_carry_is_donated():
+    """The scan carry is donated into the jitted runner: after the call
+    every input carry buffer must be consumed in place (a spurious copy
+    would leave it alive and double peak memory)."""
+    import warnings
+    import jax
+
+    import jax.numpy as jnp
+
+    cfg = _dyadic_fattree_cfg()
+    comp = vecsim.compile_scenario(cfg, dim=2)
+    runner = vecsim._make_runner(comp.static)
+    carry0 = vecsim._init_carry(comp.static)
+    grid, _ = vecsim.oracle_event_times(cfg)
+    ts = jnp.asarray(np.asarray(grid, np.float32))
+    arrs = {k: jnp.asarray(v) for k, v in comp.arrays.items()}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any donation fallback warns
+        out = runner(carry0, arrs, ts)
+    for leaf in jax.tree_util.tree_leaves(carry0):
+        assert leaf.is_deleted()
+    # and the compiled program reports a real cost model (no silent
+    # interpret fallback)
+    cost = runner.lower(
+        vecsim._init_carry(comp.static), arrs, ts).compile() \
+        .cost_analysis()
+    flops = cost[0]["flops"] if isinstance(cost, (list, tuple)) else \
+        cost["flops"]
+    assert np.isfinite(flops) and flops > 0
+    del out
+
+
+@pytest.mark.slow
+def test_auto_dt_monotone_and_runs():
+    """auto_dt returns a dt no finer than the exact-regime bound, a loose
+    tolerance admits a coarser grid than a tight one, and the chosen dt
+    actually runs under allow_coarse."""
+    cfg = _dyadic_fattree_cfg()
+    min_size = min(w.size_bits for w in cfg.workers)
+    max_rate = max(s.uplink.capacity_bps for s in cfg.switches)
+    lo = min_size / max_rate
+    d_tight = vecsim.auto_dt(cfg, tol=1e-3, max_iters=3)
+    d_loose = vecsim.auto_dt(cfg, tol=0.5, max_iters=3)
+    assert d_loose >= d_tight >= lo
+    res = vecsim.run_vecsim(cfg, dt=d_loose, allow_coarse=True)
+    assert res.sim.received_at_ps > 0
